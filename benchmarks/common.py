@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: timing, CSV emission, result paths."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "benchmarks")
+
+
+def ensure_results_dir() -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return RESULTS_DIR
+
+
+def write_csv(name: str, header: list[str], rows: list[tuple]) -> str:
+    path = os.path.join(ensure_results_dir(), name)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time per call in microseconds (blocks on jax outputs)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The run.py contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{us_per_call:.1f},{derived}")

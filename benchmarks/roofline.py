@@ -1,0 +1,79 @@
+"""Roofline table (deliverable g): aggregate results/dryrun/*.json.
+
+Reads every dry-run record produced by ``python -m repro.launch.dryrun``,
+prints the per-(arch × shape) three-term roofline for the single-pod mesh
+(and whatever multi-pod records exist), marks the dominant term, and emits
+the markdown table EXPERIMENTS.md §Roofline embeds.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks import common
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok" and rec["mesh"] == \
+                ("16x16" if mesh == "single" else "2x16x16"):
+            recs.append(rec)
+    return recs
+
+
+def markdown_table(recs: list[dict]) -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | useful FLOPs | peak HBM/chip (GB) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        rl = r["roofline"]
+        peak = r["memory"]["peak_bytes"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s'] * 1e3:.1f} | "
+            f"{rl['memory_s'] * 1e3:.1f} | {rl['collective_s'] * 1e3:.1f} | "
+            f"**{rl['dominant']}** | {rl['useful_ratio']:.2f} | "
+            f"{peak:.1f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    t0 = time.perf_counter()
+    recs = load_records("single")
+    n_multi = len(load_records("multi"))
+    rows = []
+    for r in recs:
+        rl = r["roofline"]
+        rows.append((r["arch"], r["shape"], rl["compute_s"], rl["memory_s"],
+                     rl["collective_s"], rl["dominant"],
+                     round(rl["useful_ratio"], 3),
+                     r["memory"]["peak_bytes"]))
+    common.write_csv("roofline.csv",
+                     ["arch", "shape", "compute_s", "memory_s",
+                      "collective_s", "dominant", "useful_ratio",
+                      "peak_bytes"], rows)
+    md = markdown_table(recs)
+    with open(os.path.join(common.ensure_results_dir(),
+                           "roofline_table.md"), "w") as f:
+        f.write(md + "\n")
+    print(md)
+    dominants = [r["roofline"]["dominant"] for r in recs]
+    from collections import Counter
+    common.emit(
+        "roofline", (time.perf_counter() - t0) * 1e6,
+        f"single={len(recs)}/40 multi={n_multi}/40 "
+        f"dominant={dict(Counter(dominants))}")
+
+
+if __name__ == "__main__":
+    main()

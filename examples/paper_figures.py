@@ -1,0 +1,24 @@
+"""Regenerate every paper artifact (Fig. 2, Fig. 4, Table 1, Theorem 1).
+
+Thin wrapper over the benchmark harness; results land in
+results/benchmarks/*.csv with '#'-commented claim checks on stdout.
+
+Run:  PYTHONPATH=src:. python examples/paper_figures.py [--quick]
+"""
+
+import argparse
+import sys
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true")
+    args = p.parse_args()
+
+    sys.argv = ["run.py"] + (["--quick"] if args.quick else [])
+    from benchmarks import run as bench_run
+    bench_run.main()
+
+
+if __name__ == "__main__":
+    main()

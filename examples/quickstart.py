@@ -1,0 +1,57 @@
+"""Quickstart: FedDec vs FedAvg on the paper's regression problem.
+
+Reproduces the paper's core phenomenon in ~a minute on CPU: with infrequent
+server rounds (H=50), peer-to-peer gossip between local SGD steps makes
+convergence dramatically faster — and the speedup tracks the network's
+spectral gap exactly as Theorem 1 predicts.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import FedDecConfig, init_state, make_feddec_step, make_fedavg_step
+from repro.core import theory, topology
+from repro.core.mixing import MixingDistribution
+from repro.data import linreg
+
+# ---- the paper's §4 problem: 20 agents, wildly heterogeneous data --------
+N_AGENTS, H, K, T = 20, 50, 2, 3000
+problem = linreg.make_problem(n=N_AGENTS, seed=0)
+
+# ---- inter-agent network: geographic graph, Laplacian mixing weights -----
+graph = topology.geographic_graph(N_AGENTS, radius=0.5, seed=1)
+mixing = MixingDistribution(graph, p_fail=0.1, scheme="metropolis")
+print(f"graph: {graph.name}, {graph.num_edges} edges, "
+      f"|λ̂₂|={mixing.lambda2_hat():.3f}, α={mixing.alpha():.2f} "
+      f"(vs H={H} → FedDec should win big)")
+
+# ---- both algorithms share grad_fn, stepsize, and batches -----------------
+gamma = theory.gamma(problem.l_smooth, problem.mu, H)
+lr = theory.paper_stepsize(problem.mu, gamma)
+grad_fn = linreg.make_grad_fn(problem.m_rows)
+
+feddec_step = make_feddec_step(
+    FedDecConfig(mixing=mixing, h=H, k=K), grad_fn, lr, donate=False)
+fedavg_step = make_fedavg_step(N_AGENTS, grad_fn, lr, h=H, k=K,
+                               donate=False)
+
+state_dec = init_state(jnp.zeros(problem.d), N_AGENTS)
+state_avg = init_state(jnp.zeros(problem.d), N_AGENTS)
+key = jax.random.key(0)
+for t in range(T):
+    key, kb = jax.random.split(key)
+    batch = linreg.sample_minibatch(problem, kb, m=1)
+    state_dec, _ = feddec_step(state_dec, batch, jax.random.key(7))
+    state_avg, _ = fedavg_step(state_avg, batch, jax.random.key(7))
+    if (t + 1) % 500 == 0:
+        print(f"t={t + 1:5d}  f(z̄)−f*  FedDec {float(problem.suboptimality(state_dec.params)):.3e}"
+              f"   FedAvg {float(problem.suboptimality(state_avg.params)):.3e}")
+
+gain = float(problem.suboptimality(state_avg.params)
+             / problem.suboptimality(state_dec.params))
+print(f"\nFedDec is {gain:.1f}× closer to optimum after {T} iterations "
+      f"with server rounds only every {H} steps.")

@@ -1,0 +1,59 @@
+"""End-to-end driver: FedDec-train a ~100M-parameter LM (beyond-paper).
+
+Eight agents with strongly non-iid synthetic token streams train a 12-layer
+768-wide decoder (≈112M params) with Algorithm 1: local SGD + ring-2 gossip
+every step, partial-participation server round every H=10 steps.  A FedAvg
+control arm (no gossip, same everything) runs alongside so the paper's
+claim is visible on a *transformer*, not just convex regression.
+
+Full run (a few hundred steps) is sized for a real accelerator; on CPU use
+--scale tiny (default) which trains ≈20M params and still shows the gap.
+
+Run:  PYTHONPATH=src python examples/train_federated_lm.py --steps 60
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.launch.train import tiny_lm_config, train_loop
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--scale", choices=["tiny", "100m"], default="tiny")
+    p.add_argument("--steps", type=int, default=60)
+    p.add_argument("--agents", type=int, default=8)
+    p.add_argument("--h", type=int, default=10)
+    p.add_argument("--control", action="store_true",
+                   help="also run the FedAvg control arm")
+    p.add_argument("--ckpt-dir", default=None)
+    args = p.parse_args()
+
+    if args.scale == "100m":
+        cfg = tiny_lm_config(d_model=768, layers=12)   # ≈112M params
+        batch, seq = 4, 512
+    else:
+        cfg = tiny_lm_config(d_model=256, layers=4, vocab=8192)  # ≈12M
+        batch, seq = 2, 128
+
+    fed = FedConfig(n_agents=args.agents, h=args.h, k=2, graph="ring2")
+    _, losses = train_loop(cfg, fed, steps=args.steps,
+                           per_agent_batch=batch, seq_len=seq, lr=1e-2,
+                           ckpt_dir=args.ckpt_dir, ckpt_every=0)
+    print(f"[FedDec] loss {np.mean(losses[:5]):.4f} → "
+          f"{np.mean(losses[-5:]):.4f}")
+
+    if args.control:
+        _, losses_avg = train_loop(cfg, fed, steps=args.steps,
+                                   per_agent_batch=batch, seq_len=seq,
+                                   lr=1e-2, fedavg_control=True)
+        print(f"[FedAvg] loss {np.mean(losses_avg[:5]):.4f} → "
+              f"{np.mean(losses_avg[-5:]):.4f}")
+        print(f"[result] final-loss gap (FedAvg − FedDec): "
+              f"{np.mean(losses_avg[-5:]) - np.mean(losses[-5:]):+.4f}")
+
+
+if __name__ == "__main__":
+    main()

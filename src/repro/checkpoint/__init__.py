@@ -1,0 +1,6 @@
+"""Checkpointing: msgpack + zstd pytree save/restore."""
+
+from repro.checkpoint.checkpoint import (load_checkpoint, save_checkpoint,
+                                         latest_step)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]

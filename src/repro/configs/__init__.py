@@ -1,0 +1,37 @@
+"""Config registry: the 10 assigned architectures + the paper's own setup."""
+
+from repro.configs.base import ArchConfig, FedConfig, MLAConfig, MoEConfig, SSMConfig
+from repro.configs.shapes import SHAPES, ShapeConfig
+
+_ARCH_MODULES = {
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "gemma3-12b": "gemma3_12b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mistral-large-123b": "mistral_large_123b",
+    "mamba2-2.7b": "mamba2_2p7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "nemotron-4-15b": "nemotron_4_15b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    """Look up an assigned architecture by id (e.g. ``--arch gemma3-12b``)."""
+    import importlib
+    try:
+        mod = _ARCH_MODULES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {name!r}; choose from {sorted(_ARCH_MODULES)}"
+        ) from None
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+
+
+__all__ = [
+    "ArchConfig", "FedConfig", "MLAConfig", "MoEConfig", "SSMConfig",
+    "SHAPES", "ShapeConfig", "ARCH_NAMES", "get_config",
+]

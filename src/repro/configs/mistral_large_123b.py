@@ -1,0 +1,30 @@
+"""Mistral-Large-123B [hf:mistralai/Mistral-Large-Instruct-2407].
+
+88L, d_model 12288, 96 heads (GQA kv=8, head_dim 128), d_ff 28672,
+vocab 32768.  Plain dense GQA decoder.  123B ⇒ ``replicated`` agent layout
+(4 FSDP-sharded cross-silo agents).  Full attention ⇒ long_500k uses the
+sliding-window variant.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-large-123b",
+    arch_type="dense",
+    source="hf:mistralai/Mistral-Large-Instruct-2407",
+    num_layers=88,
+    d_model=12_288,
+    num_heads=96,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28_672,
+    vocab_size=32_768,
+    rope_theta=1_000_000.0,
+    long_context_window=4_096,
+    mlp_kind="swiglu",
+    param_dtype=jnp.bfloat16,  # >100B: bf16 SGD state (DESIGN §3)
+    fed_agent_layout="replicated",
+    fed_n_agents_replicated=4,
+)

@@ -1,0 +1,32 @@
+"""Qwen2-VL-2B language backbone [arXiv:2409.12191].
+
+28L, d_model 1536, 12 heads (GQA kv=2, head_dim 128), d_ff 8960,
+vocab 151936.  M-RoPE (temporal/height/width rotary sections); the ViT
+vision tower is a stub — ``input_specs`` supplies pre-projected patch
+embeddings occupying the first ``frontend_positions`` slots (the one
+allowed carve-out).  Full attention ⇒ the ``long_500k`` shape runs the
+explicit sliding-window variant (window 4096), per DESIGN §5.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    arch_type="vlm",
+    source="arXiv:2409.12191",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151_936,
+    qkv_bias=True,              # Qwen2 family uses QKV bias
+    rope_kind="mrope",
+    rope_theta=1_000_000.0,
+    long_context_window=4_096,  # windowed variant for long_500k only
+    mlp_kind="swiglu",
+    frontend="vision",
+    frontend_positions=256,     # stubbed patch embeddings
+    fed_agent_layout="sharded",
+)

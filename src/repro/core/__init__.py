@@ -1,0 +1,23 @@
+"""FedDec core: the paper's contribution as composable JAX modules.
+
+Public surface:
+  topology   — graphs, doubly-stochastic weight construction, spectra
+  mixing     — the random mixing-matrix distribution 𝒲 (link failures)
+  gossip     — the averaging step (dense einsum / ppermute schedule)
+  server     — partial-participation aggregation + broadcast
+  feddec     — Algorithm 1 as a jitted, model-agnostic step
+  fedavg     — the FedAvg baseline (degenerate 𝒲 = {I})
+  theory     — Theorem 1's constants and bound curve, executable
+"""
+
+from repro.core import fedavg, feddec, gossip, mixing, server, theory, topology
+from repro.core.feddec import FedDecConfig, FedState, init_state, make_feddec_step
+from repro.core.fedavg import FedAvgConfig, make_fedavg_step
+from repro.core.mixing import MixingDistribution, identity_mixing
+
+__all__ = [
+    "topology", "mixing", "gossip", "server", "feddec", "fedavg", "theory",
+    "FedDecConfig", "FedState", "init_state", "make_feddec_step",
+    "FedAvgConfig", "make_fedavg_step",
+    "MixingDistribution", "identity_mixing",
+]

@@ -1,0 +1,30 @@
+"""FedAvg (McMahan et al. [1]) — the paper's baseline comparator.
+
+FedAvg is exactly FedDec with the degenerate mixing distribution 𝒲 = {I}
+(no inter-agent communication): agents run H local SGD steps, then the server
+samples K of them with replacement, averages, and broadcasts.  Reusing the
+FedDec step (with the W=I fast path that skips the mix entirely) guarantees
+the two algorithms differ *only* in gossip — the exact experimental control
+of the paper's Fig. 4.
+"""
+
+from __future__ import annotations
+
+from repro.core import feddec
+from repro.core.mixing import identity_mixing
+
+__all__ = ["FedAvgConfig", "make_fedavg_step"]
+
+
+def FedAvgConfig(n_agents: int, h: int = 10, k: int = 2) -> feddec.FedDecConfig:
+    """FedDecConfig specialised to FedAvg (identity mixing, no gossip)."""
+    return feddec.FedDecConfig(
+        mixing=identity_mixing(n_agents), h=h, k=k,
+        server_enabled=True, gossip_impl="none")
+
+
+def make_fedavg_step(n_agents: int, grad_fn, lr_fn, h: int = 10, k: int = 2,
+                     donate: bool = True):
+    """Jitted FedAvg step with the same signature as make_feddec_step's."""
+    return feddec.make_feddec_step(
+        FedAvgConfig(n_agents, h=h, k=k), grad_fn, lr_fn, donate=donate)

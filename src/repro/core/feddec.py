@@ -1,0 +1,173 @@
+"""FedDec — Algorithm 1 of the paper, as a composable jitted step.
+
+The step is model-agnostic: it consumes a ``grad_fn(params, batch, key) ->
+(loss, grads)`` for a *single* agent and lifts it over the stacked agent dim
+with ``vmap``.  One call executes exactly lines 3–12 of Algorithm 1:
+
+  1. sample the mixing matrix  W^t ~ 𝒲,
+  2. per-agent SGD step        x_i^{t+1/2} = z_i^t − η_t ∇F_i(z_i^t, ξ_i^t),
+  3. gossip                    x_i^{t+1}   = Σ_j W^t_ij x_j^{t+1/2},
+  4. if (t+1) ∈ ℋ: server samples K agents w/ replacement, averages,
+     broadcasts — otherwise z_i^{t+1} = x_i^{t+1}.
+
+FedAvg (the paper's baseline) is the same step with the degenerate mixing
+𝒲 = {I} — see :mod:`repro.core.fedavg`.
+
+Distribution: on a device mesh the stacked params are sharded over the agent
+axes and the model axes (see repro/sharding); gossip runs through either the
+dense einsum path or the neighbour-only ``ppermute`` path (repro.core.gossip).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip as gossip_lib
+from repro.core import server as server_lib
+from repro.core.mixing import MixingDistribution
+
+__all__ = ["FedDecConfig", "FedState", "init_state", "make_feddec_step"]
+
+GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
+LrFn = Callable[[jax.Array], jax.Array]
+GossipFn = Callable[[jax.Array, Any], Any]
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class FedDecConfig:
+    """Static configuration of the federated run.
+
+    Attributes:
+      mixing: the distribution 𝒲 of mixing matrices (graph + link failures).
+      h: server-round period H (ℋ = {t : t ≡ 0 mod H}).
+      k: number of devices sampled per server round (with replacement).
+      server_enabled: disable to get pure decentralized gossip SGD (used by
+        the "does the server still help?" ablation, paper §5 conjecture).
+      gossip_impl: 'dense' (einsum; any graph) or 'none' (W = I fast path).
+        The ppermute path is built separately via gossip.make_permute_gossip
+        and passed to make_feddec_step(gossip_fn=...).
+    """
+
+    mixing: MixingDistribution
+    h: int = 10
+    k: int = 2
+    server_enabled: bool = True
+    gossip_impl: str = "dense"
+
+    def __post_init__(self):
+        if self.h < 1:
+            raise ValueError(f"H must be >= 1, got {self.h}")
+        if self.k < 1:
+            raise ValueError(f"K must be >= 1, got {self.k}")
+        if self.gossip_impl not in ("dense", "none"):
+            raise ValueError(f"unknown gossip_impl {self.gossip_impl!r}")
+
+    @property
+    def n_agents(self) -> int:
+        return self.mixing.n
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FedState:
+    """Carried training state: stacked per-agent params and the step count."""
+
+    params: Any          # pytree, every leaf (n_agents, ...)
+    step: jax.Array      # scalar int32, the paper's t (starts at 1)
+    opt_state: Any = ()  # stacked per-agent optimizer state (SGD: empty)
+
+
+def init_state(params_single: Any, n_agents: int,
+               dtype=None, optimizer=None) -> FedState:
+    """Replicate one agent's init to all agents: z_i^1 = z^1 ∀i (Alg. 1 l.1)."""
+    def rep(leaf):
+        leaf = jnp.asarray(leaf, dtype=dtype)
+        return jnp.broadcast_to(leaf[None], (n_agents,) + leaf.shape)
+    stacked = jax.tree.map(rep, params_single)
+    opt_state = ()
+    if optimizer is not None:
+        single = optimizer.init(params_single)
+        opt_state = jax.tree.map(rep, single)
+    return FedState(params=stacked, step=jnp.asarray(1, dtype=jnp.int32),
+                    opt_state=opt_state)
+
+
+def make_feddec_step(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
+                     gossip_fn: GossipFn | None = None,
+                     optimizer=None,
+                     donate: bool = True,
+                     jit: bool = True):
+    """Build the jitted FedDec step.
+
+    Args:
+      cfg: static federated config.
+      grad_fn: single-agent (params, batch, key) -> (loss, grads).
+      lr_fn: step -> η_t (use repro.core.theory.paper_stepsize for the
+        theorem's diminishing schedule).
+      gossip_fn: optional override for the mixing application, e.g. the
+        ppermute schedule from gossip.make_permute_gossip.  Defaults to the
+        dense einsum path (or a no-op for gossip_impl='none').
+      optimizer: repro.optim.Optimizer for the local update (default: plain
+        SGD — the paper's Algorithm 1).  Optimizer state is per-agent and is
+        NOT gossiped (only parameters are exchanged, as in the paper).
+
+    Returns:
+      step(state, batch, key) -> (new_state, metrics) where batch leaves have
+      a leading agent dim and metrics = {'loss': mean loss, 'eta': η_t}.
+    """
+    if gossip_fn is None:
+        if cfg.gossip_impl == "dense":
+            gossip_fn = gossip_lib.gossip_mix_dense
+        else:
+            gossip_fn = lambda w, x: x  # noqa: E731 — FedAvg fast path
+
+    def local_update(params, grads, opt_state, eta):
+        if optimizer is None:  # Alg. 1 line 5: plain SGD
+            new = jax.tree.map(
+                lambda p, g: p - eta.astype(p.dtype) * g.astype(p.dtype),
+                params, grads)
+            return new, opt_state
+        return optimizer.update(params, grads, opt_state, eta)
+
+    def step(state: FedState, batch: Any, key: jax.Array):
+        t = state.step
+        key_w, key_grad, key_server = jax.random.split(
+            jax.random.fold_in(key, t), 3)
+        eta = lr_fn(t)
+
+        # line 3: sample W^t
+        w = cfg.mixing.sample(key_w)
+
+        # lines 4–5: per-agent stochastic gradient + local update
+        agent_keys = jax.random.split(key_grad, cfg.n_agents)
+        losses, grads = jax.vmap(grad_fn)(state.params, batch, agent_keys)
+        x_half, new_opt = jax.vmap(local_update, in_axes=(0, 0, 0, None))(
+            state.params, grads, state.opt_state, eta)
+
+        # line 6: gossip averaging with neighbours
+        x_next = gossip_fn(w, x_half)
+
+        # lines 7–12: periodic server round (partial participation)
+        if cfg.server_enabled:
+            is_round = (t + 1) % cfg.h == 0
+            z_next = jax.lax.cond(
+                is_round,
+                lambda x: server_lib.server_round(key_server, x, cfg.k),
+                lambda x: x,
+                x_next)
+        else:
+            z_next = x_next
+
+        new_state = FedState(params=z_next, step=t + 1, opt_state=new_opt)
+        metrics = {"loss": jnp.mean(losses), "eta": eta}
+        return new_state, metrics
+
+    if not jit:
+        return step
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)

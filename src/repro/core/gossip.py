@@ -1,0 +1,133 @@
+"""The gossip averaging step  x_i ← Σ_j W_ij x_j  (Algorithm 1, line 6).
+
+Three execution paths, identical math, different cost models:
+
+1. ``gossip_mix_dense`` — ``einsum('ij,j...->i...')`` on stacked parameters.
+   Under pjit/SPMD with the agent dim sharded, XLA lowers this to an
+   all-gather of every agent's parameters (O(n·d) bytes per agent).  Simple,
+   fully general (any W), and the **baseline** for the roofline.
+
+2. ``gossip_mix_permute`` — a ``shard_map`` schedule of
+   ``jax.lax.ppermute`` rounds covering only the graph's edges
+   (O(deg·d) bytes per agent).  This is the TPU-native realisation of
+   "agents talk to neighbours only" and the §Perf optimized path.
+
+3. ``kernels.ops.gossip_mix`` — a Pallas kernel for the local
+   (n, n) @ (n, D) mixing contraction once parameters are resident
+   (used on the flattened-parameter hot loop; see kernels/gossip_mix.py).
+
+All paths preserve the mean exactly when W is doubly stochastic — the
+invariant Lemma 2 relies on (x̄^{t+1} = x̄^{t+1/2}); tests/test_gossip.py
+checks it property-style.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import topology as topo
+
+__all__ = [
+    "gossip_mix_dense",
+    "gossip_mix_permute",
+    "make_permute_gossip",
+]
+
+
+def gossip_mix_dense(w: jax.Array, stacked: object) -> object:
+    """Apply  y_i = Σ_j W_ij x_j  to every leaf of a stacked pytree.
+
+    Args:
+      w: (n, n) mixing matrix.
+      stacked: pytree whose leaves all have a leading agent dim of size n.
+    """
+    def mix(leaf: jax.Array) -> jax.Array:
+        return jnp.einsum("ij,j...->i...", w.astype(leaf.dtype), leaf,
+                          precision=jax.lax.Precision.HIGHEST)
+    return jax.tree.map(mix, stacked)
+
+
+def make_permute_gossip(graph: topo.Graph, mesh: jax.sharding.Mesh,
+                        agent_axes: str | tuple[str, ...],
+                        leaf_specs: object | None = None,
+                        exchange_dtype=None):
+    """Build a neighbour-only gossip function for a *static* topology.
+
+    The graph's directed edges are decomposed into permutation rounds
+    (:func:`repro.core.topology.permutation_schedule`); each round is one
+    ``jax.lax.ppermute`` over the agent mesh axes — each agent sends/receives
+    only its |deg| neighbours' parameters (O(deg·d) bytes) instead of the
+    dense einsum's all-gather over every agent (O(n·d)).  Mixing *weights*
+    may still be random per step (link failures): the sampled W is passed in
+    and each device reads its own row.
+
+    Requires n == prod(mesh.shape[a] for a in agent_axes): one agent per
+    agent-axis slice.
+
+    Args:
+      leaf_specs: optional pytree of PartitionSpecs matching the stacked
+        params (agent dim first, e.g. from sharding.param_pspecs) so the
+        shard_map preserves inner tensor-parallel sharding.  Defaults to
+        agents-only sharding.
+      exchange_dtype: cast leaves to this dtype for the exchange and back
+        (e.g. bf16 gossip compression — §Perf iteration A2), accumulate in
+        f32.
+
+    Returns:
+      gossip(w, stacked) -> stacked, usable under jit on the mesh.
+    """
+    if isinstance(agent_axes, str):
+        agent_axes = (agent_axes,)
+    n_mesh = int(np.prod([mesh.shape[a] for a in agent_axes]))
+    if graph.n != n_mesh:
+        raise ValueError(
+            f"permute gossip needs one agent per mesh slice: graph has "
+            f"{graph.n} agents but agent axes {agent_axes} have {n_mesh}")
+    schedule = topo.permutation_schedule(graph)
+    # ppermute takes (src, dst) pairs; round r: i receives from perm[i].
+    perm_pairs = [
+        tuple((int(p[i]), i) for i in range(graph.n) if p[i] != i)
+        for p in schedule
+    ]
+    axis_name = agent_axes if len(agent_axes) > 1 else agent_axes[0]
+
+    def per_shard(w: jax.Array, x: jax.Array) -> jax.Array:
+        # x: (1, ...) — this device's agent block. w: (n, n) replicated.
+        me = jax.lax.axis_index(axis_name)
+        my_row = jax.lax.dynamic_slice_in_dim(w, me, 1, axis=0)[0]  # (n,)
+        xs = x if exchange_dtype is None else x.astype(exchange_dtype)
+        acc = x.astype(jnp.float32) * my_row[me]  # self weight W_ii
+        for pairs, perm in zip(perm_pairs, schedule):
+            recv = jax.lax.ppermute(xs, axis_name=axis_name, perm=pairs)
+            src = jnp.asarray(perm, dtype=jnp.int32)[me]
+            # Idle rounds (perm[me] == me) must not double-count self.
+            coeff = jnp.where(src == me, 0.0, my_row[src])
+            acc = acc + coeff * recv.astype(jnp.float32)
+        return acc.astype(x.dtype)
+
+    def gossip(w: jax.Array, stacked: object) -> object:
+        def mix(leaf: jax.Array, spec) -> jax.Array:
+            if spec is None:
+                spec = P(axis_name, *([None] * (leaf.ndim - 1)))
+            fn = jax.shard_map(
+                per_shard, mesh=mesh,
+                in_specs=(P(None, None), spec), out_specs=spec,
+                check_vma=False)
+            return fn(w, leaf)
+        if leaf_specs is None:
+            return jax.tree.map(lambda l: mix(l, None), stacked)
+        return jax.tree.map(mix, stacked, leaf_specs,
+                            is_leaf=lambda x: x is None)
+    return gossip
+
+
+def gossip_mix_permute(w: jax.Array, stacked: object, *,
+                       graph: topo.Graph, mesh: jax.sharding.Mesh,
+                       agent_axes: str | tuple[str, ...]) -> object:
+    """One-shot convenience wrapper over :func:`make_permute_gossip`."""
+    return make_permute_gossip(graph, mesh, agent_axes)(w, stacked)

@@ -1,0 +1,118 @@
+"""Sampling the random mixing matrices W^t ~ 𝒲 (Assumption 2).
+
+The paper models unreliable inter-agent links: at every iteration each edge of
+the base graph is independently *active* with probability ``1 − p_fail``.
+Assumption 2 requires every realisation to be symmetric, doubly stochastic and
+supported on the live edges, and E[WWᵀ] to have a spectral gap.
+
+Metropolis–Hastings weights computed **on the surviving subgraph** satisfy all
+of this by construction, so that is what :meth:`MixingDistribution.sample`
+draws (jax-traceable, usable inside a jitted training step).  With
+``p_fail == 0`` the distribution degenerates to the fixed matrix built by
+:func:`repro.core.topology.build_weights`, reproducing the paper's
+simulation setup (fixed Laplacian W, |λ̂₂| = |λ₂|²).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology as topo
+
+__all__ = ["MixingDistribution", "identity_mixing"]
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class MixingDistribution:
+    """The distribution 𝒲 over mixing matrices.
+
+    Attributes:
+      graph: base communication graph (edges available when links are up).
+      p_fail: probability that an edge is *down* at a given iteration.
+      scheme: weight scheme for the p_fail == 0 fixed matrix.
+      dtype: dtype of sampled matrices.
+    """
+
+    graph: topo.Graph
+    p_fail: float = 0.0
+    scheme: topo.WeightScheme = "laplacian"
+    dtype: jnp.dtype = jnp.float32
+
+    def __post_init__(self):
+        if not 0.0 <= self.p_fail < 1.0:
+            raise ValueError(f"p_fail must be in [0,1), got {self.p_fail}")
+
+    @property
+    def n(self) -> int:
+        return self.graph.n
+
+    @property
+    def fixed_w(self) -> np.ndarray:
+        """The deterministic W used when p_fail == 0."""
+        return topo.build_weights(self.graph, self.scheme)
+
+    # -- sampling ----------------------------------------------------------
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        """Draw W^t: symmetric, doubly stochastic, supported on live edges."""
+        if self.p_fail == 0.0:
+            return jnp.asarray(self.fixed_w, dtype=self.dtype)
+        return _sample_metropolis(
+            key, jnp.asarray(self.graph.adjacency), self.p_fail, self.dtype)
+
+    def sample_batch(self, key: jax.Array, num: int) -> jax.Array:
+        keys = jax.random.split(key, num)
+        return jax.vmap(self.sample)(keys)
+
+    # -- spectral quantities of Theorem 1 -----------------------------------
+
+    def expected_wwt(self, key: jax.Array | None = None,
+                     num_samples: int = 4096) -> np.ndarray:
+        """E_W[W Wᵀ].  Exact (=W²) when p_fail == 0, Monte-Carlo otherwise."""
+        if self.p_fail == 0.0:
+            w = self.fixed_w
+            return w @ w.T
+        if key is None:
+            key = jax.random.key(0)
+        ws = self.sample_batch(key, num_samples)
+        wwt = jnp.einsum("kij,klj->il", ws, ws) / num_samples
+        return np.asarray(wwt, dtype=np.float64)
+
+    def lambda2_hat(self, key: jax.Array | None = None,
+                    num_samples: int = 4096) -> float:
+        """|λ̂₂| = |λ₂(E[WWᵀ])| — the connectivity constant of Theorem 1."""
+        return topo.lambda2(self.expected_wwt(key, num_samples))
+
+    def alpha(self, key: jax.Array | None = None,
+              num_samples: int = 4096) -> float:
+        """α = |λ̂₂|/(1 − |λ̂₂|) — the factor multiplying H in B (Thm. 1)."""
+        return topo.alpha_from_lambda2_hat(self.lambda2_hat(key, num_samples))
+
+
+@partial(jax.jit, static_argnames=("p_fail", "dtype"))
+def _sample_metropolis(key: jax.Array, adjacency: jax.Array, p_fail: float,
+                       dtype) -> jax.Array:
+    """Metropolis weights on the Bernoulli-surviving subgraph (traceable)."""
+    n = adjacency.shape[0]
+    u = jax.random.uniform(key, (n, n))
+    u = jnp.triu(u, k=1)
+    u = u + u.T  # symmetric uniforms so the failure mask is symmetric
+    live = adjacency & (u >= p_fail)
+    deg = live.sum(axis=1)
+    dmax = jnp.maximum(deg[:, None], deg[None, :])
+    w = jnp.where(live, 1.0 / (1.0 + dmax.astype(dtype)), 0.0)
+    w = w.at[jnp.arange(n), jnp.arange(n)].set(0.0)
+    diag = 1.0 - w.sum(axis=1)
+    return w.at[jnp.arange(n), jnp.arange(n)].set(diag).astype(dtype)
+
+
+def identity_mixing(n: int) -> "MixingDistribution":
+    """Degenerate 𝒲 = {I}: no inter-agent communication ⇒ FedAvg."""
+    empty = topo.Graph(np.zeros((n, n), dtype=bool), name=f"isolated(n={n})")
+    return MixingDistribution(graph=empty, p_fail=0.0, scheme="metropolis")

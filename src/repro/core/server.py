@@ -1,0 +1,65 @@
+"""Server aggregation with partial participation (Algorithm 1, lines 7–10).
+
+Every H-th iteration the server samples K agents **uniformly with
+replacement** (paper §2: S_t = {j_ℓ ~ 𝒰([n])}), averages their parameters,
+
+    z^{t+1} = (1/K) Σ_ℓ x_{j_ℓ}^{t+1},
+
+and broadcasts z^{t+1} to all agents.  Sampling with replacement means an
+agent can be counted more than once; we therefore represent S_t as an integer
+count vector c ∈ ℕⁿ with Σc = K and aggregate with weights c/K.  This makes
+the aggregation a single masked reduction over the stacked agent dim — on a
+TPU mesh it lowers to one all-reduce over the agent axes, i.e. the
+"low-bandwidth, infrequent" link of the paper.
+
+E_{S_t}[z̄^t] = x̄^t (paper eq. (7)) holds by construction; tested
+property-style in tests/test_server.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "sample_participants",
+    "participant_weights",
+    "aggregate_and_broadcast",
+    "server_round",
+]
+
+
+def sample_participants(key: jax.Array, n: int, k: int) -> jax.Array:
+    """Draw S_t: K indices uniform over [n] with replacement → counts (n,)."""
+    idx = jax.random.randint(key, (k,), 0, n)
+    return jnp.zeros((n,), dtype=jnp.int32).at[idx].add(1)
+
+
+def participant_weights(counts: jax.Array, k: int) -> jax.Array:
+    """Aggregation weights c/K (sum to 1)."""
+    return counts.astype(jnp.float32) / float(k)
+
+
+def aggregate_and_broadcast(weights: jax.Array, stacked: object) -> object:
+    """z = Σ_i weights_i x_i, broadcast back to every agent slot.
+
+    Args:
+      weights: (n,) nonnegative, summing to 1 (c/K).
+      stacked: pytree with leading agent dim n on every leaf.
+
+    Returns:
+      pytree of the same structure with every agent's slot equal to z.
+    """
+    def agg(leaf: jax.Array) -> jax.Array:
+        n = leaf.shape[0]
+        z = jnp.tensordot(weights.astype(leaf.dtype), leaf, axes=(0, 0))
+        return jnp.broadcast_to(z[None], (n,) + z.shape).astype(leaf.dtype)
+    return jax.tree.map(agg, stacked)
+
+
+def server_round(key: jax.Array, stacked: object, k: int) -> object:
+    """Sample S_t and aggregate+broadcast in one call (lines 8–10 of Alg. 1)."""
+    leaves = jax.tree.leaves(stacked)
+    n = leaves[0].shape[0]
+    counts = sample_participants(key, n, k)
+    return aggregate_and_broadcast(participant_weights(counts, k), stacked)

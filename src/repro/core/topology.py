@@ -1,0 +1,303 @@
+"""Communication-graph construction and spectral utilities for FedDec.
+
+The paper (§2, §4) defines the inter-agent network as an undirected graph
+G = ([n], E).  Two families are used in the experiments:
+
+* **geographic graphs** — n points uniform in the unit square, linked when the
+  Euclidean distance is below a radius ``r`` (Fig. 3, Table 1 top);
+* **Erdős–Rényi random graphs** — each link present independently with
+  probability ``p`` (Table 1 bottom).
+
+Mixing matrices are built from the graph either with the Laplacian
+"best-constant" weights of Xiao & Boyd [26] (used for the paper's fixed-W
+simulations) or Metropolis–Hastings weights (used when links fail randomly,
+because they stay doubly stochastic under edge deletion).
+
+Everything here is **host-side** (numpy): graphs are static metadata; the
+per-step randomness (link failures) lives in :mod:`repro.core.mixing` and is
+jax-traceable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "geographic_graph",
+    "erdos_renyi_graph",
+    "ring_graph",
+    "fully_connected_graph",
+    "chain_graph",
+    "laplacian_weights",
+    "metropolis_weights",
+    "max_degree_weights",
+    "build_weights",
+    "lambda2",
+    "lambda2_hat_fixed",
+    "alpha_from_lambda2_hat",
+    "is_connected",
+    "edge_list",
+    "permutation_schedule",
+]
+
+WeightScheme = Literal["laplacian", "metropolis", "max_degree"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An undirected communication graph.
+
+    Attributes:
+      adjacency: (n, n) bool, symmetric, zero diagonal.
+      positions: (n, 2) float or None — node coordinates for geographic graphs.
+      name: human-readable tag used in logs and benchmark tables.
+    """
+
+    adjacency: np.ndarray
+    positions: np.ndarray | None = None
+    name: str = "graph"
+
+    def __post_init__(self):
+        a = np.asarray(self.adjacency, dtype=bool)
+        if a.ndim != 2 or a.shape[0] != a.shape[1]:
+            raise ValueError(f"adjacency must be square, got {a.shape}")
+        if not np.array_equal(a, a.T):
+            raise ValueError("adjacency must be symmetric")
+        if np.any(np.diag(a)):
+            raise ValueError("adjacency must have a zero diagonal")
+        object.__setattr__(self, "adjacency", a)
+
+    @property
+    def n(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.adjacency.sum()) // 2
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return self.adjacency.sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Graph generators
+# ---------------------------------------------------------------------------
+
+
+def geographic_graph(n: int, radius: float, seed: int = 0,
+                     require_connected: bool = True,
+                     max_tries: int = 1000) -> Graph:
+    """Random geometric graph on the unit square (paper §4, Fig. 3).
+
+    Nodes are i.i.d. uniform in [0,1]²; an edge joins every pair closer than
+    ``radius``.  When ``require_connected`` we re-draw until the graph is
+    connected (the paper assumes "when all links are active the agents form a
+    connected network").
+    """
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        pos = rng.uniform(size=(n, 2))
+        d2 = ((pos[:, None, :] - pos[None, :, :]) ** 2).sum(-1)
+        adj = (d2 <= radius ** 2) & ~np.eye(n, dtype=bool)
+        if not require_connected or _connected(adj):
+            return Graph(adj, positions=pos, name=f"geo(n={n},r={radius})")
+    raise RuntimeError(
+        f"could not draw a connected geographic graph (n={n}, r={radius}) "
+        f"in {max_tries} tries; increase the radius")
+
+
+def erdos_renyi_graph(n: int, p: float, seed: int = 0,
+                      require_connected: bool = True,
+                      max_tries: int = 1000) -> Graph:
+    """Erdős–Rényi G(n, p) random graph (paper Table 1, bottom)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        upper = rng.uniform(size=(n, n)) < p
+        adj = np.triu(upper, k=1)
+        adj = adj | adj.T
+        if not require_connected or _connected(adj):
+            return Graph(adj, name=f"er(n={n},p={p})")
+    raise RuntimeError(
+        f"could not draw a connected ER graph (n={n}, p={p}) "
+        f"in {max_tries} tries; increase p")
+
+
+def ring_graph(n: int, k: int = 1) -> Graph:
+    """Ring lattice: node i linked to i±1 … i±k (mod n).
+
+    This is the topology used by the ``shard_map`` gossip schedule on a TPU
+    mesh: every offset ±j is a single ``collective_permute``.
+    """
+    adj = np.zeros((n, n), dtype=bool)
+    for j in range(1, k + 1):
+        idx = np.arange(n)
+        adj[idx, (idx + j) % n] = True
+        adj[(idx + j) % n, idx] = True
+    np.fill_diagonal(adj, False)
+    return Graph(adj, name=f"ring(n={n},k={k})")
+
+
+def fully_connected_graph(n: int) -> Graph:
+    adj = ~np.eye(n, dtype=bool)
+    return Graph(adj, name=f"full(n={n})")
+
+
+def chain_graph(n: int) -> Graph:
+    adj = np.zeros((n, n), dtype=bool)
+    idx = np.arange(n - 1)
+    adj[idx, idx + 1] = True
+    adj[idx + 1, idx] = True
+    return Graph(adj, name=f"chain(n={n})")
+
+
+def _connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    stack = [0]
+    seen[0] = True
+    while stack:
+        u = stack.pop()
+        for v in np.nonzero(adj[u])[0]:
+            if not seen[v]:
+                seen[v] = True
+                stack.append(int(v))
+    return bool(seen.all())
+
+
+def is_connected(graph: Graph) -> bool:
+    return _connected(graph.adjacency)
+
+
+# ---------------------------------------------------------------------------
+# Mixing-weight construction (Assumption 2: symmetric, doubly stochastic)
+# ---------------------------------------------------------------------------
+
+
+def laplacian_weights(graph: Graph) -> np.ndarray:
+    """Best-constant Laplacian weights W = I − εL, ε = 2/(λ₁(L)+λ_{n−1}(L)).
+
+    Xiao & Boyd, "Fast linear iterations for distributed averaging" [26] —
+    the construction cited by the paper for its Table 1 / Fig. 4 weights.
+    The result is symmetric and doubly stochastic with λ₂(W) minimized over
+    constant-weight schemes.
+    """
+    adj = graph.adjacency.astype(np.float64)
+    deg = adj.sum(axis=1)
+    lap = np.diag(deg) - adj
+    eig = np.linalg.eigvalsh(lap)  # ascending; eig[0] ~ 0
+    lam_max, lam_min_pos = eig[-1], eig[1]
+    eps = 2.0 / (lam_max + lam_min_pos)
+    w = np.eye(graph.n) - eps * lap
+    return w
+
+
+def metropolis_weights(graph: Graph) -> np.ndarray:
+    """Metropolis–Hastings weights: W_ij = 1/(1+max(d_i,d_j)) on edges.
+
+    Doubly stochastic for any subgraph, which makes them the right choice for
+    random link failures: deleting edges and recomputing the diagonal keeps
+    Assumption 2 satisfied.  Used by :mod:`repro.core.mixing` for W^t ~ 𝒲.
+    """
+    adj = graph.adjacency
+    deg = adj.sum(axis=1)
+    dmax = np.maximum(deg[:, None], deg[None, :])
+    w = np.where(adj, 1.0 / (1.0 + dmax), 0.0)
+    np.fill_diagonal(w, 0.0)
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+def max_degree_weights(graph: Graph) -> np.ndarray:
+    """Uniform 1/(d_max+1) edge weights — the simplest doubly stochastic W."""
+    adj = graph.adjacency
+    dmax = int(adj.sum(axis=1).max())
+    w = np.where(adj, 1.0 / (dmax + 1.0), 0.0)
+    np.fill_diagonal(w, 1.0 - w.sum(axis=1))
+    return w
+
+
+_SCHEMES = {
+    "laplacian": laplacian_weights,
+    "metropolis": metropolis_weights,
+    "max_degree": max_degree_weights,
+}
+
+
+def build_weights(graph: Graph, scheme: WeightScheme = "laplacian") -> np.ndarray:
+    try:
+        return _SCHEMES[scheme](graph)
+    except KeyError:
+        raise ValueError(f"unknown weight scheme {scheme!r}; "
+                         f"choose from {sorted(_SCHEMES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Spectral quantities of Theorem 1
+# ---------------------------------------------------------------------------
+
+
+def lambda2(w: np.ndarray) -> float:
+    """|λ₂(W)| — second-largest eigenvalue magnitude of a symmetric W."""
+    eig = np.linalg.eigvalsh(np.asarray(w, dtype=np.float64))
+    mags = np.sort(np.abs(eig))[::-1]
+    return float(mags[1])
+
+
+def lambda2_hat_fixed(w: np.ndarray) -> float:
+    """|λ̂₂| = |λ₂(E[WWᵀ])| for the fixed-W case: E[WWᵀ] = W² ⇒ |λ̂₂| = |λ₂|².
+
+    (Paper §3: "if all inter-agent communication links are assumed to be
+    always active then W^t = W and |λ̂₂| = |λ₂|²".)
+    """
+    return float(lambda2(w) ** 2)
+
+
+def alpha_from_lambda2_hat(lam2_hat: float) -> float:
+    """α = |λ̂₂| / (1 − |λ̂₂|) — Theorem 1 / Lemma 3."""
+    if not 0.0 <= lam2_hat < 1.0:
+        raise ValueError(f"|λ̂₂| must be in [0, 1), got {lam2_hat}")
+    return lam2_hat / (1.0 - lam2_hat)
+
+
+# ---------------------------------------------------------------------------
+# Edge scheduling for the TPU collective-permute gossip path
+# ---------------------------------------------------------------------------
+
+
+def edge_list(graph: Graph) -> list[tuple[int, int]]:
+    i, j = np.nonzero(np.triu(graph.adjacency, k=1))
+    return list(zip(i.tolist(), j.tolist()))
+
+
+def permutation_schedule(graph: Graph) -> list[np.ndarray]:
+    """Decompose the directed edge set into permutation rounds.
+
+    Each round is a partial permutation vector ``perm`` with ``perm[i] = j``
+    meaning "i receives from j this round" and ``perm[i] = i`` when idle.  A
+    ``collective_permute`` realises one round in a single ICI step; the number
+    of rounds is the graph's edge chromatic number bound (greedy).  The dense
+    einsum path moves O(n·d) bytes per agent; this schedule moves O(deg·d).
+    """
+    n = graph.n
+    # directed edges (receiver, sender)
+    remaining = {(i, j) for i in range(n) for j in range(n)
+                 if graph.adjacency[i, j]}
+    rounds: list[np.ndarray] = []
+    while remaining:
+        perm = np.arange(n)
+        used_recv: set[int] = set()
+        used_send: set[int] = set()
+        for (i, j) in sorted(remaining):
+            if i not in used_recv and j not in used_send:
+                perm[i] = j
+                used_recv.add(i)
+                used_send.add(j)
+        chosen = {(int(i), int(perm[i])) for i in range(n) if perm[i] != i}
+        remaining -= chosen
+        rounds.append(perm)
+    return rounds

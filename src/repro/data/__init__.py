@@ -1,0 +1,5 @@
+"""Data substrate: the paper's linreg instance + synthetic federated LM data."""
+
+from repro.data import linreg
+
+__all__ = ["linreg"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  flash_attention — causal/windowed GQA attention (online softmax)
+  ssd_scan        — Mamba2 SSD chunked scan (carry in VMEM scratch)
+  rglru_scan      — RG-LRU gated linear recurrence
+  gossip_mix      — FedDec's (n, n) @ (n, D) mixing contraction
+
+Public entry points live in ops.py (jit'd, interpret-fallback on CPU);
+ref.py holds the pure-jnp oracles the tests sweep against.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel for the FedDec mixing contraction  Y = W @ X.
+
+This is the paper's own hot op (Algorithm 1, line 6) applied to the stacked
+flat parameter matrix X ∈ (n_agents, D) with D up to ~10⁹.  Arithmetic
+intensity is 2n FLOP per 4 bytes streamed — with n ≤ 64 that is far below
+the TPU ridge point, i.e. the op is **HBM-bandwidth bound**; the kernel's
+whole job is to stream X through VMEM exactly once at full bandwidth while
+the (n, n) W stays VMEM-resident, and to fuse the doubly-stochastic mixing
+matmul with the dtype cast (the XLA path materialises a f32 upcast of X
+first — a 2× bandwidth tax).
+
+Grid: 1-D over D tiles.  BlockSpecs:
+  * W   (n, n)        — same block every step (index_map → (0, 0)),
+  * X   (n, BLOCK_D)  — tile i,
+  * Y   (n, BLOCK_D)  — tile i.
+
+BLOCK_D is a multiple of 128 (lane width); n is padded to the f32 sublane
+multiple (8) by the wrapper in ops.py, so the MXU sees aligned (8k, 128m)
+tiles.  VMEM working set per step = (2·n·BLOCK_D + n²)·4 B — with n=32,
+BLOCK_D=2048 that is ~0.5 MB, leaving headroom for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gossip_mix_kernel", "gossip_mix_pallas"]
+
+BLOCK_D = 2048
+
+
+def gossip_mix_kernel(w_ref, x_ref, y_ref):
+    w = w_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    y_ref[...] = jnp.dot(
+        w, x, preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gossip_mix_pallas(w: jax.Array, x: jax.Array, *, block_d: int = BLOCK_D,
+                      interpret: bool = False) -> jax.Array:
+    """y = w @ x with w (n, n), x (n, D); D must be a multiple of block_d
+    and n a multiple of 8 (ops.gossip_mix pads both)."""
+    n, d = x.shape
+    assert w.shape == (n, n), (w.shape, x.shape)
+    assert d % block_d == 0, (d, block_d)
+    grid = (d // block_d,)
+    return pl.pallas_call(
+        gossip_mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(w, x)

@@ -1,0 +1,86 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles the host-side plumbing the kernels assume away: CPU fallback to
+``interpret=True`` (this container has no TPU; the kernel body still
+executes, in Python, so tests exercise the real kernel code), shape padding
+to tile boundaries, and pytree-level application for the gossip op.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gossip_mix as _gm
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import ssd_scan as _ssd
+
+__all__ = ["flash_attention", "gossip_mix", "gossip_mix_tree", "ssd_scan",
+           "rglru_scan", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def flash_attention(q, k, v, *, window: int = 0, scale: float | None = None,
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_k: int = _fa.DEFAULT_BLOCK_K):
+    """Causal/windowed GQA flash attention (see flash_attention.py)."""
+    return _fa.flash_attention_pallas(
+        q, k, v, window=window, scale=scale, block_q=block_q,
+        block_k=block_k, interpret=_interpret())
+
+
+def gossip_mix(w: jax.Array, x: jax.Array, *, block_d: int = _gm.BLOCK_D):
+    """y = W @ X for (n, D) stacked flats; pads n→8k and D→block_d."""
+    n, d = x.shape
+    n_pad = (-n) % 8
+    d_pad = (-d) % block_d
+    wp = jnp.pad(w, ((0, n_pad), (0, n_pad)))
+    xp = jnp.pad(x, ((0, n_pad), (0, d_pad)))
+    y = _gm.gossip_mix_pallas(wp, xp, block_d=block_d,
+                              interpret=_interpret())
+    return y[:n, :d]
+
+
+def gossip_mix_tree(w: jax.Array, stacked) -> object:
+    """Apply the gossip kernel leaf-wise to a stacked (n, ...) pytree.
+
+    Flattens every leaf to (n, D_leaf); the kernel streams each leaf once.
+    Semantically identical to core.gossip.gossip_mix_dense.
+    """
+    def mix(leaf):
+        n = leaf.shape[0]
+        flat = leaf.reshape(n, -1)
+        return gossip_mix(w.astype(leaf.dtype), flat).reshape(leaf.shape)
+    return jax.tree.map(mix, stacked)
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 256):
+    """Mamba2 SSD chunked scan (see ssd_scan.py)."""
+    return _ssd.ssd_scan_pallas(x, dt, a, b, c, chunk=chunk,
+                                interpret=_interpret())
+
+
+def rglru_scan(a, bx, *, block_s: int = _rg.DEFAULT_BLOCK_S,
+               block_w: int = _rg.DEFAULT_BLOCK_W):
+    """RG-LRU linear recurrence (see rglru_scan.py); pads S and W to tiles."""
+    b, s, w = a.shape
+    w_pad = (-w) % min(block_w, max(w, 1))
+    s_pad = (-s) % min(block_s, max(s, 1))
+    if w_pad or s_pad:
+        # trailing padding only touches sliced-off outputs; the carry keeps
+        # running through it (a=0 zeroes it), which is harmless
+        a = jnp.pad(a, ((0, 0), (0, s_pad), (0, w_pad)))
+        bx = jnp.pad(bx, ((0, 0), (0, s_pad), (0, w_pad)))
+    h, h_last = _rg.rglru_scan_pallas(a, bx, block_s=block_s,
+                                      block_w=block_w,
+                                      interpret=_interpret())
+    h = h[:, :s, :w]
+    return h, h[:, -1]

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against these.
+Where the model code already contains the canonical jnp implementation
+(SSD chunked scan, RG-LRU associative scan) we re-export it and add an
+independent *sequential* reference so the chunked/associative forms are
+themselves validated against the O(S) recurrence they claim to compute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.griffin import rglru_scan as rglru_assoc_ref
+from repro.models.ssm import ssd_chunked as ssd_chunked_ref
+
+__all__ = [
+    "gossip_mix_ref", "flash_attention_ref",
+    "ssd_chunked_ref", "ssd_sequential_ref",
+    "rglru_assoc_ref", "rglru_sequential_ref",
+]
+
+
+def gossip_mix_ref(w: jax.Array, x: jax.Array) -> jax.Array:
+    """y = W @ X.  w: (n, n); x: (n, D) — FedDec Alg. 1 line 6 on flats."""
+    return jnp.einsum("ij,jd->id", w.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        window: int = 0, scale: float | None = None,
+                        causal: bool = True) -> jax.Array:
+    """Full-softmax GQA attention.  q: (B,S,H,hd); k,v: (B,T,Kv,hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    if scale is None:
+        scale = hd ** -0.5
+    qg = q.reshape(b, s, kv, h // kv, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg,
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(s)
+        kpos = jnp.arange(k.shape[1])
+        mask = kpos[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def ssd_sequential_ref(x, dt, a, b, c, initial_state=None):
+    """O(S) sequential SSD recurrence — validates the chunked form.
+
+    Same signature/returns as models.ssm.ssd_chunked (minus chunk).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    f32 = jnp.float32
+    state = jnp.zeros((bs, h, p, n), f32) if initial_state is None \
+        else initial_state.astype(f32)
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt.astype(f32) * a.astype(f32))
+        st = st * decay[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", (xt * dtt[..., None]).astype(f32),
+            bt.astype(f32))
+        yt = jnp.einsum("bhpn,bn->bhp", st, ct.astype(f32))
+        return st, yt
+
+    final, ys = jax.lax.scan(
+        step, state,
+        (x.swapaxes(0, 1), dt.swapaxes(0, 1), b.swapaxes(0, 1),
+         c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), final
+
+
+def rglru_sequential_ref(a, bx, h0=None):
+    """O(S) sequential RG-LRU recurrence — validates the associative scan."""
+    bs, s, w = a.shape
+    state = jnp.zeros((bs, w), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at.astype(jnp.float32) * h + bt.astype(jnp.float32)
+        return h, h
+
+    final, hs = jax.lax.scan(step, state,
+                             (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), final

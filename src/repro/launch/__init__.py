@@ -1,0 +1,10 @@
+"""Launch layer: production mesh, input specs, dry-run, drivers.
+
+NOTE: do NOT import repro.launch.dryrun or repro.launch.profile from
+library/test code — they set the 512-device host-platform override at
+import time and must run as their own processes.
+"""
+
+from repro.launch import mesh, specs, steps
+
+__all__ = ["mesh", "specs", "steps"]

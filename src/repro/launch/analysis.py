@@ -1,0 +1,145 @@
+"""Post-compile analysis: memory, FLOPs, and collective-byte accounting.
+
+``cost_analysis()`` gives HLO FLOPs / bytes; collective traffic is NOT in
+there, so we parse the post-SPMD optimized HLO and sum the *output* sizes of
+every communication op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute).  Output-size is the standard convention
+for per-device collective bytes moved (all-reduce moves ~2× in a ring, which
+we report separately as an effective factor).
+
+Roofline constants (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (DESIGN §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import numpy as np
+
+from repro.launch import hlo_analysis
+
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "CollectiveStats",
+           "parse_collectives", "roofline_terms", "RooflineReport",
+           "dtype_bytes"]
+
+PEAK_FLOPS = 197e12   # bf16 per chip
+HBM_BW = 819e9        # bytes/s per chip
+ICI_BW = 50e9         # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[4,1024,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_ELT_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def dtype_bytes(name: str) -> int:
+    return _DTYPE_BYTES.get(name, 4)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if not dims:
+        return dtype_bytes(dtype)
+    n = int(np.prod([int(d) for d in dims.split(",") if d]))
+    return n * dtype_bytes(dtype)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict[str, int]
+    bytes_by_kind: dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}:{self.counts[k]}×/{self.bytes_by_kind[k]/1e6:.1f}MB"
+                 for k in sorted(self.counts) if self.counts[k]]
+        return " ".join(parts) or "none"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device output bytes of every collective in optimized HLO."""
+    counts = {k: 0 for k in _COLL_KINDS}
+    nbytes = {k: 0 for k in _COLL_KINDS}
+    for m in _OP_RE.finditer(hlo_text):
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            size = sum(_shape_bytes(dt, dm)
+                       for dt, dm in _TUPLE_ELT_RE.findall(tuple_body))
+        else:
+            size = _shape_bytes(dtype, dims)
+        counts[kind] += 1
+        nbytes[kind] += size
+    return CollectiveStats(counts=counts, bytes_by_kind=nbytes)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    chips: int
+    hlo_flops: float            # total across devices (cost_analysis × chips)
+    hlo_bytes: float
+    collective_bytes: float     # per-device sum over ops
+    model_flops: float          # analytic 6·N·D (or 2·N·D decode)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> dict[str, Any]:
+        return {
+            "name": self.name, "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_flops_ratio,
+        }
+
+
+def roofline_terms(*, name: str, chips: int, per_device_flops: float,
+                   per_device_bytes: float, collective_bytes: float,
+                   model_flops: float) -> RooflineReport:
+    """Three roofline terms in seconds (per step), per DESIGN §8.
+
+    cost_analysis reports per-device numbers for SPMD modules; we scale
+    FLOPs back to cluster totals for the useful-ratio but keep the time
+    terms per-device (they are what bound the step).
+    """
+    return RooflineReport(
+        name=name, chips=chips,
+        hlo_flops=per_device_flops * chips,
+        hlo_bytes=per_device_bytes * chips,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops,
+        compute_s=per_device_flops / PEAK_FLOPS,
+        memory_s=per_device_bytes / HBM_BW,
+        collective_s=collective_bytes / ICI_BW,
+    )

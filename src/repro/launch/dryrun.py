@@ -1,0 +1,150 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape).
+
+The two lines above MUST stay first — jax locks the device count at first
+initialisation, and the production meshes need 512 placeholder host devices.
+Do NOT import this module from tests (they must keep seeing 1 device); run
+it as ``PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+[--mesh single|multi|both]``.
+
+For every combination this script:
+  1. builds the step (FedDec train / prefill / decode) and its
+     ShapeDtypeStruct inputs — no arrays are ever materialised;
+  2. jits with explicit in_shardings on the production mesh and runs
+     ``.lower().compile()`` — sharding mismatches, unsupported collectives
+     or compile-time OOMs fail loudly here;
+  3. records ``compiled.memory_analysis()`` (does it fit HBM?),
+     ``cost_analysis()`` (FLOPs/bytes) and the collective-byte breakdown
+     parsed from the optimized HLO, as JSON under results/dryrun/.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import sharding as shd
+from repro.configs import ARCH_NAMES, SHAPES, get_config
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_lowerable
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train, 2·N_active·D per decoded token."""
+    n_active = cfg.num_active_params()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * 1 * shape.global_batch  # one token per request
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: str | None = RESULTS_DIR) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = shd.axes_for_mesh(mesh)
+    chips = mesh.devices.size
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips}
+    t0 = time.time()
+    try:
+        low = build_lowerable(cfg, shape, axes)
+        lowered = low.lower(mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = analysis.hlo_analysis.analyze_hlo(compiled.as_text())
+        report = analysis.roofline_terms(
+            name=tag, chips=chips, per_device_flops=hlo.flops,
+            per_device_bytes=hlo.traffic_bytes,
+            collective_bytes=hlo.collective_bytes,
+            model_flops=_model_flops(cfg, shape))
+
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "peak_bytes": getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0),
+            },
+            # raw cost_analysis kept for reference; it does NOT weight loop
+            # trip counts (see hlo_analysis docstring) — roofline uses the
+            # loop-aware numbers
+            "cost_analysis_raw": {
+                "flops_per_device": float(cost.get("flops", 0.0)),
+                "bytes_per_device": float(cost.get("bytes accessed", 0.0))},
+            "hlo": {"flops_per_device": hlo.flops,
+                    "traffic_bytes_per_device": hlo.traffic_bytes,
+                    "collective_bytes": hlo.collective_bytes,
+                    "collective_counts": hlo.collective_counts,
+                    "collective_bytes_by_kind": hlo.collective_bytes_by_kind},
+            "roofline": report.row(),
+        })
+        print(f"[ok]   {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s")
+        print(f"       memory_analysis: {mem}")
+        print(f"       hlo(loop-aware): {hlo.summary()}")
+        print(f"       roofline: compute {report.compute_s * 1e3:.2f}ms "
+              f"memory {report.memory_s * 1e3:.2f}ms collective "
+              f"{report.collective_s * 1e3:.2f}ms → {report.dominant}; "
+              f"useful-flops ratio {report.useful_flops_ratio:.2f}")
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()})
+        print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default="all", help="arch id or 'all'")
+    p.add_argument("--shape", default="all",
+                   choices=["all"] + list(SHAPES))
+    p.add_argument("--mesh", default="single",
+                   choices=["single", "multi", "both"])
+    p.add_argument("--out", default=RESULTS_DIR)
+    args = p.parse_args()
+
+    assert len(jax.devices()) == 512, "host-device override failed"
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                rec = run_one(arch, shape, multi, args.out)
+                if rec["status"] != "ok":
+                    failures.append(rec)
+    print(f"\n{len(failures)} failures / "
+          f"{len(archs) * len(shapes) * len(meshes)} combos")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

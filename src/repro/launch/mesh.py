@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the 512-device
+host-platform override in dryrun.py must be set before the first jax call.
+
+Mesh shapes (TPU v5e):
+  single-pod : (16, 16)    axes ('data', 'model')   = 256 chips
+  multi-pod  : (2, 16, 16) axes ('pod', 'data', 'model') = 512 chips
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over the actually-present devices (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

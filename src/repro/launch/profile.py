@@ -1,0 +1,65 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run profiler: hot-op breakdown for one (arch × shape × mesh).
+
+The §Perf loop's measurement tool — compiles the step on the production
+mesh and prints the loop-aware top traffic / collective ops with their
+jaxpr origins, so each optimization hypothesis can be checked against the
+op it targets.
+
+  PYTHONPATH=src python -m repro.launch.profile --arch gemma3-12b \\
+      --shape train_4k [--multi]
+"""
+
+import argparse
+
+from repro import sharding as shd
+from repro.configs import SHAPES, get_config
+from repro.launch.analysis import roofline_terms
+from repro.launch.dryrun import _model_flops
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_lowerable
+
+
+def profile_one(arch: str, shape_name: str, multi_pod: bool = False,
+                top: int = 14, **build_kw):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = shd.axes_for_mesh(mesh)
+    low = build_lowerable(cfg, shape, axes, **build_kw)
+    compiled = low.lower(mesh).compile()
+    costs = analyze_hlo(compiled.as_text())
+    mem = compiled.memory_analysis()
+    rep = roofline_terms(
+        name=f"{arch}:{shape_name}", chips=mesh.devices.size,
+        per_device_flops=costs.flops, per_device_bytes=costs.traffic_bytes,
+        collective_bytes=costs.collective_bytes,
+        model_flops=_model_flops(cfg, shape))
+    print(f"=== {arch} × {shape_name} × "
+          f"{'2x16x16' if multi_pod else '16x16'} ===")
+    print(f"peak HBM/chip: "
+          f"{(mem.temp_size_in_bytes + mem.argument_size_in_bytes) / 1e9:.1f}GB "
+          f"(args {mem.argument_size_in_bytes / 1e9:.1f} + temp "
+          f"{mem.temp_size_in_bytes / 1e9:.1f})")
+    print(f"roofline: compute {rep.compute_s:.3f}s | memory "
+          f"{rep.memory_s:.3f}s | collective {rep.collective_s:.3f}s "
+          f"→ {rep.dominant} | useful {rep.useful_flops_ratio:.2f}")
+    print(costs.profile(top))
+    return rep, costs, mem
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True, choices=list(SHAPES))
+    p.add_argument("--multi", action="store_true")
+    p.add_argument("--top", type=int, default=14)
+    args = p.parse_args()
+    profile_one(args.arch, args.shape, args.multi, args.top)
+
+
+if __name__ == "__main__":
+    main()

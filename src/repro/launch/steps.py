@@ -1,0 +1,307 @@
+"""Step builders binding (architecture × shape × mesh) to executable fns.
+
+Three step kinds, matching the assigned shapes:
+
+  * train  (train_4k)    — the FedDec step (Alg. 1) over stacked per-agent
+    params: vmapped fwd/bwd, local SGD, gossip, periodic server round.
+  * prefill (prefill_32k) — single forward over the full sequence
+    (inference prefill; unstacked serving params).
+  * decode (decode_32k, long_500k) — one-token serve step against KV/state
+    caches of length seq_len.
+
+Everything here returns *unjitted* python callables plus the matching
+ShapeDtypeStruct/PartitionSpec trees; launch/dryrun.py owns jit/lower/compile
+and launch/train.py owns the real training loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+from repro.configs.base import ArchConfig, FedConfig
+from repro.configs.shapes import ShapeConfig
+from repro.core import feddec, theory, topology as topo
+from repro.core.mixing import MixingDistribution
+from repro.launch import specs as specs_lib
+from repro.models import build_model
+
+__all__ = ["build_fed_setup", "Lowerable", "build_train_lowerable",
+           "build_prefill_lowerable", "build_decode_lowerable",
+           "build_lowerable"]
+
+
+def adapt_for_mesh(cfg: ArchConfig, axes: shd.MeshAxes) -> ArchConfig:
+    """Mesh-dependent config tweaks applied at lowering time only.
+
+    When the head count doesn't divide the TP axis, QKV weights are
+    contracting-dim-sharded and must gather-on-use (the smoke tests run the
+    raw config on one device, where the constraint would be a no-op anyway
+    but the flag stays off to keep their HLO clean).
+    """
+    if (cfg.attention_kind == "gqa"
+            and cfg.num_heads % axes.model_size != 0):
+        cfg = dataclasses.replace(cfg, attn_weight_gather=True)
+    cfg = dataclasses.replace(cfg, tp_axis_name=axes.model_axis)
+    return cfg
+
+
+def build_fed_setup(cfg: ArchConfig, axes: shd.MeshAxes,
+                    fed: FedConfig | None = None):
+    """(FedDecConfig, n_agents) for this arch on this mesh."""
+    n = shd.n_agents_for(cfg, axes)
+    fed = fed or FedConfig()
+    if fed.graph.startswith("ring"):
+        k = int(fed.graph[4:] or 2)
+        graph = topo.ring_graph(n, k=min(k, (n - 1) // 2 or 1))
+    elif fed.graph == "full":
+        graph = topo.fully_connected_graph(n)
+    elif fed.graph.startswith("geo"):
+        graph = topo.geographic_graph(n, float(fed.graph[3:]), seed=0)
+    elif fed.graph.startswith("er"):
+        graph = topo.erdos_renyi_graph(n, float(fed.graph[2:]), seed=0)
+    else:
+        raise ValueError(f"unknown graph {fed.graph!r}")
+    mixing = MixingDistribution(graph, p_fail=fed.p_fail,
+                                scheme="metropolis")
+    fcfg = feddec.FedDecConfig(mixing=mixing, h=fed.h,
+                               k=min(fed.k, n), gossip_impl="dense")
+    return fcfg, n
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowerable:
+    """A step function plus everything needed to lower it on a mesh."""
+
+    fn: Callable                  # positional-args step
+    args_struct: tuple            # ShapeDtypeStructs per arg
+    in_specs: tuple               # PartitionSpecs per arg
+    out_specs: Any = None         # PartitionSpecs for outputs (None ⇒ XLA)
+    donate_argnums: tuple = ()
+    name: str = "step"
+
+    def lower(self, mesh: jax.sharding.Mesh):
+        def shard(tree):
+            return jax.tree.map(lambda s: jax.NamedSharding(mesh, s), tree,
+                                is_leaf=lambda x: isinstance(x, P))
+        kw = {}
+        if self.out_specs is not None:
+            kw["out_shardings"] = shard(self.out_specs)
+        jitted = jax.jit(self.fn, in_shardings=shard(self.in_specs),
+                         donate_argnums=self.donate_argnums, **kw)
+        with jax.set_mesh(mesh):
+            return jitted.lower(*self.args_struct)
+
+
+def _key_struct():
+    return jax.eval_shape(lambda: jax.random.key(0))
+
+
+def _microbatch_grad(base_grad: Callable, num_micro: int) -> Callable:
+    """Gradient accumulation: split the per-agent batch into ``num_micro``
+    sequential microbatches (lax.scan), averaging loss and grads.
+
+    This bounds live activations to one microbatch — the standard memory
+    lever when per-device HBM can't hold a full step's remat carries.
+    """
+    if num_micro <= 1:
+        return base_grad
+
+    def split(path, x):
+        names = [getattr(p, "key", str(p)) for p in path]
+        bd = 1 if "mrope_positions" in names else 0  # per-agent (3, B, S)
+        assert x.shape[bd] % num_micro == 0, (names, x.shape, num_micro)
+        shape = (x.shape[:bd] + (num_micro, x.shape[bd] // num_micro)
+                 + x.shape[bd + 1:])
+        return jnp.moveaxis(x.reshape(shape), bd, 0)
+
+    def grad_fn(params, batch, key):
+        micro = jax.tree_util.tree_map_with_path(split, batch)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = base_grad(params, mb, key)
+            grad_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                    grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (loss, grads), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), micro)
+        inv = 1.0 / num_micro
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    return grad_fn
+
+
+def _default_microbatches(cfg: ArchConfig, per_agent_batch: int,
+                          axes: shd.MeshAxes) -> int:
+    """Pick num_micro so ~one sequence per device is live per microbatch."""
+    if cfg.fed_agent_layout == "sharded":
+        per_device = per_agent_batch            # batch replicated over model
+    else:
+        per_device = max(1, per_agent_batch // axes.data_size)
+    m = min(per_agent_batch, per_device)
+    while per_agent_batch % m:
+        m -= 1
+    return max(1, m)
+
+
+def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
+                          axes: shd.MeshAxes, *,
+                          fed: FedConfig | None = None,
+                          lr: float = 1e-2,
+                          microbatches: int | None = None,
+                          mesh: jax.sharding.Mesh | None = None) -> Lowerable:
+    """The FedDec training step at production shape.
+
+    ``fed.gossip_impl='permute'`` selects the neighbour-only ppermute gossip
+    schedule (needs ``mesh``; sharded agent layout only) — the optimized
+    path of §Perf iteration A1.  Default is the paper-faithful dense einsum.
+    """
+    cfg = adapt_for_mesh(cfg, axes)
+    if cfg.fed_agent_layout == "replicated":
+        # replicated-layout archs shard the per-agent batch over 'data'
+        # (sharded-layout agents occupy it instead) — the activation
+        # constraints must name it or they force batch replication
+        # (§Perf iteration C3)
+        cfg = dataclasses.replace(cfg, batch_axis_name="data")
+    model = build_model(cfg)
+    fcfg, n_agents = build_fed_setup(cfg, axes, fed)
+    per_agent = shape.global_batch // n_agents
+    if microbatches is None:
+        microbatches = _default_microbatches(cfg, per_agent, axes)
+    grad_fn = _microbatch_grad(model.grad_fn(), microbatches)
+
+    params_struct = jax.eval_shape(model.init, jax.random.key(0))
+    state_struct = jax.eval_shape(
+        lambda p: feddec.init_state(p, n_agents), params_struct)
+    batch_struct = specs_lib.train_batch_specs(cfg, shape, n_agents)
+
+    param_specs = shd.param_pspecs(cfg, state_struct.params, axes)
+
+    gossip_fn = None
+    if fed is not None and fed.gossip_impl == "permute":
+        if mesh is None or cfg.fed_agent_layout != "sharded":
+            raise ValueError("permute gossip needs a mesh and the sharded "
+                             "agent layout")
+        from repro.core import gossip as gossip_lib
+        agent_ax = axes.data_axes if len(axes.data_axes) > 1 \
+            else axes.data_axes[0]
+        exch = jnp.bfloat16 if getattr(fed, "gossip_dtype", "f32") == "bf16" \
+            else None
+        gossip_fn = gossip_lib.make_permute_gossip(
+            fcfg.mixing.graph, mesh, agent_ax, leaf_specs=param_specs,
+            exchange_dtype=exch)
+
+    step = feddec.make_feddec_step(
+        fcfg, grad_fn, lambda t: jnp.asarray(lr, jnp.float32),
+        gossip_fn=gossip_fn, jit=False)
+    state_specs = feddec.FedState(params=param_specs, step=P(),
+                                  opt_state=())
+    batch_specs = shd.batch_pspecs(cfg, batch_struct, axes, stacked=True)
+
+    return Lowerable(
+        fn=step,
+        args_struct=(state_struct, batch_struct, _key_struct()),
+        in_specs=(state_specs, batch_specs, P()),
+        out_specs=(state_specs, {"loss": P(), "eta": P()}),
+        donate_argnums=(0,),
+        name=f"train:{cfg.name}:{shape.name}",
+    )
+
+
+def build_prefill_lowerable(cfg: ArchConfig, shape: ShapeConfig,
+                            axes: shd.MeshAxes) -> Lowerable:
+    """Inference prefill: full-sequence forward on serving params."""
+    cfg = adapt_for_mesh(
+        dataclasses.replace(cfg, param_dtype=jnp.bfloat16,
+                            batch_axis_name="data"), axes)
+    model = build_model(cfg)
+    vocab_ok = cfg.vocab_size % axes.model_size == 0
+    batch_ok = shape.global_batch % axes.data_size == 0
+    dp_ax = axes.data_axes if len(axes.data_axes) > 1 else axes.data_axes[0]
+    logits_cons = P(dp_ax if batch_ok else None, None,
+                    axes.model_axis if vocab_ok else None)
+
+    def prefill(params, batch):
+        logits, _ = model.logits(params, batch, remat=False)
+        # keep the (B, S, V) logits vocab-sharded: without this XLA
+        # materialises a full-vocab f32 temp per device (~130 GB at a 262k
+        # vocab) before the output resharding (§Perf iteration B3)
+        return jax.lax.with_sharding_constraint(logits, logits_cons)
+
+    params_struct = jax.eval_shape(model.init, jax.random.key(0))
+    batch_struct = specs_lib._structs(specs_lib.batch_schema(
+        cfg, None, shape.global_batch, shape.seq_len))
+    param_specs = shd.serve_param_pspecs(cfg, params_struct, axes)
+    batch_specs = shd.batch_pspecs(cfg, batch_struct, axes, stacked=False)
+    dp = axes.data_axes if len(axes.data_axes) > 1 else axes.data_axes[0]
+    logits_spec = P(dp if shape.global_batch % axes.data_size == 0 else None,
+                    None,
+                    axes.model_axis
+                    if cfg.vocab_size % axes.model_size == 0 else None)
+
+    return Lowerable(
+        fn=prefill,
+        args_struct=(params_struct, batch_struct),
+        in_specs=(param_specs, batch_specs),
+        out_specs=logits_spec,
+        name=f"prefill:{cfg.name}:{shape.name}",
+    )
+
+
+def build_decode_lowerable(cfg: ArchConfig, shape: ShapeConfig,
+                           axes: shd.MeshAxes) -> Lowerable:
+    """One-token decode with a seq_len KV/state cache."""
+    cfg = adapt_for_mesh(
+        dataclasses.replace(cfg, param_dtype=jnp.bfloat16,
+                            batch_axis_name="data"), axes)
+    model = build_model(cfg)
+    long_variant = shape.needs_subquadratic
+
+    def serve_step(params, batch, caches):
+        enc_out = batch.get("enc_out")
+        core = {k: v for k, v in batch.items() if k != "enc_out"}
+        logits, new_caches = model.decode_step(
+            params, core, caches, enc_out=enc_out,
+            long_variant=long_variant)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)
+        return next_tok, new_caches
+
+    params_struct = jax.eval_shape(model.init, jax.random.key(0))
+    batch_struct = specs_lib.decode_batch_specs(cfg, shape)
+    caches_struct = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len,
+                                  long_variant=long_variant))
+
+    param_specs = shd.serve_param_pspecs(cfg, params_struct, axes)
+    batch_specs = shd.batch_pspecs(cfg, batch_struct, axes, stacked=False)
+    cache_specs = shd.cache_pspecs(cfg, caches_struct, axes)
+    dp = axes.data_axes if len(axes.data_axes) > 1 else axes.data_axes[0]
+    tok_spec = P(dp if shape.global_batch % axes.data_size == 0 else None)
+
+    return Lowerable(
+        fn=serve_step,
+        args_struct=(params_struct, batch_struct, caches_struct),
+        in_specs=(param_specs, batch_specs, cache_specs),
+        out_specs=(tok_spec, cache_specs),
+        donate_argnums=(2,),
+        name=f"decode:{cfg.name}:{shape.name}",
+    )
+
+
+def build_lowerable(cfg: ArchConfig, shape: ShapeConfig,
+                    axes: shd.MeshAxes, **kw) -> Lowerable:
+    if shape.kind == "train":
+        return build_train_lowerable(cfg, shape, axes, **kw)
+    kw.pop("fed", None), kw.pop("mesh", None)
+    if shape.kind == "prefill":
+        return build_prefill_lowerable(cfg, shape, axes)
+    return build_decode_lowerable(cfg, shape, axes)

@@ -1,0 +1,10 @@
+"""Model substrate: all assigned architectures from one generic stack."""
+
+from repro.models import (attention, griffin, layers, mla, model, moe, ssm,
+                          transformer)
+from repro.models.model import Model, build_model
+
+__all__ = [
+    "attention", "griffin", "layers", "mla", "model", "moe", "ssm",
+    "transformer", "Model", "build_model",
+]

@@ -1,0 +1,136 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = σ(W_a x_t + b_a)                    recurrence gate
+    i_t = σ(W_x x_t + b_x)                    input gate
+    a_t = exp(−c · r_t · softplus(Λ))         input-dependent decay, c = 8
+    h_t = a_t h_{t−1} + √(1 − a_t²) · (i_t · x_t)
+
+The recurrence is associative in (a, b) pairs, so prefill runs as a
+``jax.lax.associative_scan`` (O(log S) depth — the TPU-friendly formulation;
+the Pallas kernel in kernels/rglru_scan.py instead does a VMEM-blocked
+sequential scan, trading depth for locality).  ``rglru_scan`` here is the
+canonical jnp implementation and the kernel's oracle.
+
+The full recurrent block (used in recurrentgemma's 2:1 pattern with local
+attention) is: two d→width projections; branch 1 → GeLU; branch 2 → causal
+conv1d(width 4) → RG-LRU; elementwise merge; width→d output projection.
+
+Decode state is O(1): (conv ring, h) — ``long_500k`` is native.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+__all__ = ["init_rglru_block", "rglru_block", "init_rglru_cache",
+           "rglru_scan", "rglru_gates"]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def rglru_gates(params: dict, x: jax.Array):
+    """Compute (log_a, gated_input) for the scan.  x: (B, S, W)."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(layers.dense(params["w_a"], x).astype(f32))
+    i = jax.nn.sigmoid(layers.dense(params["w_x"], x).astype(f32))
+    log_a = -_C * r * jax.nn.softplus(params["lam"].astype(f32))  # ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * i * x.astype(f32)
+
+
+def rglru_scan(a: jax.Array, bx: jax.Array,
+               h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t h_{t−1} + bx_t via associative scan.
+
+    Args:
+      a:  (B, S, W) decays in (0, 1].
+      bx: (B, S, W) gated inputs.
+      h0: (B, W) initial state or None.
+
+    Returns:
+      (h (B, S, W) f32, h_last (B, W) f32)
+    """
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(bx.dtype))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h, h[:, -1]
+
+
+def init_rglru_block(key, d: int, width: int, conv_width: int = 4,
+                     dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    # Λ init so decays a^c land in (0.9, 0.999) — Griffin appendix A
+    u = jax.random.uniform(ks[4], (width,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^{-1}(−log u / c)
+    return {
+        "proj_gelu": layers.init_dense(ks[0], (d, width), dtype),
+        "proj_rec": layers.init_dense(ks[1], (d, width), dtype),
+        "w_a": layers.init_dense(ks[2], (width, width), dtype, bias=True),
+        "w_x": layers.init_dense(ks[3], (width, width), dtype, bias=True),
+        "lam": lam.astype(jnp.float32),
+        "conv_w": (jax.random.normal(ks[5], (conv_width, width)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "out_proj": layers.init_dense(ks[6], (width, d), dtype),
+    }
+
+
+def init_rglru_cache(batch: int, width: int, conv_width: int = 4,
+                     dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, width), dtype),
+        "h": jnp.zeros((batch, width), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, bias, cache):
+    k = w.shape[0]
+    pad = jnp.zeros_like(x[:, : k - 1]) if cache is None else \
+        cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    new_cache = xp[:, -(k - 1):]
+    y = sum(xp[:, i: i + x.shape[1]] * w[i][None, None, :] for i in range(k))
+    return y + bias, new_cache
+
+
+def rglru_block(params: dict, x: jax.Array, *,
+                cache: dict | None = None,
+                compute_dtype=jnp.bfloat16,
+                use_pallas: bool = False) -> tuple[jax.Array, dict | None]:
+    """Apply the Griffin recurrent block.  x: (B, S, d)."""
+    gate = jax.nn.gelu(layers.dense(params["proj_gelu"], x,
+                                    compute_dtype=compute_dtype))
+    rec = layers.dense(params["proj_rec"], x, compute_dtype=compute_dtype)
+    conv_cache = cache["conv"] if cache is not None else None
+    rec, new_conv = _causal_conv(rec, params["conv_w"].astype(compute_dtype),
+                                 params["conv_b"].astype(compute_dtype),
+                                 conv_cache)
+
+    a, bx = rglru_gates(params, rec)
+    if cache is None:
+        if use_pallas:
+            from repro.kernels import ops as kops
+            h, _ = kops.rglru_scan(a, bx)
+        else:
+            h, _ = rglru_scan(a, bx)
+        new_cache = None
+    else:
+        h_new = a[:, 0] * cache["h"] + bx[:, 0]
+        h = h_new[:, None]
+        new_cache = {"conv": new_conv, "h": h_new}
+
+    y = h.astype(compute_dtype) * gate
+    out = layers.dense(params["out_proj"], y, compute_dtype=compute_dtype)
+    return out, new_cache

@@ -1,0 +1,11 @@
+"""Optimizers and LR schedules (minimal optax-style, self-contained)."""
+
+from repro.optim.optimizers import (Optimizer, adamw, momentum_sgd, sgd,
+                                    clip_by_global_norm)
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   paper_diminishing)
+
+__all__ = [
+    "Optimizer", "sgd", "momentum_sgd", "adamw", "clip_by_global_norm",
+    "constant", "cosine_decay", "linear_warmup", "paper_diminishing",
+]

@@ -1,0 +1,101 @@
+"""Self-contained functional optimizers (optax-style (init, update) pairs).
+
+FedDec's theory is stated for plain SGD with the diminishing stepsize of
+Theorem 1 — that is the default used by the paper-faithful runs.  AdamW and
+momentum are provided for the beyond-paper LM experiments (the FedDec step
+is optimizer-agnostic: gossip averages parameters, the local update can be
+any optimizer — this matches how FedAvg is deployed in practice).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "momentum_sgd", "adamw",
+           "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """(init, update) pair.  update returns (new_params, new_state)."""
+
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # signature: update(params, grads, state, lr)
+
+
+def sgd() -> Optimizer:
+    """z ← z − η g  (the paper's local update, Alg. 1 line 5)."""
+    def init(params):
+        del params
+        return ()
+
+    def update(params, grads, state, lr):
+        new = jax.tree.map(
+            lambda p, g: p - lr.astype(p.dtype) * g.astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum_sgd(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                            params)
+
+    def update(params, grads, state, lr):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32),
+                             state, grads)
+        step_dir = jax.tree.map(
+            lambda m, g: beta * m + g.astype(jnp.float32), new_m, grads) \
+            if nesterov else new_m
+        new_p = jax.tree.map(
+            lambda p, d: p - lr.astype(p.dtype) * d.astype(p.dtype),
+            params, step_dir)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)  # noqa: E731
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** cf
+        bc2 = 1 - b2 ** cf
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return p - (lr * step).astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, m, v)
+        return new_p, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads)

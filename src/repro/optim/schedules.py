@@ -1,0 +1,37 @@
+"""Learning-rate schedules (step → η_t)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "paper_diminishing", "linear_warmup", "cosine_decay"]
+
+
+def constant(lr: float):
+    return lambda t: jnp.asarray(lr, jnp.float32)
+
+
+def paper_diminishing(mu: float, gamma: float):
+    """η_t = 2/(μ(γ+t)) — Theorem 1's schedule (t counts from 1)."""
+    def fn(t):
+        return 2.0 / (mu * (gamma + t))
+    return fn
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(t):
+        frac = jnp.minimum(t / max(warmup_steps, 1), 1.0)
+        return jnp.asarray(peak, jnp.float32) * frac
+    return fn
+
+
+def cosine_decay(peak: float, total_steps: int, warmup_steps: int = 0,
+                 floor: float = 0.0):
+    def fn(t):
+        warm = jnp.minimum(t / max(warmup_steps, 1), 1.0) if warmup_steps \
+            else 1.0
+        prog = jnp.clip((t - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return (floor + (peak - floor) * cos) * warm
+    return fn

@@ -1,0 +1,147 @@
+"""Integration tests: FedDec/FedAvg end-to-end on the paper's linreg problem."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FedDecConfig, init_state, make_feddec_step, make_fedavg_step
+from repro.core import theory, topology as topo
+from repro.core.mixing import MixingDistribution
+from repro.data import linreg
+
+
+@pytest.fixture(scope="module")
+def problem():
+    # smaller heterogeneity factor keeps float32 happy in tests
+    return linreg.make_problem(n=10, seed=0, c_base=1.5)
+
+
+def _setup(problem, h=10, k=2, r=0.6, p_fail=0.0):
+    g = topo.geographic_graph(problem.n, r, seed=3)
+    md = MixingDistribution(g, p_fail=p_fail,
+                            scheme="metropolis" if p_fail else "laplacian")
+    cfg = FedDecConfig(mixing=md, h=h, k=k)
+    gam = theory.gamma(problem.l_smooth, problem.mu, h)
+    lr = theory.paper_stepsize(problem.mu, gam)
+    grad_fn = linreg.make_grad_fn(problem.m_rows)
+    return cfg, lr, grad_fn
+
+
+def _run(step, problem, t_steps, seed=0):
+    state = init_state(jnp.zeros(problem.d), problem.n)
+    key = jax.random.key(seed)
+    for _ in range(t_steps):
+        key, kb = jax.random.split(key)
+        batch = linreg.sample_minibatch(problem, kb, m=1)
+        state, metrics = step(state, batch, jax.random.key(seed + 99))
+    return state, metrics
+
+
+class TestFedDecStep:
+    def test_state_shapes_and_finite(self, problem):
+        cfg, lr, grad_fn = _setup(problem)
+        step = make_feddec_step(cfg, grad_fn, lr)
+        state, metrics = _run(step, problem, 5)
+        assert state.params.shape == (problem.n, problem.d)
+        assert int(state.step) == 6
+        assert np.isfinite(np.asarray(state.params)).all()
+        assert np.isfinite(float(metrics["loss"]))
+
+    def test_stepsize_schedule(self, problem):
+        cfg, lr, _ = _setup(problem, h=10)
+        gam = theory.gamma(problem.l_smooth, problem.mu, 10)
+        assert float(lr(1)) == pytest.approx(2 / (problem.mu * (gam + 1)))
+        assert float(lr(100)) < float(lr(1))
+        # feasibility conditions used in the proof
+        assert float(lr(1)) <= 1 / (4 * problem.l_smooth) + 1e-9
+        assert float(lr(1)) <= 2 * float(lr(1 + 10)) + 1e-9
+
+    def test_server_round_consensus(self, problem):
+        """Right after t+1 ∈ ℋ all agents hold the same parameters."""
+        cfg, lr, grad_fn = _setup(problem, h=5)
+        step = make_feddec_step(cfg, grad_fn, lr)
+        state, _ = _run(step, problem, 4)  # t: 1→5, server at t+1=5
+        p = np.asarray(state.params)
+        np.testing.assert_allclose(p, np.broadcast_to(p[:1], p.shape),
+                                   atol=1e-5)
+
+    def test_no_consensus_between_rounds(self, problem):
+        cfg, lr, grad_fn = _setup(problem, h=100)
+        step = make_feddec_step(cfg, grad_fn, lr)
+        state, _ = _run(step, problem, 6)
+        p = np.asarray(state.params)
+        assert not np.allclose(p[0], p[1], atol=1e-8)  # heterogeneous data
+
+    def test_server_disabled(self, problem):
+        cfg, lr, grad_fn = _setup(problem, h=5)
+        cfg = FedDecConfig(mixing=cfg.mixing, h=5, k=2, server_enabled=False)
+        step = make_feddec_step(cfg, grad_fn, lr)
+        state, _ = _run(step, problem, 10)
+        assert np.isfinite(np.asarray(state.params)).all()
+
+
+class TestConvergence:
+    def test_feddec_converges(self, problem):
+        cfg, lr, grad_fn = _setup(problem)
+        step = make_feddec_step(cfg, grad_fn, lr)
+        s0 = init_state(jnp.zeros(problem.d), problem.n)
+        sub0 = float(problem.suboptimality(s0.params))
+        state, _ = _run(step, problem, 800)
+        subT = float(problem.suboptimality(state.params))
+        assert subT < 0.05 * sub0
+
+    def test_feddec_beats_fedavg_large_h(self, problem):
+        """The paper's headline claim, H large ⇒ FedDec ≫ FedAvg (Fig. 4)."""
+        h = 50
+        cfg, lr, grad_fn = _setup(problem, h=h)
+        step_dec = make_feddec_step(cfg, grad_fn, lr)
+        step_avg = make_fedavg_step(problem.n, grad_fn, lr, h=h, k=2)
+        sd, _ = _run(step_dec, problem, 600, seed=1)
+        sa, _ = _run(step_avg, problem, 600, seed=1)
+        sub_dec = float(problem.suboptimality(sd.params))
+        sub_avg = float(problem.suboptimality(sa.params))
+        assert sub_dec < sub_avg
+
+    def test_link_failures_still_converge(self, problem):
+        cfg, lr, grad_fn = _setup(problem, p_fail=0.5)
+        step = make_feddec_step(cfg, grad_fn, lr)
+        s0 = init_state(jnp.zeros(problem.d), problem.n)
+        state, _ = _run(step, problem, 800)
+        assert float(problem.suboptimality(state.params)) < \
+            0.1 * float(problem.suboptimality(s0.params))
+
+
+class TestTheory:
+    def test_bound_constants(self):
+        a = theory.alpha(0.64)
+        assert a == pytest.approx(0.64 / 0.36)
+        g = theory.gamma(l_smooth=4.0, mu=0.5, h=100)
+        assert g == 100  # H dominates
+        g2 = theory.gamma(l_smooth=100.0, mu=0.5, h=10)
+        assert g2 == pytest.approx(8 * 200 - 1)
+
+    def test_feddec_B_below_fedavg_C(self):
+        """O(αH) < O(H²) whenever α < H — the paper's Thm-1-vs-[16] gap."""
+        kw = dict(k=2, g2=1.0, l_smooth=1.0, gamma_heterogeneity=1.0,
+                  sigma_bar2=1.0, n=20)
+        b = theory.bound_constant_B(alpha_val=1.8, h=100, **kw)
+        c = theory.fedavg_bound_constant(h=100, **kw)
+        assert b < c
+
+    def test_bound_decreases_in_t(self):
+        inp = theory.TheoremInputs(
+            l_smooth=1.0, mu=0.1, g2=1.0, sigma_bar2=0.5,
+            gamma_heterogeneity=1.0, n=20, k=2, h=10, lambda2_hat=0.5,
+            dist0_sq=4.0)
+        curve = theory.theorem1_curve(inp, 100)
+        assert (np.diff(curve) < 0).all()
+
+    def test_bound_improves_with_connectivity(self):
+        base = dict(l_smooth=1.0, mu=0.1, g2=1.0, sigma_bar2=0.5,
+                    gamma_heterogeneity=1.0, n=20, k=2, h=10, dist0_sq=4.0)
+        dense = theory.theorem1_curve(
+            theory.TheoremInputs(lambda2_hat=0.1, **base), 50)
+        sparse = theory.theorem1_curve(
+            theory.TheoremInputs(lambda2_hat=0.9, **base), 50)
+        assert (dense <= sparse).all()

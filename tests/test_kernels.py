@@ -1,0 +1,199 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs ref.py.
+
+Every kernel is exercised through repro.kernels.ops (the public wrappers,
+which select interpret mode automatically off-TPU) against the pure-jnp
+oracle, across the shape/dtype grid below.  Chunked/associative forms are
+additionally validated against independent sequential recurrences.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _tol(dtype):
+    return _TOL[dtype]
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,hd", [
+    (1, 128, 4, 4, 64),     # MHA
+    (2, 256, 8, 2, 64),     # GQA 4:1
+    (1, 256, 4, 1, 128),    # MQA, wide head
+    (2, 128, 2, 2, 32),
+])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_sweep(b, s, h, kv, hd, window, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), dtype)
+    out = ops.flash_attention(q, k, v, window=window, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_attention_block_shape_invariance():
+    """Output must not depend on the BlockSpec tiling."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    o1 = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    o2 = ops.flash_attention(q, k, v, block_q=128, block_k=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_flash_attention_window_blocks_old_tokens():
+    """With window=1 each position only sees itself (scores degenerate)."""
+    q = jnp.ones((1, 64, 1, 32))
+    k = jax.random.normal(jax.random.key(2), (1, 64, 1, 32))
+    v = jax.random.normal(jax.random.key(3), (1, 64, 1, 32))
+    out = ops.flash_attention(q, k, v, window=1, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(out[0, :, 0]),
+                               np.asarray(v[0, :, 0]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gossip mix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d", [(8, 2048), (16, 4096), (20, 1000),
+                                 (32, 2048), (5, 257)])
+def test_gossip_mix_sweep(n, d, dtype):
+    kw, kx = jax.random.split(jax.random.key(0))
+    w = jax.random.uniform(kw, (n, n), jnp.float32)
+    w = (w / w.sum(1, keepdims=True)).astype(dtype)
+    x = jax.random.normal(kx, (n, d), dtype)
+    y = ops.gossip_mix(w, x, block_d=512)
+    expect = ref.gossip_mix_ref(w, x)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=_tol(dtype) * 4, rtol=_tol(dtype) * 4)
+
+
+def test_gossip_mix_tree_matches_dense():
+    from repro.core.gossip import gossip_mix_dense
+    w = jnp.eye(8) * 0.5 + 0.5 / 8
+    tree = {"a": jax.random.normal(jax.random.key(1), (8, 3, 5)),
+            "b": jax.random.normal(jax.random.key(2), (8, 17))}
+    y1 = ops.gossip_mix_tree(w, tree)
+    y2 = gossip_mix_dense(w, tree)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(y1[k]), np.asarray(y2[k]),
+                                   atol=1e-5)
+
+
+def test_gossip_mix_identity_preserves():
+    x = jax.random.normal(jax.random.key(3), (8, 300))
+    y = ops.gossip_mix(jnp.eye(8), x, block_d=128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+def _ssd_inputs(b, s, h, p, n, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, s, n), dtype)
+    c = jax.random.normal(ks[4], (b, s, n), dtype)
+    return x, dt, a, bb, c
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 16, 16, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 96, 2, 64, 128, 16),   # mamba2-like head_dim/state ratio
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk, dtype):
+    x, dt, a, bb, c = _ssd_inputs(b, s, h, p, n, dtype)
+    y, _ = ops.ssd_scan(x, dt, a, bb, c, chunk=chunk)
+    expect, _ = ref.ssd_sequential_ref(x, dt, a, bb, c)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=_tol(dtype) * 10, rtol=5e-2)
+
+
+def test_ssd_chunked_matches_sequential_and_decode():
+    """Chunked == sequential == token-by-token decode (the model's 3 paths)."""
+    from repro.models.ssm import ssd_decode_step
+    x, dt, a, bb, c = _ssd_inputs(1, 32, 2, 8, 4, jnp.float32, seed=7)
+    y_chk, st_chk = ref.ssd_chunked_ref(x, dt, a, bb, c, chunk=8)
+    y_seq, st_seq = ref.ssd_sequential_ref(x, dt, a, bb, c)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_seq),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_chk), np.asarray(st_seq),
+                               atol=1e-4)
+    st = jnp.zeros((1, 2, 8, 4))
+    ys = []
+    for t in range(32):
+        yt, st = ssd_decode_step(st, x[:, t], dt[:, t], a, bb[:, t], c[:, t])
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_seq), atol=1e-4)
+
+
+def test_ssd_chunk_size_invariance():
+    x, dt, a, bb, c = _ssd_inputs(1, 64, 2, 16, 8, jnp.float32, seed=3)
+    y1, _ = ops.ssd_scan(x, dt, a, bb, c, chunk=8)
+    y2, _ = ops.ssd_scan(x, dt, a, bb, c, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,w,bs,bw", [
+    (1, 64, 32, 16, 16),
+    (2, 100, 48, 32, 16),    # ragged: S and W padded internally
+    (1, 256, 128, 64, 128),
+])
+def test_rglru_scan_sweep(b, s, w, bs, bw, dtype):
+    ka, kb = jax.random.split(jax.random.key(0))
+    a = jax.nn.sigmoid(jax.random.normal(ka, (b, s, w))).astype(dtype)
+    bx = jax.random.normal(kb, (b, s, w), dtype)
+    h, h_last = ops.rglru_scan(a, bx, block_s=bs, block_w=bw)
+    expect, expect_last = ref.rglru_sequential_ref(a, bx)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(expect),
+                               atol=_tol(dtype) * 5, rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(expect_last),
+                               atol=_tol(dtype) * 5, rtol=2e-2)
+
+
+def test_rglru_assoc_matches_sequential():
+    ka, kb = jax.random.split(jax.random.key(1))
+    a = jax.nn.sigmoid(jax.random.normal(ka, (2, 77, 9)))
+    bx = jax.random.normal(kb, (2, 77, 9))
+    h1, _ = ref.rglru_assoc_ref(a, bx)
+    h2, _ = ref.rglru_sequential_ref(a, bx)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+
+
+def test_rglru_decay_zero_is_passthrough():
+    a = jnp.zeros((1, 16, 8))
+    bx = jax.random.normal(jax.random.key(2), (1, 16, 8))
+    h, _ = ops.rglru_scan(a, bx, block_s=8, block_w=8)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(bx), atol=1e-6)

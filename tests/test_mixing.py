@@ -1,0 +1,92 @@
+"""Tests for the mixing-matrix distribution 𝒲 (Assumption 2 invariants)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+from repro.core.mixing import MixingDistribution, identity_mixing
+
+
+def _dist(p_fail=0.0, n=12, r=0.5, seed=0, scheme="laplacian"):
+    g = topo.geographic_graph(n, r, seed=seed)
+    return MixingDistribution(graph=g, p_fail=p_fail, scheme=scheme)
+
+
+class TestSampling:
+    def test_fixed_w_when_no_failures(self):
+        md = _dist(0.0)
+        w1 = md.sample(jax.random.key(0))
+        w2 = md.sample(jax.random.key(1))
+        np.testing.assert_allclose(w1, w2)
+        np.testing.assert_allclose(np.asarray(w1), md.fixed_w, atol=1e-6)
+
+    @given(st.floats(0.05, 0.9), st.integers(0, 10))
+    @settings(max_examples=15, deadline=None)
+    def test_assumption2_invariants(self, p_fail, seed):
+        """Every realisation: symmetric, doubly stochastic, graph-supported."""
+        md = _dist(p_fail)
+        w = np.asarray(md.sample(jax.random.key(seed)), dtype=np.float64)
+        np.testing.assert_allclose(w, w.T, atol=1e-5)
+        np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-5)
+        np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-5)
+        off = ~np.eye(md.n, dtype=bool)
+        assert (w[off] >= -1e-7).all()
+        assert (np.abs(w[off & ~md.graph.adjacency]) < 1e-7).all()
+
+    def test_failures_drop_edges(self):
+        md = _dist(0.8)
+        w = np.asarray(md.sample(jax.random.key(3)))
+        live = (np.abs(w) > 1e-9) & ~np.eye(md.n, dtype=bool)
+        assert live.sum() < md.graph.adjacency.sum()  # some links down
+
+    def test_sample_batch_shape(self):
+        md = _dist(0.3)
+        ws = md.sample_batch(jax.random.key(0), 7)
+        assert ws.shape == (7, md.n, md.n)
+
+
+class TestSpectra:
+    def test_lambda2_hat_fixed_equals_lambda2_sq(self):
+        md = _dist(0.0)
+        l2 = topo.lambda2(md.fixed_w)
+        assert md.lambda2_hat() == pytest.approx(l2 ** 2, rel=1e-6)
+
+    def test_failures_hurt_connectivity(self):
+        """More failures ⇒ larger |λ̂₂| ⇒ larger α (slower consensus)."""
+        g = topo.geographic_graph(12, 0.5, seed=1)
+        lo = MixingDistribution(g, p_fail=0.1, scheme="metropolis")
+        hi = MixingDistribution(g, p_fail=0.7, scheme="metropolis")
+        k = jax.random.key(0)
+        assert lo.lambda2_hat(k, 2048) < hi.lambda2_hat(k, 2048)
+
+    def test_alpha_matches_formula(self):
+        md = _dist(0.0)
+        lam = md.lambda2_hat()
+        assert md.alpha() == pytest.approx(lam / (1 - lam), rel=1e-6)
+
+
+class TestIdentity:
+    def test_identity_mixing_is_identity(self):
+        md = identity_mixing(5)
+        w = np.asarray(md.sample(jax.random.key(0)))
+        np.testing.assert_allclose(w, np.eye(5), atol=1e-7)
+
+    def test_invalid_p_fail(self):
+        g = topo.ring_graph(4)
+        with pytest.raises(ValueError):
+            MixingDistribution(graph=g, p_fail=1.0)
+
+
+class TestTraceability:
+    def test_sample_inside_jit(self):
+        md = _dist(0.4)
+
+        @jax.jit
+        def f(key):
+            return md.sample(key).sum()
+
+        out = f(jax.random.key(0))
+        assert jnp.allclose(out, md.n, atol=1e-4)  # doubly stochastic ⇒ Σ=n

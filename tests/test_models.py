@@ -1,0 +1,252 @@
+"""Layer-level unit + property tests for the model substrate."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models import attention as attn_lib
+from repro.models import layers, moe as moe_lib
+from repro.models.transformer import LayerPlan, plan_layers
+
+
+class TestNorms:
+    @given(st.integers(2, 32), st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_rmsnorm_unit_scale(self, d, b):
+        p = layers.init_rms_norm(d)
+        x = jax.random.normal(jax.random.key(b), (b, d)) * 10
+        y = layers.rms_norm(p, x)
+        rms = np.sqrt(np.mean(np.asarray(y, np.float32) ** 2, axis=-1))
+        np.testing.assert_allclose(rms, 1.0, atol=0.05)
+
+    def test_layernorm_standardises(self):
+        p = layers.init_layer_norm(16)
+        x = jax.random.normal(jax.random.key(0), (4, 16)) * 3 + 7
+        y = np.asarray(layers.layer_norm(p, x), np.float32)
+        np.testing.assert_allclose(y.mean(-1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(y.std(-1), 1.0, atol=1e-2)
+
+
+class TestRope:
+    def test_relative_property(self):
+        """RoPE dot products depend only on relative position."""
+        hd = 32
+        q = jax.random.normal(jax.random.key(0), (1, 1, 1, hd))
+        k = jax.random.normal(jax.random.key(1), (1, 1, 1, hd))
+
+        def score(pq, pk):
+            qr = layers.apply_rope(q, jnp.array([[pq]]))
+            kr = layers.apply_rope(k, jnp.array([[pk]]))
+            return float((qr * kr).sum())
+
+        assert score(5, 3) == pytest.approx(score(105, 103), abs=1e-3)
+        assert score(5, 3) != pytest.approx(score(5, 4), abs=1e-4)
+
+    def test_mrope_reduces_to_rope_for_text(self):
+        """Equal (t,h,w) position ids ⇒ M-RoPE ≡ RoPE (paper's design)."""
+        x = jax.random.normal(jax.random.key(2), (2, 6, 4, 24))
+        pos = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+        pos3 = jnp.broadcast_to(pos[None], (3, 2, 6))
+        np.testing.assert_allclose(
+            np.asarray(layers.apply_mrope(x, pos3)),
+            np.asarray(layers.apply_rope(x, pos)), atol=1e-5)
+
+    def test_mrope_distinguishes_spatial(self):
+        x = jax.random.normal(jax.random.key(3), (1, 4, 2, 24))
+        pos = jnp.broadcast_to(jnp.arange(4)[None], (1, 4))
+        p_same = jnp.stack([pos, pos, pos])
+        p_diff = jnp.stack([pos, pos * 2, pos])
+        a = layers.apply_mrope(x, p_same)
+        b = layers.apply_mrope(x, p_diff)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+class TestAttention:
+    def _setup(self, kv=2, h=4, hd=16, d=32, bias=False):
+        return attn_lib.init_attention(jax.random.key(0), d, h, kv, hd,
+                                       bias=bias)
+
+    def test_chunked_equals_unchunked(self):
+        p = self._setup()
+        x = jax.random.normal(jax.random.key(1), (2, 64, 32))
+        pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+        kw = dict(num_kv_heads=2, head_dim=16, compute_dtype=jnp.float32)
+        full, _ = attn_lib.attention(p, x, pos, **kw)
+        # force the single-dense-block path via a ragged chunk size
+        q = layers.dense(p["wq"], x, compute_dtype=jnp.float32)
+        assert full.shape == (2, 64, 32)
+        del q
+        out_c = attn_lib._chunked_prefill(
+            layers.apply_rope(layers.dense(p["wq"], x, compute_dtype=jnp.float32), pos),
+            layers.apply_rope(layers.dense(p["wk"], x, compute_dtype=jnp.float32), pos),
+            layers.dense(p["wv"], x, compute_dtype=jnp.float32),
+            pos, pos, scale=16 ** -0.5, window=0, causal=True, chunk=16)
+        out_d = attn_lib._attend_block(
+            layers.apply_rope(layers.dense(p["wq"], x, compute_dtype=jnp.float32), pos),
+            layers.apply_rope(layers.dense(p["wk"], x, compute_dtype=jnp.float32), pos),
+            layers.dense(p["wv"], x, compute_dtype=jnp.float32),
+            pos, pos, scale=16 ** -0.5, window=0, causal=True)
+        np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_d),
+                                   atol=1e-5)
+
+    def test_window_masks_old_tokens(self):
+        """With window=1 every token attends only itself ⇒ out = v."""
+        p = self._setup(kv=1, h=1, hd=8, d=8)
+        x = jax.random.normal(jax.random.key(2), (1, 16, 8))
+        pos = jnp.arange(16)[None]
+        out, _ = attn_lib.attention(p, x, pos, num_kv_heads=1, head_dim=8,
+                                    window=1, rope_kind="none",
+                                    compute_dtype=jnp.float32)
+        v = layers.dense(p["wv"], x, compute_dtype=jnp.float32)  # (B,S,1,8)
+        expect = jnp.einsum("bshd,hdo->bso", v,
+                            p["wo"]["w"].astype(jnp.float32))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=1e-5)
+
+    def test_qkv_bias_used(self):
+        p0 = self._setup(bias=True)
+        x = jnp.zeros((1, 4, 32))
+        pos = jnp.arange(4)[None]
+        out0, _ = attn_lib.attention(p0, x, pos, num_kv_heads=2, head_dim=16,
+                                     compute_dtype=jnp.float32)
+        p0["wq"]["b"] = p0["wq"]["b"] + 1.0
+        p0["wv"]["b"] = p0["wv"]["b"] + 0.5
+        out1, _ = attn_lib.attention(p0, x, pos, num_kv_heads=2, head_dim=16,
+                                     compute_dtype=jnp.float32)
+        assert not np.allclose(np.asarray(out0), np.asarray(out1))
+
+    def test_rolling_cache_window_decode(self):
+        """Ring-buffer cache (size < total tokens) matches full-cache decode
+        for a windowed layer."""
+        p = self._setup(kv=1, h=1, hd=8, d=8)
+        s, window = 12, 4
+        x = jax.random.normal(jax.random.key(3), (1, s, 8))
+        pos = jnp.arange(s)[None]
+        kw = dict(num_kv_heads=1, head_dim=8, window=window,
+                  compute_dtype=jnp.float32)
+        full_cache = attn_lib.init_cache(1, s, 1, 8, jnp.float32)
+        ring_cache = attn_lib.init_cache(1, window, 1, 8, jnp.float32)
+        for t in range(s):
+            xt, pt = x[:, t:t + 1], pos[:, t:t + 1]
+            o_full, full_cache = attn_lib.attention(p, xt, pt,
+                                                    cache=full_cache, **kw)
+            o_ring, ring_cache = attn_lib.attention(p, xt, pt,
+                                                    cache=ring_cache, **kw)
+            np.testing.assert_allclose(np.asarray(o_full),
+                                       np.asarray(o_ring), atol=1e-5,
+                                       err_msg=f"t={t}")
+
+
+class TestMoE:
+    CFG = MoEConfig(num_experts=4, num_shared=1, top_k=2, d_ff_expert=16,
+                    capacity_factor=8.0)
+
+    def test_no_drop_outputs_match_dense_combination(self):
+        """With huge capacity, output = Σ w_e expert_e(x) + shared(x)."""
+        d = 8
+        p = moe_lib.init_moe(jax.random.key(0), d, self.CFG)
+        x = jax.random.normal(jax.random.key(1), (2, 3, d))
+        out, aux = moe_lib.moe_layer(p, x, self.CFG,
+                                     compute_dtype=jnp.float32)
+        # manual dense reference
+        tokens = x.reshape(-1, d)
+        logits = tokens @ p["router"]["w"]
+        probs = jax.nn.softmax(logits, -1)
+        top_p, top_e = jax.lax.top_k(probs, 2)
+        w = top_p / top_p.sum(-1, keepdims=True)
+        ref = []
+        for i in range(tokens.shape[0]):
+            acc = jnp.zeros(d)
+            for j in range(2):
+                e = int(top_e[i, j])
+                h = tokens[i] @ p["wi"]["w"][e]
+                g = tokens[i] @ p["wg"]["w"][e]
+                acc += w[i, j] * ((jax.nn.silu(g) * h) @ p["wo"]["w"][e])
+            ref.append(acc)
+        ref = jnp.stack(ref).reshape(2, 3, d)
+        ref = ref + layers.mlp(p["shared"], x, "swiglu",
+                               compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+        assert float(aux) > 0
+
+    def test_capacity_drops_are_zero_not_garbage(self):
+        cfg = dataclasses.replace(self.CFG, capacity_factor=0.01)
+        p = moe_lib.init_moe(jax.random.key(0), 8, cfg)
+        x = jax.random.normal(jax.random.key(2), (4, 8, 8))
+        out, _ = moe_lib.moe_layer(p, x, cfg, compute_dtype=jnp.float32)
+        assert np.isfinite(np.asarray(out)).all()
+
+    @given(st.integers(1, 64))
+    @settings(max_examples=15, deadline=None)
+    def test_rank_within_expert(self, seed):
+        e = 4
+        ids = jax.random.randint(jax.random.key(seed), (24,), 0, e)
+        rank = moe_lib._rank_within_expert(ids, e)
+        ids_np, rank_np = np.asarray(ids), np.asarray(rank)
+        for ex in range(e):
+            rs = sorted(rank_np[ids_np == ex].tolist())
+            assert rs == list(range(len(rs)))  # 0..count-1, no gaps
+
+    def test_expert_capacity_bounds(self):
+        assert moe_lib.expert_capacity(1024, self.CFG) <= 1024
+        assert moe_lib.expert_capacity(2, self.CFG) >= 1
+
+
+class TestPlanLayers:
+    def _cfg(self, **kw):
+        base = dict(name="t", arch_type="dense", source="t", num_layers=8,
+                    d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                    vocab_size=100)
+        base.update(kw)
+        return ArchConfig(**base)
+
+    def test_uniform(self):
+        assert plan_layers(self._cfg()) == LayerPlan(0, 1, 8, 0)
+
+    def test_gemma_period(self):
+        cfg = self._cfg(num_layers=12, sliding_window=32, global_every=6)
+        assert plan_layers(cfg) == LayerPlan(0, 6, 2, 0)
+
+    def test_hybrid_with_suffix(self):
+        cfg = self._cfg(num_layers=8,
+                        block_pattern=("rglru", "rglru", "attn"))
+        p = plan_layers(cfg)
+        assert p.period == 3 and p.n_groups == 2 and p.suffix == 2
+
+    def test_moe_prefix(self):
+        cfg = self._cfg(
+            arch_type="moe", num_layers=10,
+            moe=MoEConfig(num_experts=4, num_shared=1, top_k=2,
+                          d_ff_expert=32, first_dense_layers=3,
+                          d_ff_dense=128))
+        p = plan_layers(cfg)
+        assert p.prefix == 3 and p.period == 1 and p.n_groups == 7
+
+    @given(st.integers(2, 40))
+    @settings(max_examples=20, deadline=None)
+    def test_total_always_matches(self, n):
+        cfg = self._cfg(num_layers=n, sliding_window=16, global_every=3)
+        assert plan_layers(cfg).total == n
+
+
+class TestParamCounts:
+    @pytest.mark.parametrize("name,approx_b", [
+        ("gemma3-12b", 12), ("mistral-large-123b", 123),
+        ("deepseek-v3-671b", 671), ("qwen1.5-4b", 4),
+        ("nemotron-4-15b", 15), ("deepseek-v2-lite-16b", 16),
+        ("recurrentgemma-9b", 9), ("mamba2-2.7b", 2.7),
+    ])
+    def test_analytic_param_count_in_family_ballpark(self, name, approx_b):
+        n = get_config(name).num_params()
+        assert 0.4 * approx_b < n / 1e9 < 2.1 * approx_b, (name, n / 1e9)
+
+    def test_moe_active_far_below_total(self):
+        cfg = get_config("deepseek-v3-671b")
+        assert cfg.num_active_params() < 0.12 * cfg.num_params()

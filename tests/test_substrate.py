@@ -1,0 +1,152 @@
+"""Tests for optim / data / checkpoint substrate + launch specs."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs import SHAPES, get_config
+from repro.data.federated_lm import make_federated_lm
+from repro.launch import specs as specs_lib
+
+
+class TestOptim:
+    def _quad(self, opt, lr=0.1, steps=60):
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = opt.init(params)
+        for t in range(steps):
+            grads = {"w": 2 * params["w"]}  # ∇ of ‖w‖²
+            params, state = opt.update(params, grads, state,
+                                       jnp.asarray(lr))
+        return float(jnp.abs(params["w"]).max())
+
+    def test_sgd_converges(self):
+        assert self._quad(optim.sgd()) < 1e-3
+
+    def test_momentum_converges(self):
+        assert self._quad(optim.momentum_sgd(), lr=0.02, steps=150) < 1e-2
+
+    def test_adamw_converges(self):
+        assert self._quad(optim.adamw(), lr=0.2, steps=200) < 5e-2
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((4,), 10.0)}
+        c = optim.clip_by_global_norm(g, 1.0)
+        assert float(jnp.sqrt((c["a"] ** 2).sum())) == pytest.approx(1.0,
+                                                                     rel=1e-3)
+
+    def test_schedules(self):
+        lr = optim.cosine_decay(1.0, 100, warmup_steps=10)
+        assert float(lr(0)) == 0.0
+        assert float(lr(10)) == pytest.approx(1.0)
+        assert float(lr(100)) == pytest.approx(0.0, abs=1e-6)
+        dim = optim.paper_diminishing(mu=0.5, gamma=9.0)
+        assert float(dim(1)) == pytest.approx(2 / (0.5 * 10))
+
+
+class TestFederatedLMData:
+    def test_heterogeneity(self):
+        """Dirichlet-split agents draw from visibly different unigrams."""
+        data = make_federated_lm(vocab_size=64, n_agents=4, seq_len=256,
+                                 alpha=0.1, seed=0)
+        toks = data.sample(jax.random.key(0), per_agent_batch=4)
+        assert toks.shape == (4, 4, 256)
+        hists = np.stack([np.bincount(np.asarray(toks[a]).ravel(),
+                                      minlength=64) for a in range(4)])
+        hists = hists / hists.sum(-1, keepdims=True)
+        # total-variation distance between agents' empirical unigrams
+        tv = 0.5 * np.abs(hists[0] - hists[1]).sum()
+        assert tv > 0.3
+
+    def test_deterministic(self):
+        data = make_federated_lm(vocab_size=32, n_agents=2, seq_len=16,
+                                 seed=1)
+        a = data.sample(jax.random.key(5), 2)
+        b = data.sample(jax.random.key(5), 2)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_bigram_structure_learnable(self):
+        """The bigram kick makes P(next=t+1|t) far above uniform."""
+        data = make_federated_lm(vocab_size=64, n_agents=1, seq_len=512,
+                                 alpha=10.0, shift_strength=1.0, seed=2)
+        toks = np.asarray(data.sample(jax.random.key(0), 8))[0]
+        succ = (toks[:, 1:] == (toks[:, :-1] + 1) % 64).mean()
+        assert succ > 0.1  # ≫ 1/64
+
+
+class TestCheckpoint:
+    def test_roundtrip_structure_and_dtypes(self):
+        tree = {"a": jnp.arange(6).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                      "d": jnp.zeros((), jnp.int32)}}
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 3, tree)
+            out = load_checkpoint(d, 3)
+            assert out["b"]["c"].dtype == jnp.bfloat16
+            np.testing.assert_array_equal(out["a"],
+                                          np.asarray(tree["a"]))
+
+    def test_latest_and_atomicity(self):
+        with tempfile.TemporaryDirectory() as d:
+            assert latest_step(d) is None
+            for s in (1, 5, 3):
+                save_checkpoint(d, s, {"x": jnp.zeros(2)})
+            assert latest_step(d) == 5
+            assert not any(f.endswith(".tmp") for f in os.listdir(d))
+
+    def test_restore_with_template_casts(self):
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 1, {"x": jnp.ones((2, 2), jnp.float32)})
+            like = {"x": jnp.zeros((2, 2), jnp.bfloat16)}
+            out = load_checkpoint(d, 1, like=like)
+            assert out["x"].dtype == jnp.bfloat16
+
+    def test_leaf_count_mismatch_raises(self):
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 1, {"x": jnp.zeros(2)})
+            with pytest.raises(ValueError):
+                load_checkpoint(d, 1, like={"x": jnp.zeros(2),
+                                            "y": jnp.zeros(2)})
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", ["gemma3-12b", "qwen2-vl-2b",
+                                      "seamless-m4t-large-v2",
+                                      "mamba2-2.7b"])
+    def test_train_specs_shapes(self, arch):
+        cfg = get_config(arch)
+        shape = SHAPES["train_4k"]
+        specs = specs_lib.train_batch_specs(cfg, shape, n_agents=16)
+        assert specs["tokens"].shape == (16, 16, 4096)
+        if cfg.rope_kind == "mrope":
+            assert specs["mrope_positions"].shape == (16, 3, 16, 4096)
+        if cfg.frontend == "vision":
+            assert specs["frontend_embeds"].shape[2] == \
+                cfg.frontend_positions
+        if cfg.is_encoder_decoder:
+            assert specs["enc_embeds"].shape == (16, 16, 4096, cfg.d_model)
+
+    def test_decode_specs(self):
+        cfg = get_config("gemma3-12b")
+        specs = specs_lib.decode_batch_specs(cfg, SHAPES["decode_32k"])
+        assert specs["tokens"].shape == (128, 1)
+
+    def test_agent_divisibility_enforced(self):
+        cfg = get_config("gemma3-12b")
+        with pytest.raises(AssertionError):
+            specs_lib.train_batch_specs(cfg, SHAPES["train_4k"], n_agents=7)
+
+    @given(st.integers(1, 6), st.integers(1, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_concrete_batch_matches_schema(self, b, s):
+        cfg = get_config("qwen1.5-4b").smoke()
+        batch = specs_lib.concrete_batch(cfg, None, b, 8 * s,
+                                         jax.random.key(0))
+        assert batch["tokens"].shape == (b, 8 * s)
+        assert int(batch["tokens"].max()) < cfg.vocab_size
