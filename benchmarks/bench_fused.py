@@ -1,0 +1,104 @@
+"""Fused round executor vs per-step dispatch — the H-sweep cost model.
+
+FedDec's key experimental axis is H, the number of local/gossip steps between
+server rounds (Fig. 4 sweeps H ∈ {10, 100}).  The per-step executor pays one
+Python dispatch + host-device sync per iteration, so an H-sweep costs O(H)
+fixed overhead per round; the fused executor (core.feddec.make_feddec_round)
+runs the whole window inside one compiled ``lax.scan`` and pays it once.
+
+This benchmark times both executors on the paper's linear-regression workload
+across H ∈ {10, 100} × n_agents ∈ {8, 16, 32} and emits the standard
+``name,us_per_call,derived`` CSV (one row per configuration, us_per_call =
+fused wall-clock per *round*), plus a full table under results/benchmarks/.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_fused [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import feddec, theory, topology as topo
+from repro.core.mixing import MixingDistribution
+from repro.data import linreg
+
+H_VALUES = (10, 100)
+N_AGENTS = (8, 16, 32)
+K = 2
+
+
+def _make_executors(problem: linreg.LinRegProblem, h: int):
+    graph = topo.geographic_graph(problem.n, 0.6, seed=1)
+    mixing = MixingDistribution(graph, scheme="laplacian")
+    fcfg = feddec.FedDecConfig(mixing=mixing, h=h, k=K)
+    lr = theory.paper_stepsize(
+        problem.mu, theory.gamma(problem.l_smooth, problem.mu, h))
+    grad_fn = linreg.make_grad_fn(problem.m_rows)
+    # donate=False so the timing loop can reuse the same state buffers
+    step = feddec.make_feddec_step(fcfg, grad_fn, lr, donate=False)
+    round_fn = feddec.make_feddec_round(fcfg, grad_fn, lr, donate=False)
+    return step, round_fn
+
+
+def _batches(problem: linreg.LinRegProblem, h: int, m: int = 1):
+    keys = jax.random.split(jax.random.key(3), h)
+    return jax.vmap(lambda k: linreg.sample_minibatch(problem, k, m=m))(keys)
+
+
+def bench_one(n: int, h: int, *, warmup: int, iters: int):
+    """Returns (us_fused_per_round, us_per_step_per_round)."""
+    problem = linreg.make_problem(n=n, seed=0, c_base=1.5)
+    step, round_fn = _make_executors(problem, h)
+    state = feddec.init_state(jnp.zeros(problem.d), n)
+    batches = _batches(problem, h)
+    key = jax.random.key(7)
+
+    def run_fused():
+        return round_fn(state, batches, key)
+
+    # pre-slice outside the timed region: the per-step baseline must pay
+    # for dispatch + sync only, not for H batch-slicing gathers
+    step_batches = [
+        jax.block_until_ready(jax.tree.map(lambda x: x[t], batches))
+        for t in range(h)]
+
+    def run_per_step():
+        s = state
+        for b in step_batches:
+            s, m = step(s, b, key)
+        return s, m
+
+    us_fused = common.time_fn(run_fused, warmup=warmup, iters=iters)
+    us_steps = common.time_fn(run_per_step, warmup=warmup, iters=iters)
+    return us_fused, us_steps
+
+
+def main(quick: bool = False) -> None:
+    warmup, iters = (1, 3) if quick else (2, 10)
+    rows = []
+    for n in N_AGENTS:
+        for h in H_VALUES:
+            us_fused, us_steps = bench_one(n, h, warmup=warmup, iters=iters)
+            speedup = us_steps / us_fused
+            rows.append((n, h, round(us_fused, 1), round(us_steps, 1),
+                         round(speedup, 2)))
+            common.emit(
+                f"fused_round_n{n}_H{h}", us_fused,
+                f"per_step_us={us_steps:.1f};speedup={speedup:.2f}x")
+    common.write_csv("bench_fused.csv",
+                     ["n_agents", "H", "fused_us_per_round",
+                      "per_step_us_per_round", "speedup"], rows)
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true",
+                   help="fewer timing iterations for CI")
+    args = p.parse_args()
+    print("name,us_per_call,derived")
+    main(quick=args.quick)

@@ -8,6 +8,7 @@ commentary) and writes full curves/tables under results/benchmarks/.
   fig2_alpha       — Fig. 2: α(|λ̂₂|) + Lemma 3 contraction check
   theory_check     — Theorem 1 bound vs measured trajectory
   bench_kernels    — kernel micro-benchmarks + Pallas validation
+  bench_fused      — fused lax.scan round executor vs per-step dispatch
   ablation_server  — beyond-paper: §5 conjecture (server vs pure gossip)
   roofline         — aggregates results/dryrun into the §Roofline table
 """
@@ -22,9 +23,9 @@ def main() -> None:
     p.add_argument("--only", default=None)
     args = p.parse_args()
 
-    from benchmarks import (ablation_server, bench_kernels, fig2_alpha,
-                            fig4_convergence, roofline, table1_lambda2,
-                            theory_check)
+    from benchmarks import (ablation_server, bench_fused, bench_kernels,
+                            fig2_alpha, fig4_convergence, roofline,
+                            table1_lambda2, theory_check)
     jobs = {
         "table1_lambda2": lambda: table1_lambda2.main(
             seeds=3 if args.quick else 10),
@@ -34,6 +35,7 @@ def main() -> None:
             seeds=3 if args.quick else 10),
         "theory_check": theory_check.main,
         "bench_kernels": bench_kernels.main,
+        "bench_fused": lambda: bench_fused.main(quick=args.quick),
         "ablation_server": lambda: ablation_server.main(
             t_steps=1500 if args.quick else 3000,
             seeds=3 if args.quick else 6),

@@ -35,17 +35,22 @@ def run_experiment():
     gam = theory.gamma(problem.l_smooth, problem.mu, H)
     lr = theory.paper_stepsize(problem.mu, gam)
     grad_fn = linreg.make_grad_fn(problem.m_rows)
-    step = feddec.make_feddec_step(fcfg, grad_fn, lr, donate=False)
+    # fused executor: H steps per dispatch, per-step f(z̄^t) − f* recorded
+    # on-device via metrics_fn
+    round_fn = feddec.make_feddec_round(
+        fcfg, grad_fn, lr, donate=False,
+        metrics_fn=lambda s: {"subopt": problem.suboptimality(s.params)})
 
     state = feddec.init_state(jnp.zeros(problem.d), N)
     key = jax.random.key(0)
     sub, g2_max, sig2 = [], 0.0, []
     xs, ys = jnp.asarray(problem.x), jnp.asarray(problem.y)
-    for t in range(T):
-        key, kb = jax.random.split(key)
-        batch = linreg.sample_minibatch(problem, kb, m=1)
-        # estimate G² and σ̄² along the trajectory
-        if t % 50 == 0:
+    assert T % H == 0, (T, H)
+    for r in range(T // H):
+        # estimate G² and σ̄² along the trajectory (every 50 steps)
+        if (r * H) % 50 == 0:
+            key, ke = jax.random.split(key)
+            batch = linreg.sample_minibatch(problem, ke, m=1)
             zb = state.params
             gfull = 2 * jnp.einsum("imd,im->id",
                                    xs, jnp.einsum("imd,id->im", xs, zb) - ys
@@ -54,8 +59,12 @@ def run_experiment():
                 zb, (batch[0], batch[1]))
             g2_max = max(g2_max, float((gb ** 2).sum(-1).max()))
             sig2.append(float(((gb - gfull) ** 2).sum(-1).mean()))
-        state, _ = step(state, batch, jax.random.key(1))
-        sub.append(float(problem.suboptimality(state.params)))
+        key, kb = jax.random.split(key)
+        batches = jax.vmap(
+            lambda k: linreg.sample_minibatch(problem, k, m=1))(
+            jax.random.split(kb, H))
+        state, metrics = round_fn(state, batches, jax.random.key(1))
+        sub.extend(np.asarray(metrics["subopt"]).tolist())
 
     lam_hat = md.lambda2_hat()
     inp = theory.TheoremInputs(

@@ -18,11 +18,28 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional deps: only needed when checkpointing is actually used
+    import msgpack
+except ImportError:  # pragma: no cover - environment-dependent
+    msgpack = None
+try:
+    import zstandard
+except ImportError:  # pragma: no cover - environment-dependent
+    zstandard = None
 
 __all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _require_codecs() -> None:
+    missing = [name for name, mod in
+               (("msgpack", msgpack), ("zstandard", zstandard)) if mod is None]
+    if missing:
+        names = ", ".join(missing)
+        raise ModuleNotFoundError(
+            f"checkpointing needs {names} (pip install {' '.join(missing)});"
+            " training runs without --ckpt-dir do not require them")
 
 _STEP_RE = re.compile(r"^ckpt_(\d+)\.msgpack\.zst$")
 
@@ -59,6 +76,7 @@ def _is_packed(x) -> bool:
 def save_checkpoint(directory: str, step: int, tree: Any,
                     level: int = 3) -> str:
     """Atomically write ``tree`` as ckpt_<step>.msgpack.zst; returns path."""
+    _require_codecs()
     os.makedirs(directory, exist_ok=True)
     payload = msgpack.packb(_to_serialisable(tree), use_bin_type=True)
     blob = zstandard.ZstdCompressor(level=level).compress(payload)
@@ -78,6 +96,7 @@ def load_checkpoint(directory: str, step: int | None = None,
     .sharding), every leaf is device_put to the corresponding sharding and
     cast to the corresponding dtype.
     """
+    _require_codecs()
     if step is None:
         step = latest_step(directory)
         if step is None:

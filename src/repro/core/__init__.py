@@ -11,13 +11,15 @@ Public surface:
 """
 
 from repro.core import fedavg, feddec, gossip, mixing, server, theory, topology
-from repro.core.feddec import FedDecConfig, FedState, init_state, make_feddec_step
-from repro.core.fedavg import FedAvgConfig, make_fedavg_step
+from repro.core.feddec import (FedDecConfig, FedState, init_state,
+                               make_feddec_round, make_feddec_step)
+from repro.core.fedavg import FedAvgConfig, make_fedavg_round, make_fedavg_step
 from repro.core.mixing import MixingDistribution, identity_mixing
 
 __all__ = [
     "topology", "mixing", "gossip", "server", "feddec", "fedavg", "theory",
     "FedDecConfig", "FedState", "init_state", "make_feddec_step",
-    "FedAvgConfig", "make_fedavg_step",
+    "make_feddec_round",
+    "FedAvgConfig", "make_fedavg_step", "make_fedavg_round",
     "MixingDistribution", "identity_mixing",
 ]

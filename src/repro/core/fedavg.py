@@ -13,7 +13,7 @@ from __future__ import annotations
 from repro.core import feddec
 from repro.core.mixing import identity_mixing
 
-__all__ = ["FedAvgConfig", "make_fedavg_step"]
+__all__ = ["FedAvgConfig", "make_fedavg_step", "make_fedavg_round"]
 
 
 def FedAvgConfig(n_agents: int, h: int = 10, k: int = 2) -> feddec.FedDecConfig:
@@ -28,3 +28,17 @@ def make_fedavg_step(n_agents: int, grad_fn, lr_fn, h: int = 10, k: int = 2,
     """Jitted FedAvg step with the same signature as make_feddec_step's."""
     return feddec.make_feddec_step(
         FedAvgConfig(n_agents, h=h, k=k), grad_fn, lr_fn, donate=donate)
+
+
+def make_fedavg_round(n_agents: int, grad_fn, lr_fn, h: int = 10, k: int = 2,
+                      metrics_fn=None, donate: bool = True, jit: bool = True,
+                      unroll: int = 1):
+    """Fused FedAvg executor — make_feddec_round with 𝒲 = {I}.
+
+    Same contract as :func:`repro.core.feddec.make_feddec_round`: batches
+    carry a leading fused-step dim, metrics come back stacked ``(H, ...)``,
+    the server aggregation fires inside the scan every H-th step.
+    """
+    return feddec.make_feddec_round(
+        FedAvgConfig(n_agents, h=h, k=k), grad_fn, lr_fn,
+        metrics_fn=metrics_fn, donate=donate, jit=jit, unroll=unroll)

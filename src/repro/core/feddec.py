@@ -13,6 +13,25 @@ with ``vmap``.  One call executes exactly lines 3–12 of Algorithm 1:
 FedAvg (the paper's baseline) is the same step with the degenerate mixing
 𝒲 = {I} — see :mod:`repro.core.fedavg`.
 
+Two executors over the same step body:
+
+  * :func:`make_feddec_step`  — one jitted call per iteration t.  Simple,
+    debuggable, but pays one Python dispatch + host-device sync per step.
+  * :func:`make_feddec_round` — the **fused** executor: all H steps between
+    server rounds (or any number of steps) run inside a single
+    ``jax.lax.scan``, with W^t resampled every scanned step (time-varying
+    topologies / link failures included), the periodic server round fired by
+    the in-body ``lax.cond``, per-step metrics stacked into ``(H,)`` arrays,
+    and the carried state donated across round calls.  Sweeping H — the
+    paper's key axis (Fig. 4) — costs one dispatch per *round* instead of
+    one per *step*.
+
+Both executors derive each step's randomness as ``fold_in(key, t)`` from the
+carried step counter, so a fused round performs the same mathematical
+computation as H sequential step calls with the same key — the trajectories
+agree to within XLA fusion-level float noise (asserted at 1e-5, and observed
+exact on the linreg workload, in tests/test_fused_round.py).
+
 Distribution: on a device mesh the stacked params are sharded over the agent
 axes and the model axes (see repro/sharding); gossip runs through either the
 dense einsum path or the neighbour-only ``ppermute`` path (repro.core.gossip).
@@ -30,7 +49,8 @@ from repro.core import gossip as gossip_lib
 from repro.core import server as server_lib
 from repro.core.mixing import MixingDistribution
 
-__all__ = ["FedDecConfig", "FedState", "init_state", "make_feddec_step"]
+__all__ = ["FedDecConfig", "FedState", "init_state", "make_feddec_step",
+           "make_feddec_round"]
 
 GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
 LrFn = Callable[[jax.Array], jax.Array]
@@ -97,29 +117,9 @@ def init_state(params_single: Any, n_agents: int,
                     opt_state=opt_state)
 
 
-def make_feddec_step(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
-                     gossip_fn: GossipFn | None = None,
-                     optimizer=None,
-                     donate: bool = True,
-                     jit: bool = True):
-    """Build the jitted FedDec step.
-
-    Args:
-      cfg: static federated config.
-      grad_fn: single-agent (params, batch, key) -> (loss, grads).
-      lr_fn: step -> η_t (use repro.core.theory.paper_stepsize for the
-        theorem's diminishing schedule).
-      gossip_fn: optional override for the mixing application, e.g. the
-        ppermute schedule from gossip.make_permute_gossip.  Defaults to the
-        dense einsum path (or a no-op for gossip_impl='none').
-      optimizer: repro.optim.Optimizer for the local update (default: plain
-        SGD — the paper's Algorithm 1).  Optimizer state is per-agent and is
-        NOT gossiped (only parameters are exchanged, as in the paper).
-
-    Returns:
-      step(state, batch, key) -> (new_state, metrics) where batch leaves have
-      a leading agent dim and metrics = {'loss': mean loss, 'eta': η_t}.
-    """
+def _build_step_body(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
+                     gossip_fn: GossipFn | None, optimizer):
+    """The un-jitted Algorithm-1 body shared by both executors."""
     if gossip_fn is None:
         if cfg.gossip_impl == "dense":
             gossip_fn = gossip_lib.gossip_mix_dense
@@ -167,7 +167,91 @@ def make_feddec_step(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
         metrics = {"loss": jnp.mean(losses), "eta": eta}
         return new_state, metrics
 
+    return step
+
+
+def make_feddec_step(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
+                     gossip_fn: GossipFn | None = None,
+                     optimizer=None,
+                     donate: bool = True,
+                     jit: bool = True):
+    """Build the jitted FedDec step.
+
+    Args:
+      cfg: static federated config.
+      grad_fn: single-agent (params, batch, key) -> (loss, grads).
+      lr_fn: step -> η_t (use repro.core.theory.paper_stepsize for the
+        theorem's diminishing schedule).
+      gossip_fn: optional override for the mixing application, e.g. the
+        ppermute schedule from gossip.make_permute_gossip.  Defaults to the
+        dense einsum path (or a no-op for gossip_impl='none').
+      optimizer: repro.optim.Optimizer for the local update (default: plain
+        SGD — the paper's Algorithm 1).  Optimizer state is per-agent and is
+        NOT gossiped (only parameters are exchanged, as in the paper).
+
+    Returns:
+      step(state, batch, key) -> (new_state, metrics) where batch leaves have
+      a leading agent dim and metrics = {'loss': mean loss, 'eta': η_t}.
+    """
+    step = _build_step_body(cfg, grad_fn, lr_fn, gossip_fn, optimizer)
     if not jit:
         return step
     donate_argnums = (0,) if donate else ()
     return jax.jit(step, donate_argnums=donate_argnums)
+
+
+def make_feddec_round(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
+                      gossip_fn: GossipFn | None = None,
+                      optimizer=None,
+                      metrics_fn: Callable[[FedState], dict] | None = None,
+                      donate: bool = True,
+                      jit: bool = True,
+                      unroll: int = 1):
+    """Build the fused multi-step executor: H iterations per compiled call.
+
+    The returned callable scans the Algorithm-1 body over the leading axis of
+    ``batches`` — mixing-matrix resampling (time-varying topologies and link
+    failures included), the per-agent local update, gossip, and the periodic
+    server round all execute inside one ``lax.scan``.  The number of fused
+    steps is set by the batch stacking, so a round spanning exactly the
+    inter-server-round window scans H steps and fires the server aggregation
+    on its last step (the in-body ``(t+1) % H`` condition — a round may also
+    cross or omit server boundaries, matching the per-step executor exactly).
+
+    Per-step randomness is ``fold_in(key, t)`` off the carried step counter,
+    identical to :func:`make_feddec_step`: a fused round with key ``k``
+    computes the same trajectory as H sequential step calls with key ``k``
+    (up to XLA fusion-level float differences between the two compiled
+    programs).
+
+    Args:
+      cfg, grad_fn, lr_fn, gossip_fn, optimizer: as in
+        :func:`make_feddec_step`.
+      metrics_fn: optional ``state -> dict`` evaluated on the post-step state
+        inside the scan and merged into that step's metrics — e.g. the
+        suboptimality f(z̄^t) − f* recorded by benchmarks/fig4_convergence.py
+        without leaving the device.
+      donate: donate the carried state buffers across round calls (the params
+        of round r are overwritten in place by round r+1).
+      unroll: ``lax.scan`` unroll factor (trade compile time for dispatch).
+
+    Returns:
+      round(state, batches, key) -> (new_state, metrics) where every leaf of
+      ``batches`` has a leading fused-step dim H on top of the agent dim, and
+      every metrics leaf is stacked to shape ``(H, ...)``.
+    """
+    step = _build_step_body(cfg, grad_fn, lr_fn, gossip_fn, optimizer)
+
+    def round_fn(state: FedState, batches: Any, key: jax.Array):
+        def body(carry, batch):
+            new_state, metrics = step(carry, batch, key)
+            if metrics_fn is not None:
+                metrics = {**metrics, **metrics_fn(new_state)}
+            return new_state, metrics
+
+        return jax.lax.scan(body, state, batches, unroll=unroll)
+
+    if not jit:
+        return round_fn
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(round_fn, donate_argnums=donate_argnums)

@@ -110,14 +110,23 @@ def make_permute_gossip(graph: topo.Graph, mesh: jax.sharding.Mesh,
             acc = acc + coeff * recv.astype(jnp.float32)
         return acc.astype(x.dtype)
 
+    if hasattr(jax, "shard_map"):  # jax >= 0.5
+        def _shard_map(fn, in_specs, out_specs):
+            return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+    else:
+        from jax.experimental.shard_map import shard_map as _sm
+
+        def _shard_map(fn, in_specs, out_specs):
+            return _sm(fn, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+
     def gossip(w: jax.Array, stacked: object) -> object:
         def mix(leaf: jax.Array, spec) -> jax.Array:
             if spec is None:
                 spec = P(axis_name, *([None] * (leaf.ndim - 1)))
-            fn = jax.shard_map(
-                per_shard, mesh=mesh,
-                in_specs=(P(None, None), spec), out_specs=spec,
-                check_vma=False)
+            fn = _shard_map(per_shard, in_specs=(P(None, None), spec),
+                            out_specs=spec)
             return fn(w, leaf)
         if leaf_specs is None:
             return jax.tree.map(lambda l: mix(l, None), stacked)

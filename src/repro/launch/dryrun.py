@@ -48,18 +48,22 @@ def _model_flops(cfg, shape) -> float:
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
-            out_dir: str | None = RESULTS_DIR) -> dict:
+            out_dir: str | None = RESULTS_DIR,
+            fused_steps: int | None = None) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
     axes = shd.axes_for_mesh(mesh)
     chips = mesh.devices.size
     tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    if fused_steps and shape.kind == "train":
+        tag += f"__fused{fused_steps}"
     rec: dict = {"arch": arch, "shape": shape_name,
-                 "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips}
+                 "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+                 "fused_steps": fused_steps if shape.kind == "train" else None}
     t0 = time.time()
     try:
-        low = build_lowerable(cfg, shape, axes)
+        low = build_lowerable(cfg, shape, axes, fused_steps=fused_steps)
         lowered = low.lower(mesh)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -67,12 +71,16 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # jax < 0.5: one dict per program
+            cost = cost[0] if cost else {}
         hlo = analysis.hlo_analysis.analyze_hlo(compiled.as_text())
+        steps_per_call = (fused_steps if fused_steps
+                          and shape.kind == "train" else 1)
         report = analysis.roofline_terms(
             name=tag, chips=chips, per_device_flops=hlo.flops,
             per_device_bytes=hlo.traffic_bytes,
             collective_bytes=hlo.collective_bytes,
-            model_flops=_model_flops(cfg, shape))
+            model_flops=_model_flops(cfg, shape) * steps_per_call)
 
         rec.update({
             "status": "ok",
@@ -124,6 +132,10 @@ def main() -> None:
                    choices=["all"] + list(SHAPES))
     p.add_argument("--mesh", default="single",
                    choices=["single", "multi", "both"])
+    p.add_argument("--fused", type=int, default=0, metavar="H",
+                   help="compile train steps as the fused H-step round "
+                        "executor (0 = per-step; non-train shapes "
+                        "unaffected)")
     p.add_argument("--out", default=RESULTS_DIR)
     args = p.parse_args()
 
@@ -137,7 +149,8 @@ def main() -> None:
     for arch in archs:
         for shape in shapes:
             for multi in meshes:
-                rec = run_one(arch, shape, multi, args.out)
+                rec = run_one(arch, shape, multi, args.out,
+                              fused_steps=args.fused or None)
                 if rec["status"] != "ok":
                     failures.append(rec)
     print(f"\n{len(failures)} failures / "

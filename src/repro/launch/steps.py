@@ -94,7 +94,10 @@ class Lowerable:
             kw["out_shardings"] = shard(self.out_specs)
         jitted = jax.jit(self.fn, in_shardings=shard(self.in_specs),
                          donate_argnums=self.donate_argnums, **kw)
-        with jax.set_mesh(mesh):
+        # jax >= 0.5 exposes jax.set_mesh; older versions use the Mesh
+        # object itself as the ambient-mesh context manager
+        mesh_ctx = getattr(jax, "set_mesh", lambda m: m)(mesh)
+        with mesh_ctx:
             return jitted.lower(*self.args_struct)
 
 
@@ -158,12 +161,18 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
                           fed: FedConfig | None = None,
                           lr: float = 1e-2,
                           microbatches: int | None = None,
-                          mesh: jax.sharding.Mesh | None = None) -> Lowerable:
+                          mesh: jax.sharding.Mesh | None = None,
+                          fused_steps: int | None = None) -> Lowerable:
     """The FedDec training step at production shape.
 
     ``fed.gossip_impl='permute'`` selects the neighbour-only ppermute gossip
     schedule (needs ``mesh``; sharded agent layout only) — the optimized
     path of §Perf iteration A1.  Default is the paper-faithful dense einsum.
+
+    ``fused_steps=H`` lowers the fused round executor instead of the single
+    step: batches gain a leading (H,) fused-step dim, all H iterations
+    (gossip, server round included) run in one compiled ``lax.scan``, and
+    metrics come back stacked ``(H,)``.
     """
     cfg = adapt_for_mesh(cfg, axes)
     if cfg.fed_agent_layout == "replicated":
@@ -200,12 +209,28 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
             fcfg.mixing.graph, mesh, agent_ax, leaf_specs=param_specs,
             exchange_dtype=exch)
 
-    step = feddec.make_feddec_step(
-        fcfg, grad_fn, lambda t: jnp.asarray(lr, jnp.float32),
-        gossip_fn=gossip_fn, jit=False)
+    lr_fn = lambda t: jnp.asarray(lr, jnp.float32)  # noqa: E731
     state_specs = feddec.FedState(params=param_specs, step=P(),
                                   opt_state=())
     batch_specs = shd.batch_pspecs(cfg, batch_struct, axes, stacked=True)
+    name = f"train:{cfg.name}:{shape.name}"
+
+    if fused_steps is None:
+        step = feddec.make_feddec_step(fcfg, grad_fn, lr_fn,
+                                       gossip_fn=gossip_fn, jit=False)
+    else:
+        if fused_steps < 1:
+            raise ValueError(f"fused_steps must be >= 1, got {fused_steps}")
+        step = feddec.make_feddec_round(fcfg, grad_fn, lr_fn,
+                                        gossip_fn=gossip_fn, jit=False)
+        # every batch leaf gains a leading fused-step dim, unsharded (the
+        # scan consumes one slice per step)
+        batch_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((fused_steps,) + s.shape, s.dtype),
+            batch_struct)
+        batch_specs = jax.tree.map(lambda s: P(None, *s), batch_specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+        name = f"train:{cfg.name}:{shape.name}:fused{fused_steps}"
 
     return Lowerable(
         fn=step,
@@ -213,7 +238,7 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
         in_specs=(state_specs, batch_specs, P()),
         out_specs=(state_specs, {"loss": P(), "eta": P()}),
         donate_argnums=(0,),
-        name=f"train:{cfg.name}:{shape.name}",
+        name=name,
     )
 
 
@@ -301,7 +326,7 @@ def build_lowerable(cfg: ArchConfig, shape: ShapeConfig,
                     axes: shd.MeshAxes, **kw) -> Lowerable:
     if shape.kind == "train":
         return build_train_lowerable(cfg, shape, axes, **kw)
-    kw.pop("fed", None), kw.pop("mesh", None)
+    kw.pop("fed", None), kw.pop("mesh", None), kw.pop("fused_steps", None)
     if shape.kind == "prefill":
         return build_prefill_lowerable(cfg, shape, axes)
     return build_decode_lowerable(cfg, shape, axes)

@@ -49,10 +49,20 @@ def tiny_lm_config(d_model: int = 768, layers: int = 12,
 def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                per_agent_batch: int, seq_len: int, lr: float = 3e-3,
                optimizer: str = "sgd", fedavg_control: bool = False,
+               fused: bool = True,
                ckpt_dir: str | None = None, ckpt_every: int = 0,
                log_every: int = 10, seed: int = 0,
                data_alpha: float = 0.3):
-    """Run FedDec training; returns (final_state, loss_history)."""
+    """Run FedDec training; returns (final_state, loss_history).
+
+    ``fused=True`` (default) executes one compiled ``lax.scan`` per
+    inter-server-round window of H steps (repro.core.feddec.make_feddec_round)
+    — one dispatch per round instead of per step.  ``fused=False`` keeps the
+    per-step executor for debugging (inspect state between every iteration).
+    When ``steps`` is not a multiple of H the trailing short round compiles a
+    second scan (shorter leading batch dim) — a one-off cost; keep ``steps``
+    a multiple of H to avoid it.
+    """
     model = build_model(cfg)
     axes = MeshAxes(("data",), "model", {"data": fed.n_agents, "model": 1})
     fcfg, n_agents = build_fed_setup(cfg, axes, fed)
@@ -61,9 +71,13 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
 
     opt = {"sgd": None, "momentum": optim.momentum_sgd(),
            "adamw": optim.adamw()}[optimizer]
-    step = feddec.make_feddec_step(
-        fcfg, model.grad_fn(), lambda t: jnp.asarray(lr, jnp.float32),
-        optimizer=opt, donate=True)
+    lr_fn = lambda t: jnp.asarray(lr, jnp.float32)  # noqa: E731
+    if fused:
+        round_fn = feddec.make_feddec_round(
+            fcfg, model.grad_fn(), lr_fn, optimizer=opt, donate=True)
+    else:
+        step = feddec.make_feddec_step(
+            fcfg, model.grad_fn(), lr_fn, optimizer=opt, donate=True)
 
     data = make_federated_lm(cfg.vocab_size, n_agents, seq_len,
                              alpha=data_alpha, seed=seed)
@@ -72,27 +86,50 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                               optimizer=opt)
     print(f"[train] {cfg.name}: {model.param_count(params0):,} params × "
           f"{n_agents} agents, graph={fed.graph}, H={fed.h}, K={fcfg.k}, "
-          f"opt={optimizer}")
+          f"opt={optimizer}, executor={'fused' if fused else 'per-step'}")
 
     positions = jnp.broadcast_to(
         jnp.arange(seq_len, dtype=jnp.int32)[None, None],
         (n_agents, per_agent_batch, seq_len))
     key = jax.random.key(seed + 1)
+    step_key = jax.random.key(seed + 2)
     losses = []
     t_start = time.time()
-    for i in range(steps):
-        key, kd = jax.random.split(key)
-        tokens = data.sample(kd, per_agent_batch)
-        batch = {"tokens": tokens, "positions": positions}
-        state, metrics = step(state, batch, jax.random.key(seed + 2))
-        losses.append(float(metrics["loss"]))
-        if log_every and (i + 1) % log_every == 0:
-            rate = (i + 1) / (time.time() - t_start)
-            print(f"[train] step {i + 1:5d}  loss {losses[-1]:.4f}  "
+
+    def log_and_ckpt(prev: int, done: int) -> None:
+        # fire when a multiple of the period falls in (prev, done] — a fused
+        # round advances h steps at once and must not skip boundaries
+        if log_every and done // log_every > prev // log_every:
+            rate = done / (time.time() - t_start)
+            print(f"[train] step {done:5d}  loss {losses[-1]:.4f}  "
                   f"({rate:.2f} steps/s)")
-        if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
-            save_checkpoint(ckpt_dir, i + 1,
+        if (ckpt_dir and ckpt_every
+                and done // ckpt_every > prev // ckpt_every):
+            save_checkpoint(ckpt_dir, done,
                             {"params": state.params, "step": state.step})
+
+    if fused:
+        done = 0
+        while done < steps:
+            chunk = min(fed.h, steps - done)
+            key, kd = jax.random.split(key)
+            tokens = jax.vmap(lambda k: data.sample(k, per_agent_batch))(
+                jax.random.split(kd, chunk))
+            batches = {"tokens": tokens,
+                       "positions": jnp.broadcast_to(
+                           positions[None], (chunk,) + positions.shape)}
+            state, metrics = round_fn(state, batches, step_key)
+            losses.extend(np.asarray(metrics["loss"]).tolist())
+            done += chunk
+            log_and_ckpt(done - chunk, done)
+    else:
+        for i in range(steps):
+            key, kd = jax.random.split(key)
+            tokens = data.sample(kd, per_agent_batch)
+            batch = {"tokens": tokens, "positions": positions}
+            state, metrics = step(state, batch, step_key)
+            losses.append(float(metrics["loss"]))
+            log_and_ckpt(i, i + 1)
     if ckpt_dir:
         save_checkpoint(ckpt_dir, steps,
                         {"params": state.params, "step": state.step})
@@ -119,6 +156,13 @@ def main() -> None:
                    choices=["sgd", "momentum", "adamw"])
     p.add_argument("--fedavg", action="store_true",
                    help="run the FedAvg control instead of FedDec")
+    ex = p.add_mutually_exclusive_group()
+    ex.add_argument("--fused", dest="fused", action="store_true",
+                    default=True,
+                    help="fused executor: one lax.scan per H-step round "
+                         "(default)")
+    ex.add_argument("--per-step", dest="fused", action="store_false",
+                    help="one jitted call per iteration (debugging)")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--d-model", type=int, default=768)
     p.add_argument("--layers", type=int, default=12)
@@ -135,7 +179,8 @@ def main() -> None:
     state, losses = train_loop(
         cfg, fed, steps=args.steps, per_agent_batch=args.batch,
         seq_len=args.seq, lr=args.lr, optimizer=args.optimizer,
-        fedavg_control=args.fedavg, ckpt_dir=args.ckpt_dir)
+        fedavg_control=args.fedavg, fused=args.fused,
+        ckpt_dir=args.ckpt_dir)
     first = np.mean(losses[:5])
     last = np.mean(losses[-5:])
     print(f"[train] done: loss {first:.4f} → {last:.4f} "

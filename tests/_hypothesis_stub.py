@@ -1,0 +1,36 @@
+"""Fallback for test modules when ``hypothesis`` is not installed.
+
+Imported as ``from _hypothesis_stub import given, settings, st`` in the
+except-ImportError branch: property-style tests get marked skipped, while
+every other test in the module keeps running (module-level
+``pytest.importorskip`` would silently drop them all).
+"""
+
+import pytest
+
+
+class _Anything:
+    """Stands in for ``hypothesis.strategies``: any attribute/call chains."""
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+
+st = _Anything()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        return pytest.mark.skip(
+            reason="hypothesis not installed "
+                   "(pip install -r requirements-dev.txt)")(fn)
+    return deco
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+    return deco

@@ -16,7 +16,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; the rest of the module runs
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import gossip, server, topology as topo
 from repro.core.mixing import MixingDistribution
@@ -125,7 +129,7 @@ x = {"a": jax.random.normal(jax.random.key(1), (n, 16)),
      "b": jax.random.normal(jax.random.key(2), (n, 4, 4))}
 dense = gossip.gossip_mix_dense(w, x)
 perm_fn = gossip.make_permute_gossip(g, mesh, "agents")
-with jax.set_mesh(mesh):
+with getattr(jax, "set_mesh", lambda m: m)(mesh):  # jax<0.5: Mesh is the ctx
     permuted = jax.jit(perm_fn)(w, x)
 for k in x:
     np.testing.assert_allclose(np.asarray(dense[k]), np.asarray(permuted[k]),
