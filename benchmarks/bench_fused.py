@@ -97,8 +97,8 @@ def main(quick: bool = False) -> None:
 
 if __name__ == "__main__":
     p = argparse.ArgumentParser(description=__doc__)
-    p.add_argument("--quick", action="store_true",
-                   help="fewer timing iterations for CI")
+    p.add_argument("--quick", "--smoke", dest="quick", action="store_true",
+                   help="fewer timing iterations for CI (alias: --smoke)")
     args = p.parse_args()
     print("name,us_per_call,derived")
     main(quick=args.quick)

@@ -286,5 +286,5 @@ class FedConfig:
     k: int = 4
     graph: str = "ring2"           # ring<k> | geo<r> | er<p> | full
     p_fail: float = 0.0
-    gossip_impl: str = "dense"     # dense | permute
+    gossip_impl: str = "dense"     # dense | permute | pallas | sparse | none
     gossip_dtype: str = "f32"      # f32 | bf16 (compressed exchange)

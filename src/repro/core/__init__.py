@@ -3,23 +3,32 @@
 Public surface:
   topology   — graphs, doubly-stochastic weight construction, spectra
   mixing     — the random mixing-matrix distribution 𝒲 (link failures)
-  gossip     — the averaging step (dense einsum / ppermute schedule)
+  gossip     — the averaging step (dense / sparse CSR / ppermute schedule)
   server     — partial-participation aggregation + broadcast
-  feddec     — Algorithm 1 as a jitted, model-agnostic step
+  feddec     — Algorithm 1 as a jitted, model-agnostic step (tree engine)
+  flat       — Algorithm 1 on one contiguous (n_agents, D) buffer
+               (the single-buffer hot loop: Pallas / sparse gossip)
   fedavg     — the FedAvg baseline (degenerate 𝒲 = {I})
   theory     — Theorem 1's constants and bound curve, executable
 """
 
-from repro.core import fedavg, feddec, gossip, mixing, server, theory, topology
+from repro.core import (fedavg, feddec, flat, gossip, mixing, server, theory,
+                        topology)
 from repro.core.feddec import (FedDecConfig, FedState, init_state,
                                make_feddec_round, make_feddec_step)
 from repro.core.fedavg import FedAvgConfig, make_fedavg_round, make_fedavg_step
+from repro.core.flat import (FlatFedState, FlatSpec, init_flat_state,
+                             make_flat_feddec_round, make_flat_feddec_step,
+                             make_flat_spec)
 from repro.core.mixing import MixingDistribution, identity_mixing
 
 __all__ = [
-    "topology", "mixing", "gossip", "server", "feddec", "fedavg", "theory",
+    "topology", "mixing", "gossip", "server", "feddec", "flat", "fedavg",
+    "theory",
     "FedDecConfig", "FedState", "init_state", "make_feddec_step",
     "make_feddec_round",
+    "FlatSpec", "FlatFedState", "init_flat_state", "make_flat_feddec_step",
+    "make_flat_feddec_round",
     "FedAvgConfig", "make_fedavg_step", "make_fedavg_round",
     "MixingDistribution", "identity_mixing",
 ]

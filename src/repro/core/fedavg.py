@@ -13,7 +13,8 @@ from __future__ import annotations
 from repro.core import feddec
 from repro.core.mixing import identity_mixing
 
-__all__ = ["FedAvgConfig", "make_fedavg_step", "make_fedavg_round"]
+__all__ = ["FedAvgConfig", "make_fedavg_step", "make_fedavg_round",
+           "make_fedavg_flat_round"]
 
 
 def FedAvgConfig(n_agents: int, h: int = 10, k: int = 2) -> feddec.FedDecConfig:
@@ -41,4 +42,19 @@ def make_fedavg_round(n_agents: int, grad_fn, lr_fn, h: int = 10, k: int = 2,
     """
     return feddec.make_feddec_round(
         FedAvgConfig(n_agents, h=h, k=k), grad_fn, lr_fn,
+        metrics_fn=metrics_fn, donate=donate, jit=jit, unroll=unroll)
+
+
+def make_fedavg_flat_round(n_agents: int, spec, grad_fn, lr_fn, h: int = 10,
+                           k: int = 2, metrics_fn=None, donate: bool = True,
+                           jit: bool = True, unroll: int = 1):
+    """Flat-engine FedAvg executor: the (n, D)-buffer round with 𝒲 = {I}.
+
+    Same contract as :func:`repro.core.flat.make_flat_feddec_round`; the
+    ``gossip_impl='none'`` fast path skips the mix entirely, so a round is
+    just the whole-buffer local updates plus the terminal server reduction.
+    """
+    from repro.core import flat as flat_lib
+    return flat_lib.make_flat_feddec_round(
+        FedAvgConfig(n_agents, h=h, k=k), spec, grad_fn, lr_fn,
         metrics_fn=metrics_fn, donate=donate, jit=jit, unroll=unroll)

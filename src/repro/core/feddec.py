@@ -50,7 +50,7 @@ from repro.core import server as server_lib
 from repro.core.mixing import MixingDistribution
 
 __all__ = ["FedDecConfig", "FedState", "init_state", "make_feddec_step",
-           "make_feddec_round"]
+           "make_feddec_round", "resolve_tree_gossip"]
 
 GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
 LrFn = Callable[[jax.Array], jax.Array]
@@ -68,9 +68,17 @@ class FedDecConfig:
       k: number of devices sampled per server round (with replacement).
       server_enabled: disable to get pure decentralized gossip SGD (used by
         the "does the server still help?" ablation, paper §5 conjecture).
-      gossip_impl: 'dense' (einsum; any graph) or 'none' (W = I fast path).
-        The ppermute path is built separately via gossip.make_permute_gossip
-        and passed to make_feddec_step(gossip_fn=...).
+      gossip_impl: how Σ_j W_ij x_j is executed.  One of
+        'dense'  — einsum contraction (any graph, any W; the default),
+        'none'   — W = I fast path (FedAvg: skip the mix entirely),
+        'pallas' — the kernels/gossip_mix.py streaming kernel (whole-buffer
+                   on the flat engine, leaf-wise on the tree engine),
+        'sparse' — gather + segment_sum over the graph's static CSR edge
+                   list, O(|E|·d) instead of O(n²·d).
+        The neighbour-only ppermute schedule for a device mesh is NOT a
+        config value: build it with gossip.make_permute_gossip(graph, mesh,
+        agent_axes) and pass it as make_feddec_step(gossip_fn=...) (or
+        FedConfig(gossip_impl='permute') in launch/steps.py).
     """
 
     mixing: MixingDistribution
@@ -79,13 +87,20 @@ class FedDecConfig:
     server_enabled: bool = True
     gossip_impl: str = "dense"
 
+    GOSSIP_IMPLS = ("dense", "none", "pallas", "sparse")
+
     def __post_init__(self):
         if self.h < 1:
             raise ValueError(f"H must be >= 1, got {self.h}")
         if self.k < 1:
             raise ValueError(f"K must be >= 1, got {self.k}")
-        if self.gossip_impl not in ("dense", "none"):
-            raise ValueError(f"unknown gossip_impl {self.gossip_impl!r}")
+        if self.gossip_impl not in self.GOSSIP_IMPLS:
+            hint = (" (the mesh ppermute path is not a gossip_impl: build it "
+                    "with gossip.make_permute_gossip and pass gossip_fn=...)"
+                    if self.gossip_impl == "permute" else "")
+            raise ValueError(
+                f"unknown gossip_impl {self.gossip_impl!r}; choose from "
+                f"{'|'.join(self.GOSSIP_IMPLS)}{hint}")
 
     @property
     def n_agents(self) -> int:
@@ -117,14 +132,27 @@ def init_state(params_single: Any, n_agents: int,
                     opt_state=opt_state)
 
 
+def resolve_tree_gossip(cfg: FedDecConfig) -> GossipFn:
+    """gossip_impl → a (w, stacked-pytree) mixing fn for the tree engine.
+
+    (The flat engine resolves the same impl names to whole-buffer (n, D)
+    ops in repro.core.flat — one fused op instead of one per leaf.)
+    """
+    if cfg.gossip_impl == "dense":
+        return gossip_lib.gossip_mix_dense
+    if cfg.gossip_impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.gossip_mix_tree
+    if cfg.gossip_impl == "sparse":
+        return gossip_lib.make_sparse_gossip_tree(cfg.mixing.graph)
+    return lambda w, x: x  # 'none' — FedAvg fast path
+
+
 def _build_step_body(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
                      gossip_fn: GossipFn | None, optimizer):
     """The un-jitted Algorithm-1 body shared by both executors."""
     if gossip_fn is None:
-        if cfg.gossip_impl == "dense":
-            gossip_fn = gossip_lib.gossip_mix_dense
-        else:
-            gossip_fn = lambda w, x: x  # noqa: E731 — FedAvg fast path
+        gossip_fn = resolve_tree_gossip(cfg)
 
     def local_update(params, grads, opt_state, eta):
         if optimizer is None:  # Alg. 1 line 5: plain SGD

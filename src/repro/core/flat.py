@@ -1,0 +1,375 @@
+"""Flat-state FedDec engine: Algorithm 1 on one contiguous (n_agents, D) buffer.
+
+The tree engine (repro.core.feddec) carries the stacked per-agent parameters
+as a pytree and applies every Algorithm-1 op leaf-wise — paying per-leaf
+dispatch inside the fused scan, per-leaf padding in the Pallas kernel, and a
+per-leaf f32 upcast in the dense einsum.  This module ravels the whole state
+**once** into a single contiguous ``(n_agents, D)`` buffer with a static
+unravel spec, so each op of the hot loop becomes exactly one fused
+whole-buffer pass:
+
+  * local SGD / optimizer update —  one elementwise op over (n, D);
+  * gossip  x_i ← Σ_j W_ij x_j   —  one (n, n) @ (n, D) contraction
+    (``gossip_impl='dense'``), one Pallas streaming-kernel call with W
+    VMEM-resident and the dtype cast fused (``'pallas'``), or one
+    gather + segment_sum over the graph's CSR edge list (``'sparse'``,
+    O(|E|·D) — the n≫64 regime the dense path cannot sustain);
+  * server round                  —  one (n,)·(n, D) contraction + broadcast.
+
+The pytree is reconstructed only at the ``grad_fn`` boundary (models consume
+trees), via static-slice views that XLA folds into the surrounding
+computation; gradients are re-ravelled the same way.  A flat-engine round
+computes the same trajectory as the tree engine within 1e-5
+(tests/test_flat_engine.py) — ``FlatSpec.unflatten ∘ flatten`` is exact, and
+every whole-buffer op is the leaf-wise op with the leaf loop removed.
+
+Mapping to the paper: the buffer's row ``flat[i]`` IS Algorithm 1's x_i / z_i
+(agent i's full parameter vector, x_i ∈ ℝ^D), so Algorithm-1 lines read off
+directly as matrix ops on the buffer: line 6 is ``W @ flat``, lines 8–10 are
+``(c/K) @ flat`` broadcast back.  See docs/ALGORITHM.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip as gossip_lib
+from repro.core import server as server_lib
+from repro.core.feddec import FedDecConfig, FedState
+
+__all__ = ["FlatSpec", "FlatFedState", "make_flat_spec",
+           "make_flat_spec_from_stacked", "init_flat_state",
+           "flatten_fedstate", "unflatten_fedstate",
+           "make_flat_feddec_step", "make_flat_feddec_round",
+           "resolve_flat_gossip"]
+
+GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
+LrFn = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static ravel/unravel spec: pytree ⇄ contiguous flat vector.
+
+    Built once per (model × dtype); the slicing offsets are Python ints, so
+    ``unflatten`` lowers to static slices + reshapes that XLA fuses into the
+    consumer — reconstructing the tree view costs no extra memory pass.
+
+    Attributes:
+      treedef: pytree structure of the single-agent parameters.
+      shapes/dtypes: per-leaf (no agent dim) shapes and original dtypes.
+      offsets/sizes: per-leaf [offset, offset+size) spans in the flat vector.
+      d: total flat length D = Σ sizes.
+      dtype: the buffer dtype (all leaves are cast into it on flatten and
+        back to their original dtype on unflatten).
+    """
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    offsets: tuple
+    sizes: tuple
+    d: int
+    dtype: Any
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.shapes)
+
+    # -- single-agent (no leading n) ----------------------------------------
+
+    def ravel(self, tree: Any) -> jax.Array:
+        leaves = self.treedef.flatten_up_to(tree)
+        return jnp.concatenate(
+            [jnp.asarray(l).astype(self.dtype).reshape(-1) for l in leaves])
+
+    def unravel(self, row: jax.Array, cast: bool = True) -> Any:
+        parts = [
+            row[o:o + s].reshape(shape).astype(dt if cast else row.dtype)
+            for o, s, shape, dt in zip(self.offsets, self.sizes,
+                                       self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, parts)
+
+    # -- stacked (leading agent dim) ----------------------------------------
+
+    def flatten(self, stacked: Any, dtype=None) -> jax.Array:
+        """Stacked pytree (every leaf (n, ...)) → (n, D) buffer.
+
+        ``dtype`` overrides the buffer dtype (used for optimizer-state
+        buffers, which stay f32 even when the parameter buffer is bf16).
+        """
+        leaves = self.treedef.flatten_up_to(stacked)
+        n = leaves[0].shape[0]
+        dt = self.dtype if dtype is None else dtype
+        return jnp.concatenate(
+            [jnp.asarray(l).astype(dt).reshape(n, -1)
+             for l in leaves], axis=1)
+
+    def unflatten(self, buf: jax.Array, cast: bool = True) -> Any:
+        """(n, D) buffer → stacked pytree of (n, ...) leaves."""
+        n = buf.shape[0]
+        parts = [
+            buf[:, o:o + s].reshape((n,) + shape)
+            .astype(dt if cast else buf.dtype)
+            for o, s, shape, dt in zip(self.offsets, self.sizes,
+                                       self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, parts)
+
+
+def _spec_from_leaves(leaves, treedef, dtype) -> FlatSpec:
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    if dtype is None:
+        dtype = jnp.result_type(*dtypes) if dtypes else jnp.float32
+    sizes = tuple(int(np.prod(s, dtype=np.int64)) for s in shapes)
+    offsets = tuple(int(o) for o in np.cumsum((0,) + sizes)[:-1])
+    return FlatSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=offsets, sizes=sizes, d=int(sum(sizes)),
+                    dtype=jnp.dtype(dtype))
+
+
+def make_flat_spec(params_single: Any, dtype=None) -> FlatSpec:
+    """Spec from a single-agent pytree (arrays or ShapeDtypeStructs).
+
+    ``dtype`` defaults to the promoted dtype of all leaves (f32 params stay
+    f32, pure-bf16 models keep a bf16 buffer — the exchange-compression
+    regime; mixed trees promote).
+    """
+    leaves, treedef = jax.tree.flatten(params_single)
+    return _spec_from_leaves(leaves, treedef, dtype)
+
+
+def make_flat_spec_from_stacked(stacked: Any, dtype=None) -> FlatSpec:
+    """Spec from a *stacked* pytree (leading agent dim stripped per leaf)."""
+    leaves, treedef = jax.tree.flatten(stacked)
+    struct = [jax.ShapeDtypeStruct(l.shape[1:], l.dtype) for l in leaves]
+    return _spec_from_leaves(struct, treedef, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flat training state
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FlatFedState:
+    """Flat-engine carried state: the (n_agents, D) buffer + step counter.
+
+    ``flat[i]`` is Algorithm 1's z_i^t ∈ ℝ^D.  Optimizer state lives in
+    buffers of the same layout (e.g. a momentum (n, D) buffer), so the local
+    update is elementwise over contiguous memory.
+    """
+
+    flat: jax.Array      # (n_agents, D), spec.dtype
+    step: jax.Array      # scalar int32, the paper's t (starts at 1)
+    opt_state: Any = ()  # flat optimizer buffers (SGD: empty)
+
+
+def init_flat_state(spec: FlatSpec, params_single: Any, n_agents: int,
+                    optimizer=None) -> FlatFedState:
+    """z_i^1 = z^1 ∀i (Alg. 1 line 1), directly in the flat layout."""
+    row = spec.ravel(params_single)
+    flat = jnp.tile(row[None], (n_agents, 1))
+    opt_state = optimizer.init(flat) if optimizer is not None else ()
+    return FlatFedState(flat=flat, step=jnp.asarray(1, dtype=jnp.int32),
+                        opt_state=opt_state)
+
+
+def _flatten_opt_state(spec: FlatSpec, opt_state: Any):
+    """Tree-engine opt state → flat buffers.
+
+    Moment buffers keep their own (f32) dtype rather than the parameter
+    buffer's — matching what ``init_flat_state``'s ``optimizer.init(flat)``
+    produces, so entering the flat engine mid-training and starting in it
+    give the same trajectory even with a bf16 parameter buffer.
+
+    Supports the repro.optim optimizers: stateless SGD (()), params-shaped
+    trees (momentum), and the adamw dict ({'m','v','count'} with a per-agent
+    count that is identical across agents by construction).
+    """
+    if isinstance(opt_state, tuple) and opt_state == ():
+        return ()
+    if jax.tree.structure(opt_state) == spec.treedef:
+        dt = jnp.result_type(*jax.tree.leaves(opt_state))
+        return spec.flatten(opt_state, dtype=dt)
+    if isinstance(opt_state, dict) and set(opt_state) == {"m", "v", "count"}:
+        def moment_dtype(tree):
+            return jnp.result_type(*jax.tree.leaves(tree))
+        return {"m": spec.flatten(opt_state["m"],
+                                  dtype=moment_dtype(opt_state["m"])),
+                "v": spec.flatten(opt_state["v"],
+                                  dtype=moment_dtype(opt_state["v"])),
+                "count": opt_state["count"][0]}
+    raise ValueError(
+        "cannot flatten this optimizer state layout; re-init with "
+        "init_flat_state(spec, params_single, n, optimizer=...) instead")
+
+
+def _unflatten_opt_state(spec: FlatSpec, opt_state: Any, n_agents: int):
+    if isinstance(opt_state, tuple) and opt_state == ():
+        return ()
+    if isinstance(opt_state, dict) and set(opt_state) == {"m", "v", "count"}:
+        return {"m": spec.unflatten(opt_state["m"], cast=False),
+                "v": spec.unflatten(opt_state["v"], cast=False),
+                "count": jnp.broadcast_to(opt_state["count"], (n_agents,))}
+    return spec.unflatten(opt_state, cast=False)
+
+
+def flatten_fedstate(spec: FlatSpec, state: FedState) -> FlatFedState:
+    """Tree-engine FedState → FlatFedState (one-time ravel, e.g. at start)."""
+    return FlatFedState(flat=spec.flatten(state.params), step=state.step,
+                        opt_state=_flatten_opt_state(spec, state.opt_state))
+
+
+def unflatten_fedstate(spec: FlatSpec, fstate: FlatFedState) -> FedState:
+    """FlatFedState → tree-engine FedState (e.g. for checkpointing/eval)."""
+    n = fstate.flat.shape[0]
+    return FedState(params=spec.unflatten(fstate.flat), step=fstate.step,
+                    opt_state=_unflatten_opt_state(spec, fstate.opt_state, n))
+
+
+# ---------------------------------------------------------------------------
+# Whole-buffer gossip dispatch
+# ---------------------------------------------------------------------------
+
+
+def resolve_flat_gossip(cfg: FedDecConfig,
+                        block_d: int | None = None) -> Callable:
+    """gossip_impl → a whole-buffer (w, (n, D)) -> (n, D) mixing fn.
+
+    'dense'  one einsum contraction;
+    'pallas' one kernels.ops.gossip_mix call (W VMEM-resident, cast fused);
+    'sparse' neighbour-only mix over the static edge structure — the
+             edge-blocked Pallas kernel on TPU, ELL/CSR gather off it;
+    'none'   identity (FedAvg).
+    """
+    impl = cfg.gossip_impl
+    if impl == "none":
+        return lambda w, x: x
+    if impl == "dense":
+        def mix(w: jax.Array, x: jax.Array) -> jax.Array:
+            return jnp.einsum("ij,jd->id", w.astype(x.dtype), x,
+                              precision=jax.lax.Precision.HIGHEST)
+        return mix
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        if block_d is None:
+            return kernel_ops.gossip_mix
+        return lambda w, x: kernel_ops.gossip_mix(w, x, block_d=block_d)
+    if impl == "sparse":
+        from repro.kernels import ops as kernel_ops
+        graph = cfg.mixing.graph
+        max_deg = int(graph.degrees.max()) if graph.n else 0
+        # the kernel pads rows to max_deg (ELL), so it only makes sense in
+        # the low/even-degree regime; skewed graphs keep the CSR gather
+        if kernel_ops.on_tpu() and 0 < max_deg <= gossip_lib.ELL_MAX_DEG:
+            return kernel_ops.make_sparse_gossip_pallas(graph)
+        return gossip_lib.make_sparse_gossip(graph)
+    raise ValueError(f"unknown gossip_impl {impl!r}")  # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
+# Executors (mirror repro.core.feddec's, on the flat carry)
+# ---------------------------------------------------------------------------
+
+
+def _build_flat_step_body(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+                          lr_fn: LrFn, gossip_fn, optimizer):
+    """Algorithm-1 body on the flat carry; unflattens only around grad_fn."""
+    if gossip_fn is None:
+        gossip_fn = resolve_flat_gossip(cfg)
+    n_agents = cfg.n_agents
+
+    def step(state: FlatFedState, batch: Any, key: jax.Array):
+        t = state.step
+        key_w, key_grad, key_server = jax.random.split(
+            jax.random.fold_in(key, t), 3)
+        eta = lr_fn(t)
+
+        # line 3: sample W^t
+        w = cfg.mixing.sample(key_w)
+
+        # lines 4–5: tree view for the model, flat buffer for the update
+        params = spec.unflatten(state.flat)
+        agent_keys = jax.random.split(key_grad, n_agents)
+        losses, grads = jax.vmap(grad_fn)(params, batch, agent_keys)
+        g_flat = spec.flatten(grads)
+        if optimizer is None:  # plain SGD: one elementwise pass over (n, D)
+            x_half = state.flat - eta.astype(spec.dtype) * g_flat
+            new_opt = state.opt_state
+        else:
+            x_half, new_opt = optimizer.update(state.flat, g_flat,
+                                               state.opt_state, eta)
+
+        # line 6: gossip — one whole-buffer mixing op
+        x_next = gossip_fn(w, x_half)
+
+        # lines 7–12: periodic server round on the flat buffer
+        if cfg.server_enabled:
+            is_round = (t + 1) % cfg.h == 0
+            z_next = jax.lax.cond(
+                is_round,
+                lambda x: server_lib.server_round_flat(key_server, x, cfg.k),
+                lambda x: x,
+                x_next)
+        else:
+            z_next = x_next
+
+        new_state = FlatFedState(flat=z_next, step=t + 1, opt_state=new_opt)
+        metrics = {"loss": jnp.mean(losses), "eta": eta}
+        return new_state, metrics
+
+    return step
+
+
+def make_flat_feddec_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+                          lr_fn: LrFn, gossip_fn=None, optimizer=None,
+                          donate: bool = True, jit: bool = True):
+    """One-iteration flat executor: step(state, batch, key) like the tree
+    engine's make_feddec_step, carrying FlatFedState."""
+    step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
+                                 optimizer)
+    if not jit:
+        return step
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+def make_flat_feddec_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+                           lr_fn: LrFn, gossip_fn=None, optimizer=None,
+                           metrics_fn: Callable[[FlatFedState], dict]
+                           | None = None,
+                           donate: bool = True, jit: bool = True,
+                           unroll: int = 1):
+    """The fused flat executor: H steps per compiled call, flat carry.
+
+    Same contract as repro.core.feddec.make_feddec_round — batches carry a
+    leading fused-step dim, W^t resamples per scanned step, metrics stack to
+    (H,) — but the scan carry is the single (n, D) buffer (+ flat optimizer
+    buffers), so the scan body is a handful of whole-buffer ops instead of a
+    tree of per-leaf ones.  ``metrics_fn`` receives the post-step
+    FlatFedState; use ``spec.unflatten(state.flat)`` inside it for
+    tree-shaped diagnostics.
+    """
+    step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
+                                 optimizer)
+
+    def round_fn(state: FlatFedState, batches: Any, key: jax.Array):
+        def body(carry, batch):
+            new_state, metrics = step(carry, batch, key)
+            if metrics_fn is not None:
+                metrics = {**metrics, **metrics_fn(new_state)}
+            return new_state, metrics
+
+        return jax.lax.scan(body, state, batches, unroll=unroll)
+
+    if not jit:
+        return round_fn
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(round_fn, donate_argnums=donate_argnums)

@@ -1,6 +1,6 @@
 """The gossip averaging step  x_i ← Σ_j W_ij x_j  (Algorithm 1, line 6).
 
-Three execution paths, identical math, different cost models:
+Four execution paths, identical math, different cost models:
 
 1. ``gossip_mix_dense`` — ``einsum('ij,j...->i...')`` on stacked parameters.
    Under pjit/SPMD with the agent dim sharded, XLA lowers this to an
@@ -14,11 +14,18 @@ Three execution paths, identical math, different cost models:
 
 3. ``kernels.ops.gossip_mix`` — a Pallas kernel for the local
    (n, n) @ (n, D) mixing contraction once parameters are resident
-   (used on the flattened-parameter hot loop; see kernels/gossip_mix.py).
+   (the flat-engine ``gossip_impl='pallas'`` hot path; see
+   kernels/gossip_mix.py and repro/core/flat.py).
+
+4. ``make_sparse_gossip`` — neighbour-only gather + ``segment_sum`` over the
+   graph's static CSR edge list (:func:`repro.core.topology.csr_edges`):
+   O(|E|·d) instead of the dense O(n²·d), which is what lets ``n_agents``
+   scale past the dense contraction (``gossip_impl='sparse'``; Pallas
+   edge-blocked variant in kernels/gossip_mix.py).
 
 All paths preserve the mean exactly when W is doubly stochastic — the
-invariant Lemma 2 relies on (x̄^{t+1} = x̄^{t+1/2}); tests/test_gossip.py
-checks it property-style.
+invariant Lemma 2 relies on (x̄^{t+1} = x̄^{t+1/2}); tests/test_gossip_server.py
+and tests/test_gossip_impls.py check it property-style.
 """
 
 from __future__ import annotations
@@ -36,6 +43,8 @@ __all__ = [
     "gossip_mix_dense",
     "gossip_mix_permute",
     "make_permute_gossip",
+    "make_sparse_gossip",
+    "make_sparse_gossip_tree",
 ]
 
 
@@ -50,6 +59,96 @@ def gossip_mix_dense(w: jax.Array, stacked: object) -> object:
         return jnp.einsum("ij,j...->i...", w.astype(leaf.dtype), leaf,
                           precision=jax.lax.Precision.HIGHEST)
     return jax.tree.map(mix, stacked)
+
+
+ELL_MAX_DEG = 16  # below this, the padded neighbour loop beats CSR scatter
+
+
+def make_sparse_gossip(graph: topo.Graph):
+    """Neighbour-only gossip over the graph's static edge structure.
+
+    ``y_i = W_ii x_i + Σ_{(i,j)∈E} W_ij x_j`` at O(|E|·d) (vs the dense
+    contraction's O(n²·d)) — the mixing *support* is static (the graph),
+    only the weights vary per step (link failures zero entries of the
+    sampled W; a dead edge contributes 0, so no re-indexing is needed).
+    Two realisations, picked by the graph's max degree:
+
+    * **ELL** (max_deg ≤ %d): neighbour lists padded to (n, max_deg)
+      (padding points at the row's own agent, weight 0); the mix is
+      max_deg fused gather-multiply-add passes over (n, d) — no scatter,
+      no (|E|, d) temporary.  The typical regime (rings, geometric
+      graphs): the n/deg× FLOP cut over dense that makes n_agents ≳ 256
+      sustainable.
+    * **CSR** (skewed degrees): gather over the receiver-sorted edge list
+      (:func:`repro.core.topology.csr_edges`) + ``segment_sum`` — work
+      stays O(|E|·d) even when one hub has a huge degree.
+
+    Returns:
+      mix(w, x) -> y for stacked arrays x of shape (n, ...) — the flat
+      engine's (n, D) buffer, or any single leaf.  For pytrees use
+      :func:`make_sparse_gossip_tree`.
+    """
+    n = graph.n
+    adj = np.asarray(graph.adjacency)
+    max_deg = int(adj.sum(axis=1).max()) if n else 0
+
+    def bcast(v, ndim):
+        return v[(...,) + (None,) * (ndim - 1)]
+
+    if max_deg == 0:  # isolated graph (FedAvg 𝒲 = {I}): y = W_ii x_i
+        return lambda w, x: bcast(jnp.diagonal(w.astype(x.dtype)),
+                                  x.ndim) * x
+
+    if max_deg <= ELL_MAX_DEG:
+        nbr = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, max_deg))
+        pad = np.zeros((n, max_deg), dtype=bool)
+        for i in range(n):
+            js = np.flatnonzero(adj[i])
+            nbr[i, :len(js)] = js
+            pad[i, len(js):] = True
+        nbr_j = jnp.asarray(nbr)
+        pad_j = jnp.asarray(pad)
+
+        def mix(w: jax.Array, x: jax.Array) -> jax.Array:
+            wd = w.astype(x.dtype)
+            wv = jnp.where(pad_j, 0,
+                           jnp.take_along_axis(wd, nbr_j, axis=1))
+            y = bcast(jnp.diagonal(wd), x.ndim) * x
+            for k in range(max_deg):
+                y = y + bcast(wv[:, k], x.ndim) \
+                    * jnp.take(x, nbr_j[:, k], axis=0)
+            return y
+
+        return mix
+
+    recv, send, _ = topo.csr_edges(graph)
+    recv_idx = jnp.asarray(recv)
+    send_idx = jnp.asarray(send)
+
+    def mix(w: jax.Array, x: jax.Array) -> jax.Array:
+        wd = w.astype(x.dtype)
+        own = bcast(jnp.diagonal(wd), x.ndim) * x
+        coeff = wd[recv_idx, send_idx]
+        gathered = bcast(coeff, x.ndim) * x[send_idx]
+        return own + jax.ops.segment_sum(
+            gathered, recv_idx, num_segments=n, indices_are_sorted=True)
+
+    return mix
+
+
+if make_sparse_gossip.__doc__:  # stripped under python -OO
+    make_sparse_gossip.__doc__ %= ELL_MAX_DEG
+
+
+def make_sparse_gossip_tree(graph: topo.Graph):
+    """Leaf-wise application of :func:`make_sparse_gossip` to stacked pytrees
+    (the tree-engine ``gossip_impl='sparse'`` path)."""
+    mix = make_sparse_gossip(graph)
+
+    def gossip(w: jax.Array, stacked: object) -> object:
+        return jax.tree.map(lambda leaf: mix(w, leaf), stacked)
+
+    return gossip
 
 
 def make_permute_gossip(graph: topo.Graph, mesh: jax.sharding.Mesh,
@@ -121,13 +220,30 @@ def make_permute_gossip(graph: topo.Graph, mesh: jax.sharding.Mesh,
             return _sm(fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
 
+    # One shard-mapped fn per distinct leaf spec, built once at factory time
+    # (previously rebuilt per leaf on every gossip() call — pure retracing
+    # overhead).  Specs are hashable, so unseen ones (leaf_specs=None with a
+    # new leaf rank) memoise on first use.
+    _mix_fns: dict = {}
+
+    def _mix_for(spec: P):
+        fn = _mix_fns.get(spec)
+        if fn is None:
+            fn = _shard_map(per_shard, in_specs=(P(None, None), spec),
+                            out_specs=spec)
+            _mix_fns[spec] = fn
+        return fn
+
+    if leaf_specs is not None:
+        for s in jax.tree.leaves(leaf_specs,
+                                 is_leaf=lambda x: isinstance(x, P)):
+            _mix_for(s)
+
     def gossip(w: jax.Array, stacked: object) -> object:
         def mix(leaf: jax.Array, spec) -> jax.Array:
             if spec is None:
                 spec = P(axis_name, *([None] * (leaf.ndim - 1)))
-            fn = _shard_map(per_shard, in_specs=(P(None, None), spec),
-                            out_specs=spec)
-            return fn(w, leaf)
+            return _mix_for(spec)(w, leaf)
         if leaf_specs is None:
             return jax.tree.map(lambda l: mix(l, None), stacked)
         return jax.tree.map(mix, stacked, leaf_specs,

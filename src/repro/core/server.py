@@ -25,7 +25,9 @@ __all__ = [
     "sample_participants",
     "participant_weights",
     "aggregate_and_broadcast",
+    "aggregate_and_broadcast_flat",
     "server_round",
+    "server_round_flat",
 ]
 
 
@@ -63,3 +65,21 @@ def server_round(key: jax.Array, stacked: object, k: int) -> object:
     n = leaves[0].shape[0]
     counts = sample_participants(key, n, k)
     return aggregate_and_broadcast(participant_weights(counts, k), stacked)
+
+
+def aggregate_and_broadcast_flat(weights: jax.Array,
+                                 flat: jax.Array) -> jax.Array:
+    """Flat-engine K-sample average: one (n,)·(n, D) contraction + broadcast.
+
+    Same math as :func:`aggregate_and_broadcast` applied leaf-wise, but on
+    the flat-engine's single contiguous (n, D) buffer it is exactly one
+    fused whole-buffer op (the tree path pays one reduction per leaf).
+    """
+    z = jnp.tensordot(weights.astype(flat.dtype), flat, axes=(0, 0))  # (D,)
+    return jnp.broadcast_to(z[None], flat.shape)
+
+
+def server_round_flat(key: jax.Array, flat: jax.Array, k: int) -> jax.Array:
+    """Flat-buffer server round (lines 8–10) on a stacked (n, D) buffer."""
+    counts = sample_participants(key, flat.shape[0], k)
+    return aggregate_and_broadcast_flat(participant_weights(counts, k), flat)

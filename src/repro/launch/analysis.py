@@ -23,7 +23,7 @@ from repro.launch import hlo_analysis
 
 __all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "CollectiveStats",
            "parse_collectives", "roofline_terms", "RooflineReport",
-           "dtype_bytes"]
+           "dtype_bytes", "gossip_cost_model"]
 
 PEAK_FLOPS = 197e12   # bf16 per chip
 HBM_BW = 819e9        # bytes/s per chip
@@ -122,6 +122,53 @@ class RooflineReport:
             "dominant": self.dominant,
             "useful_ratio": self.useful_flops_ratio,
         }
+
+
+def gossip_cost_model(*, n_agents: int, d: int, num_leaves: int,
+                      num_directed_edges: int, param_bytes: int = 4,
+                      dispatch_us: float = 5.0) -> dict[str, dict]:
+    """Analytic per-gossip-step cost of every impl × state layout.
+
+    The gossip contraction Y = W X (X the stacked (n, D) parameters) is
+    bandwidth-bound for small n (2n FLOP per ``param_bytes`` streamed is far
+    below the ridge point) and compute-bound once n² FLOPs dominate — which
+    is exactly the regime split the flat engine's impls target:
+
+      * ``tree_dense``  — leaf-wise einsum: streams X once per leaf AND
+        materialises an f32 upcast of each non-f32 leaf (2× read tax),
+        plus one dispatch per leaf inside the scan body;
+      * ``flat_dense``  — one whole-buffer einsum: same upcast tax, one
+        dispatch, no per-leaf padding;
+      * ``flat_pallas`` — one kernel call: X streams through VMEM exactly
+        once with the cast fused (no upcast materialisation), W resident;
+      * ``flat_sparse`` — gather + segment_sum over the CSR edge list:
+        reads |E| rows instead of computing n² dot products — the FLOP
+        term drops from 2n²D to 2|E|D, which is what survives n ≳ 256.
+
+    Returns {impl: {bytes, flops, dispatches, pred_us}} with pred_us =
+    max(memory, compute) + dispatch overhead at the module constants
+    (HBM_BW, PEAK_FLOPS; dispatch_us per dispatch — host-side, so it
+    vanishes inside a fused scan but bounds the per-step executor).
+    """
+    n, dd, b = n_agents, float(d), param_bytes
+    stream = 2.0 * n * dd * b                 # read X + write Y once
+    upcast = 2.0 * n * dd * 4 if b != 4 else 0.0  # f32 temp write+read
+    dense_flops = 2.0 * n * n * dd
+    sparse_flops = 2.0 * num_directed_edges * dd
+    sparse_bytes = (num_directed_edges + 2.0 * n) * dd * b  # gather+own+Y
+
+    def entry(bytes_, flops, dispatches):
+        pred = max(bytes_ / HBM_BW, flops / PEAK_FLOPS) * 1e6 \
+            + dispatches * dispatch_us
+        return {"bytes": bytes_, "flops": flops, "dispatches": dispatches,
+                "pred_us": pred}
+
+    return {
+        "tree_dense": entry(stream + upcast, dense_flops, num_leaves),
+        "flat_dense": entry(stream + upcast, dense_flops, 1),
+        "flat_pallas": entry(stream, dense_flops, 1),
+        "flat_sparse": entry(sparse_bytes, sparse_flops, 1),
+    }
 
 
 def roofline_terms(*, name: str, chips: int, per_device_flops: float,

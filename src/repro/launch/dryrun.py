@@ -26,6 +26,8 @@ import time
 import traceback
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro import sharding as shd
 from repro.configs import ARCH_NAMES, SHAPES, get_config
@@ -47,9 +49,30 @@ def _model_flops(cfg, shape) -> float:
     return 2.0 * n_active * 1 * shape.global_batch  # one token per request
 
 
+def _gossip_model(cfg, axes, state_layout: str) -> dict:
+    """Analytic per-impl gossip cost for this (arch × mesh) — the flat-path
+    extension of the roofline: predicted per-step mix time for the tree
+    leaf-wise dense path vs the flat dense/pallas/sparse whole-buffer ops."""
+    from repro.launch.steps import adapt_for_mesh, build_fed_setup
+    from repro.models import build_model
+    acfg = adapt_for_mesh(cfg, axes)
+    fcfg, n_agents = build_fed_setup(acfg, axes)
+    params = jax.eval_shape(build_model(acfg).init, jax.random.key(0))
+    leaves = jax.tree.leaves(params)
+    d = int(sum(int(np.prod(l.shape)) for l in leaves))
+    pbytes = jnp.dtype(leaves[0].dtype).itemsize
+    model = analysis.gossip_cost_model(
+        n_agents=n_agents, d=d, num_leaves=len(leaves),
+        num_directed_edges=2 * fcfg.mixing.graph.num_edges,
+        param_bytes=pbytes)
+    return {"n_agents": n_agents, "d": d, "num_leaves": len(leaves),
+            "state_layout": state_layout, "impls": model}
+
+
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             out_dir: str | None = RESULTS_DIR,
-            fused_steps: int | None = None) -> dict:
+            fused_steps: int | None = None,
+            state_layout: str = "tree") -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -58,12 +81,17 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
     if fused_steps and shape.kind == "train":
         tag += f"__fused{fused_steps}"
+    if state_layout == "flat" and shape.kind == "train":
+        tag += "__flat"
     rec: dict = {"arch": arch, "shape": shape_name,
                  "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
-                 "fused_steps": fused_steps if shape.kind == "train" else None}
+                 "fused_steps": fused_steps if shape.kind == "train" else None,
+                 "state_layout": state_layout
+                 if shape.kind == "train" else None}
     t0 = time.time()
     try:
-        low = build_lowerable(cfg, shape, axes, fused_steps=fused_steps)
+        low = build_lowerable(cfg, shape, axes, fused_steps=fused_steps,
+                              state_layout=state_layout)
         lowered = low.lower(mesh)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -107,6 +135,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                     "collective_bytes_by_kind": hlo.collective_bytes_by_kind},
             "roofline": report.row(),
         })
+        if shape.kind == "train":
+            rec["gossip_cost_model"] = _gossip_model(cfg, axes, state_layout)
         print(f"[ok]   {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s")
         print(f"       memory_analysis: {mem}")
         print(f"       hlo(loop-aware): {hlo.summary()}")
@@ -114,6 +144,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
               f"memory {report.memory_s * 1e3:.2f}ms collective "
               f"{report.collective_s * 1e3:.2f}ms → {report.dominant}; "
               f"useful-flops ratio {report.useful_flops_ratio:.2f}")
+        if shape.kind == "train" and state_layout == "flat":
+            gm = rec["gossip_cost_model"]
+            pred = ", ".join(
+                f"{k} {v['pred_us']:.0f}µs" for k, v in gm["impls"].items())
+            print(f"       gossip/step (n={gm['n_agents']}, "
+                  f"D={gm['d']:.2e}, {gm['num_leaves']} leaves): {pred}")
     except Exception as e:  # noqa: BLE001 — record and continue the sweep
         rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()})
@@ -136,6 +172,12 @@ def main() -> None:
                    help="compile train steps as the fused H-step round "
                         "executor (0 = per-step; non-train shapes "
                         "unaffected)")
+    p.add_argument("--state-layout", default="tree",
+                   choices=["tree", "flat"],
+                   help="train-state engine: 'flat' compiles the single "
+                        "(n_agents, D)-buffer hot loop and reports the "
+                        "per-impl gossip cost model (non-train shapes "
+                        "unaffected)")
     p.add_argument("--out", default=RESULTS_DIR)
     args = p.parse_args()
 
@@ -150,7 +192,8 @@ def main() -> None:
         for shape in shapes:
             for multi in meshes:
                 rec = run_one(arch, shape, multi, args.out,
-                              fused_steps=args.fused or None)
+                              fused_steps=args.fused or None,
+                              state_layout=args.state_layout)
                 if rec["status"] != "ok":
                     failures.append(rec)
     print(f"\n{len(failures)} failures / "

@@ -17,6 +17,7 @@ and launch/train.py owns the real training loop.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax
@@ -26,7 +27,7 @@ from jax.sharding import PartitionSpec as P
 from repro import sharding as shd
 from repro.configs.base import ArchConfig, FedConfig
 from repro.configs.shapes import ShapeConfig
-from repro.core import feddec, theory, topology as topo
+from repro.core import feddec, flat as flat_lib, theory, topology as topo
 from repro.core.mixing import MixingDistribution
 from repro.launch import specs as specs_lib
 from repro.models import build_model
@@ -69,8 +70,12 @@ def build_fed_setup(cfg: ArchConfig, axes: shd.MeshAxes,
         raise ValueError(f"unknown graph {fed.graph!r}")
     mixing = MixingDistribution(graph, p_fail=fed.p_fail,
                                 scheme="metropolis")
+    # 'permute' is a gossip_fn built on the mesh (make_permute_gossip), not
+    # a FedDecConfig impl — the config falls back to dense there; any other
+    # unknown impl is left for FedDecConfig's validation to reject
+    impl = "dense" if fed.gossip_impl == "permute" else fed.gossip_impl
     fcfg = feddec.FedDecConfig(mixing=mixing, h=fed.h,
-                               k=min(fed.k, n), gossip_impl="dense")
+                               k=min(fed.k, n), gossip_impl=impl)
     return fcfg, n
 
 
@@ -162,17 +167,27 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
                           lr: float = 1e-2,
                           microbatches: int | None = None,
                           mesh: jax.sharding.Mesh | None = None,
-                          fused_steps: int | None = None) -> Lowerable:
+                          fused_steps: int | None = None,
+                          state_layout: str = "tree") -> Lowerable:
     """The FedDec training step at production shape.
 
     ``fed.gossip_impl='permute'`` selects the neighbour-only ppermute gossip
     schedule (needs ``mesh``; sharded agent layout only) — the optimized
-    path of §Perf iteration A1.  Default is the paper-faithful dense einsum.
+    path of §Perf iteration A1.  ``'pallas'``/``'sparse'`` select the
+    streaming-kernel / CSR gather paths (repro.core.feddec.resolve_tree_gossip
+    on the tree layout, whole-buffer ops on the flat layout).  Default is the
+    paper-faithful dense einsum.
 
     ``fused_steps=H`` lowers the fused round executor instead of the single
     step: batches gain a leading (H,) fused-step dim, all H iterations
     (gossip, server round included) run in one compiled ``lax.scan``, and
     metrics come back stacked ``(H,)``.
+
+    ``state_layout='flat'`` lowers the single-buffer engine
+    (repro.core.flat): the carried state is one contiguous (n_agents, D)
+    buffer sharded over the agent axes (each agent's row stays whole — the
+    flat layout trades inner tensor-parallel sharding for whole-buffer ops,
+    so it suits archs whose per-agent replica fits a device slice).
     """
     cfg = adapt_for_mesh(cfg, axes)
     if cfg.fed_agent_layout == "replicated":
@@ -205,24 +220,50 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
             else axes.data_axes[0]
         exch = jnp.bfloat16 if getattr(fed, "gossip_dtype", "f32") == "bf16" \
             else None
+        # the flat layout mixes one 2-D buffer leaf sharded over agents
+        # only — the per-leaf param specs don't apply there
         gossip_fn = gossip_lib.make_permute_gossip(
-            fcfg.mixing.graph, mesh, agent_ax, leaf_specs=param_specs,
+            fcfg.mixing.graph, mesh, agent_ax,
+            leaf_specs=None if state_layout == "flat" else param_specs,
             exchange_dtype=exch)
 
     lr_fn = lambda t: jnp.asarray(lr, jnp.float32)  # noqa: E731
-    state_specs = feddec.FedState(params=param_specs, step=P(),
-                                  opt_state=())
     batch_specs = shd.batch_pspecs(cfg, batch_struct, axes, stacked=True)
     name = f"train:{cfg.name}:{shape.name}"
 
+    if state_layout not in ("tree", "flat"):
+        raise ValueError(f"state_layout must be 'tree' or 'flat', "
+                         f"got {state_layout!r}")
+    if state_layout == "flat":
+        spec = flat_lib.make_flat_spec(params_struct)
+        state_struct = jax.eval_shape(
+            lambda p: flat_lib.init_flat_state(spec, p, n_agents),
+            params_struct)
+        agent_ax = axes.data_axes if len(axes.data_axes) > 1 \
+            else axes.data_axes[0]
+        flat_spec_p = P(agent_ax, None) \
+            if cfg.fed_agent_layout == "sharded" else P(None, None)
+        state_specs = flat_lib.FlatFedState(flat=flat_spec_p, step=P(),
+                                            opt_state=())
+        make_step = functools.partial(flat_lib.make_flat_feddec_step,
+                                      fcfg, spec, grad_fn, lr_fn)
+        make_round = functools.partial(flat_lib.make_flat_feddec_round,
+                                       fcfg, spec, grad_fn, lr_fn)
+        name += ":flat"
+    else:
+        state_specs = feddec.FedState(params=param_specs, step=P(),
+                                      opt_state=())
+        make_step = functools.partial(feddec.make_feddec_step,
+                                      fcfg, grad_fn, lr_fn)
+        make_round = functools.partial(feddec.make_feddec_round,
+                                       fcfg, grad_fn, lr_fn)
+
     if fused_steps is None:
-        step = feddec.make_feddec_step(fcfg, grad_fn, lr_fn,
-                                       gossip_fn=gossip_fn, jit=False)
+        step = make_step(gossip_fn=gossip_fn, jit=False)
     else:
         if fused_steps < 1:
             raise ValueError(f"fused_steps must be >= 1, got {fused_steps}")
-        step = feddec.make_feddec_round(fcfg, grad_fn, lr_fn,
-                                        gossip_fn=gossip_fn, jit=False)
+        step = make_round(gossip_fn=gossip_fn, jit=False)
         # every batch leaf gains a leading fused-step dim, unsharded (the
         # scan consumes one slice per step)
         batch_struct = jax.tree.map(
@@ -230,7 +271,7 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
             batch_struct)
         batch_specs = jax.tree.map(lambda s: P(None, *s), batch_specs,
                                    is_leaf=lambda x: isinstance(x, P))
-        name = f"train:{cfg.name}:{shape.name}:fused{fused_steps}"
+        name += f":fused{fused_steps}"
 
     return Lowerable(
         fn=step,
@@ -327,6 +368,7 @@ def build_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     if shape.kind == "train":
         return build_train_lowerable(cfg, shape, axes, **kw)
     kw.pop("fed", None), kw.pop("mesh", None), kw.pop("fused_steps", None)
+    kw.pop("state_layout", None)
     if shape.kind == "prefill":
         return build_prefill_lowerable(cfg, shape, axes)
     return build_decode_lowerable(cfg, shape, axes)

@@ -26,6 +26,7 @@ from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.configs.base import ArchConfig, FedConfig
 from repro.core import feddec
+from repro.core import flat as flat_lib
 from repro.core.fedavg import FedAvgConfig
 from repro.data.federated_lm import make_federated_lm
 from repro.launch.steps import build_fed_setup
@@ -49,7 +50,7 @@ def tiny_lm_config(d_model: int = 768, layers: int = 12,
 def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                per_agent_batch: int, seq_len: int, lr: float = 3e-3,
                optimizer: str = "sgd", fedavg_control: bool = False,
-               fused: bool = True,
+               fused: bool = True, state_layout: str | None = None,
                ckpt_dir: str | None = None, ckpt_every: int = 0,
                log_every: int = 10, seed: int = 0,
                data_alpha: float = 0.3):
@@ -62,31 +63,64 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     When ``steps`` is not a multiple of H the trailing short round compiles a
     second scan (shorter leading batch dim) — a one-off cost; keep ``steps``
     a multiple of H to avoid it.
+
+    ``state_layout`` selects the carried-state engine: ``'flat'`` runs
+    Algorithm 1 on the single contiguous (n_agents, D) buffer
+    (repro.core.flat — whole-buffer SGD/gossip/server ops, the hot-loop
+    default for the fused path), ``'tree'`` keeps the per-leaf pytree
+    engine.  ``None`` picks ``'flat'`` when fused, ``'tree'`` per-step.
+    The returned state is always a tree-engine ``FedState``.  The gossip
+    execution path comes from ``fed.gossip_impl``
+    (dense|pallas|sparse|none).
     """
     model = build_model(cfg)
     axes = MeshAxes(("data",), "model", {"data": fed.n_agents, "model": 1})
     fcfg, n_agents = build_fed_setup(cfg, axes, fed)
     if fedavg_control:
         fcfg = FedAvgConfig(n_agents, h=fed.h, k=fed.k)
+    if state_layout is None:
+        state_layout = "flat" if fused else "tree"
+    if state_layout not in ("tree", "flat"):
+        raise ValueError(f"state_layout must be 'tree' or 'flat', "
+                         f"got {state_layout!r}")
 
     opt = {"sgd": None, "momentum": optim.momentum_sgd(),
            "adamw": optim.adamw()}[optimizer]
     lr_fn = lambda t: jnp.asarray(lr, jnp.float32)  # noqa: E731
-    if fused:
-        round_fn = feddec.make_feddec_round(
-            fcfg, model.grad_fn(), lr_fn, optimizer=opt, donate=True)
-    else:
-        step = feddec.make_feddec_step(
-            fcfg, model.grad_fn(), lr_fn, optimizer=opt, donate=True)
 
     data = make_federated_lm(cfg.vocab_size, n_agents, seq_len,
                              alpha=data_alpha, seed=seed)
     params0 = model.init(jax.random.key(seed))
-    state = feddec.init_state(params0, n_agents,
-                              optimizer=opt)
+    spec = None
+    if state_layout == "flat":
+        spec = flat_lib.make_flat_spec(params0)
+        state = flat_lib.init_flat_state(spec, params0, n_agents,
+                                         optimizer=opt)
+        if fused:
+            round_fn = flat_lib.make_flat_feddec_round(
+                fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
+                donate=True)
+        else:
+            step = flat_lib.make_flat_feddec_step(
+                fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
+                donate=True)
+    else:
+        state = feddec.init_state(params0, n_agents, optimizer=opt)
+        if fused:
+            round_fn = feddec.make_feddec_round(
+                fcfg, model.grad_fn(), lr_fn, optimizer=opt, donate=True)
+        else:
+            step = feddec.make_feddec_step(
+                fcfg, model.grad_fn(), lr_fn, optimizer=opt, donate=True)
+
+    def ckpt_params(st):
+        return spec.unflatten(st.flat) if state_layout == "flat" \
+            else st.params
+
     print(f"[train] {cfg.name}: {model.param_count(params0):,} params × "
           f"{n_agents} agents, graph={fed.graph}, H={fed.h}, K={fcfg.k}, "
-          f"opt={optimizer}, executor={'fused' if fused else 'per-step'}")
+          f"opt={optimizer}, executor={'fused' if fused else 'per-step'}, "
+          f"layout={state_layout}, gossip={fcfg.gossip_impl}")
 
     positions = jnp.broadcast_to(
         jnp.arange(seq_len, dtype=jnp.int32)[None, None],
@@ -106,7 +140,8 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
         if (ckpt_dir and ckpt_every
                 and done // ckpt_every > prev // ckpt_every):
             save_checkpoint(ckpt_dir, done,
-                            {"params": state.params, "step": state.step})
+                            {"params": ckpt_params(state),
+                             "step": state.step})
 
     if fused:
         done = 0
@@ -132,7 +167,9 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
             log_and_ckpt(i, i + 1)
     if ckpt_dir:
         save_checkpoint(ckpt_dir, steps,
-                        {"params": state.params, "step": state.step})
+                        {"params": ckpt_params(state), "step": state.step})
+    if state_layout == "flat":
+        state = flat_lib.unflatten_fedstate(spec, state)
     return state, losses
 
 
@@ -163,6 +200,14 @@ def main() -> None:
                          "(default)")
     ex.add_argument("--per-step", dest="fused", action="store_false",
                     help="one jitted call per iteration (debugging)")
+    p.add_argument("--state-layout", default=None,
+                   choices=["tree", "flat"],
+                   help="carried-state engine: 'flat' = single (n, D) "
+                        "buffer hot loop (default when fused), 'tree' = "
+                        "per-leaf pytree engine (default per-step)")
+    p.add_argument("--gossip-impl", default="dense",
+                   choices=["dense", "pallas", "sparse", "none"],
+                   help="how the gossip mix executes (Algorithm 1 line 6)")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--d-model", type=int, default=768)
     p.add_argument("--layers", type=int, default=12)
@@ -175,12 +220,13 @@ def main() -> None:
         if args.smoke:
             cfg = cfg.smoke()
     fed = FedConfig(n_agents=args.agents, h=args.h, k=args.k,
-                    graph=args.graph, p_fail=args.p_fail)
+                    graph=args.graph, p_fail=args.p_fail,
+                    gossip_impl=args.gossip_impl)
     state, losses = train_loop(
         cfg, fed, steps=args.steps, per_agent_batch=args.batch,
         seq_len=args.seq, lr=args.lr, optimizer=args.optimizer,
         fedavg_control=args.fedavg, fused=args.fused,
-        ckpt_dir=args.ckpt_dir)
+        state_layout=args.state_layout, ckpt_dir=args.ckpt_dir)
     first = np.mean(losses[:5])
     last = np.mean(losses[-5:])
     print(f"[train] done: loss {first:.4f} → {last:.4f} "

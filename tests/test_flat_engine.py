@@ -1,0 +1,267 @@
+"""Flat-engine (single (n, D) buffer) ≡ tree-engine trajectories.
+
+The flat engine (repro.core.flat) must reproduce the tree engine
+(repro.core.feddec) step for step: the whole-buffer SGD update, gossip mix
+(every impl), and flat server round are the leaf-wise ops with the leaf loop
+removed, and both engines share the fold_in(key, t) randomness.  Asserted
+within the 1e-5 acceptance tolerance (observed exact on linreg) across
+gossip impls × server on/off × stateful optimizers, for both the fused
+round and per-step executors.  Also covers the FlatSpec ravel contract and
+FedState ⇄ FlatFedState conversion.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import (FedDecConfig, init_state, make_feddec_round,
+                        make_feddec_step)
+from repro.core import flat as flat_lib
+from repro.core import server, theory, topology as topo
+from repro.core.fedavg import make_fedavg_flat_round, make_fedavg_round
+from repro.core.mixing import MixingDistribution
+from repro.data import linreg
+
+N_AGENTS = 8
+H_CFG = 4        # server period — windows below deliberately cross it
+T_RUN = 6
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return linreg.make_problem(n=N_AGENTS, seed=0, c_base=1.3)
+
+
+@pytest.fixture(scope="module")
+def spec(problem):
+    return flat_lib.make_flat_spec(jnp.zeros(problem.d))
+
+
+def _setup(problem, *, p_fail=0.0, gossip_impl="dense", server_enabled=True):
+    g = topo.geographic_graph(problem.n, 0.6, seed=3)
+    md = MixingDistribution(g, p_fail=p_fail,
+                            scheme="metropolis" if p_fail else "laplacian")
+    cfg = FedDecConfig(mixing=md, h=H_CFG, k=2,
+                       server_enabled=server_enabled,
+                       gossip_impl=gossip_impl)
+    lr = theory.paper_stepsize(
+        problem.mu, theory.gamma(problem.l_smooth, problem.mu, H_CFG))
+    grad_fn = linreg.make_grad_fn(problem.m_rows)
+    return cfg, lr, grad_fn
+
+
+def _stacked_batches(problem, t_steps, seed=11):
+    keys = jax.random.split(jax.random.key(seed), t_steps)
+    return jax.vmap(lambda k: linreg.sample_minibatch(problem, k, m=1))(keys)
+
+
+def _run_both_rounds(problem, spec, cfg, lr, grad_fn, opt=None, key_seed=5):
+    batches = _stacked_batches(problem, T_RUN)
+    key = jax.random.key(key_seed)
+    tree_round = make_feddec_round(cfg, grad_fn, lr, optimizer=opt,
+                                   donate=False)
+    flat_round = flat_lib.make_flat_feddec_round(cfg, spec, grad_fn, lr,
+                                                 optimizer=opt, donate=False)
+    s_tree, m_tree = tree_round(
+        init_state(jnp.zeros(problem.d), problem.n, optimizer=opt),
+        batches, key)
+    s_flat, m_flat = flat_round(
+        flat_lib.init_flat_state(spec, jnp.zeros(problem.d), problem.n,
+                                 optimizer=opt),
+        batches, key)
+    return s_tree, m_tree, s_flat, m_flat
+
+
+class TestRoundEquivalence:
+    @pytest.mark.parametrize("gossip_impl",
+                             ["dense", "pallas", "sparse", "none"])
+    @pytest.mark.parametrize("server_enabled", [True, False])
+    def test_flat_matches_tree(self, problem, spec, gossip_impl,
+                               server_enabled):
+        cfg, lr, grad_fn = _setup(problem, gossip_impl=gossip_impl,
+                                  server_enabled=server_enabled)
+        s_tree, m_tree, s_flat, m_flat = _run_both_rounds(
+            problem, spec, cfg, lr, grad_fn)
+        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
+                                   np.asarray(s_tree.params),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(m_flat["loss"]),
+                                   np.asarray(m_tree["loss"]), rtol=1e-6)
+        assert int(s_flat.step) == int(s_tree.step) == T_RUN + 1
+
+    @pytest.mark.parametrize("opt_name", ["momentum", "adamw"])
+    def test_stateful_optimizers(self, problem, spec, opt_name):
+        """Momentum/Adam buffers live as flat (n, D) arrays and evolve
+        identically to the tree engine's per-leaf stacked buffers."""
+        opt = {"momentum": optim.momentum_sgd(),
+               "adamw": optim.adamw()}[opt_name]
+        cfg, lr, grad_fn = _setup(problem)
+        s_tree, _, s_flat, _ = _run_both_rounds(problem, spec, cfg, lr,
+                                                grad_fn, opt=opt)
+        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
+                                   np.asarray(s_tree.params),
+                                   atol=1e-5, rtol=1e-5)
+        tree_from_flat = flat_lib.unflatten_fedstate(spec, s_flat)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=1e-5, rtol=1e-5),
+            tree_from_flat.opt_state, s_tree.opt_state)
+
+    def test_time_varying_topology(self, problem, spec):
+        """p_fail > 0: both engines resample the same W^t inside the scan."""
+        cfg, lr, grad_fn = _setup(problem, p_fail=0.4, gossip_impl="sparse")
+        s_tree, _, s_flat, _ = _run_both_rounds(problem, spec, cfg, lr,
+                                                grad_fn, key_seed=9)
+        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
+                                   np.asarray(s_tree.params),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_per_step_executor_matches(self, problem, spec):
+        cfg, lr, grad_fn = _setup(problem)
+        tree_step = make_feddec_step(cfg, grad_fn, lr, donate=False)
+        flat_step = flat_lib.make_flat_feddec_step(cfg, spec, grad_fn, lr,
+                                                   donate=False)
+        batches = _stacked_batches(problem, T_RUN)
+        key = jax.random.key(21)
+        s_tree = init_state(jnp.zeros(problem.d), problem.n)
+        s_flat = flat_lib.init_flat_state(spec, jnp.zeros(problem.d),
+                                          problem.n)
+        for t in range(T_RUN):
+            b = jax.tree.map(lambda x: x[t], batches)
+            s_tree, _ = tree_step(s_tree, b, key)
+            s_flat, _ = flat_step(s_flat, b, key)
+        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
+                                   np.asarray(s_tree.params),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_fedavg_flat_round(self, problem, spec):
+        _, lr, grad_fn = _setup(problem)
+        batches = _stacked_batches(problem, T_RUN)
+        key = jax.random.key(13)
+        tree_round = make_fedavg_round(problem.n, grad_fn, lr, h=H_CFG, k=2,
+                                       donate=False)
+        flat_round = make_fedavg_flat_round(problem.n, spec, grad_fn, lr,
+                                            h=H_CFG, k=2, donate=False)
+        s_tree, m_tree = tree_round(init_state(jnp.zeros(problem.d),
+                                               problem.n), batches, key)
+        s_flat, m_flat = flat_round(
+            flat_lib.init_flat_state(spec, jnp.zeros(problem.d), problem.n),
+            batches, key)
+        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
+                                   np.asarray(s_tree.params),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(m_flat["loss"]),
+                                   np.asarray(m_tree["loss"]), rtol=1e-6)
+
+
+class TestFlatContract:
+    def test_server_consensus_inside_scan(self, problem, spec):
+        """A window ending exactly on t+1 = H equalises every buffer row."""
+        cfg, lr, grad_fn = _setup(problem)  # h=4, server at t+1=4
+        flat_round = flat_lib.make_flat_feddec_round(cfg, spec, grad_fn, lr,
+                                                     donate=False)
+        batches = _stacked_batches(problem, 3)  # t: 1,2,3 → server at t+1=4
+        state, _ = flat_round(
+            flat_lib.init_flat_state(spec, jnp.zeros(problem.d), problem.n),
+            batches, jax.random.key(2))
+        p = np.asarray(state.flat)
+        np.testing.assert_allclose(p, np.broadcast_to(p[:1], p.shape),
+                                   atol=1e-5)
+
+    def test_donation_round_over_round(self, problem, spec):
+        cfg, lr, grad_fn = _setup(problem)
+        flat_round = flat_lib.make_flat_feddec_round(cfg, spec, grad_fn, lr,
+                                                     donate=True)
+        state = flat_lib.init_flat_state(spec, jnp.zeros(problem.d),
+                                         problem.n)
+        for r in range(3):
+            batches = _stacked_batches(problem, 4, seed=20 + r)
+            state, _ = flat_round(state, batches, jax.random.key(3))
+        assert int(state.step) == 13
+        assert np.isfinite(np.asarray(state.flat)).all()
+
+    def test_metrics_fn_on_flat_state(self, problem, spec):
+        cfg, lr, grad_fn = _setup(problem)
+        flat_round = flat_lib.make_flat_feddec_round(
+            cfg, spec, grad_fn, lr, donate=False,
+            metrics_fn=lambda s: {
+                "subopt": problem.suboptimality(spec.unflatten(s.flat))})
+        batches = _stacked_batches(problem, 5)
+        _, m = flat_round(
+            flat_lib.init_flat_state(spec, jnp.zeros(problem.d), problem.n),
+            batches, jax.random.key(0))
+        assert m["subopt"].shape == (5,)
+        assert np.isfinite(np.asarray(m["subopt"])).all()
+
+    def test_flat_server_round_matches_tree(self):
+        """server_round_flat == server_round on the flattened pytree."""
+        n, k = 8, 3
+        key = jax.random.key(4)
+        tree = {"a": jax.random.normal(key, (n, 5, 2)),
+                "b": jax.random.normal(jax.random.fold_in(key, 1), (n, 7))}
+        spec = flat_lib.make_flat_spec_from_stacked(tree)
+        buf = spec.flatten(tree)
+        skey = jax.random.key(6)
+        out_tree = server.server_round(skey, tree, k)
+        out_flat = server.server_round_flat(skey, buf, k)
+        np.testing.assert_allclose(np.asarray(spec.flatten(out_tree)),
+                                   np.asarray(out_flat), atol=1e-6)
+
+
+class TestSpecAndConversion:
+    def test_mixed_dtype_roundtrip(self):
+        tree = {"w": jnp.ones((3, 4), jnp.bfloat16),
+                "b": jnp.arange(3, dtype=jnp.float32),
+                "s": jnp.asarray(2.0, jnp.float32)}
+        spec = flat_lib.make_flat_spec(tree)
+        assert spec.dtype == jnp.float32  # promoted
+        assert spec.d == 12 + 3 + 1
+        back = spec.unravel(spec.ravel(tree))
+        assert back["w"].dtype == jnp.bfloat16
+        assert back["s"].shape == ()
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)),
+            back, tree)
+
+    def test_fedstate_conversion_roundtrip(self, problem, spec):
+        opt = optim.momentum_sgd()
+        state = init_state(jnp.zeros(problem.d), problem.n, optimizer=opt)
+        fstate = flat_lib.flatten_fedstate(spec, state)
+        assert fstate.flat.shape == (problem.n, spec.d)
+        back = flat_lib.unflatten_fedstate(spec, fstate)
+        np.testing.assert_array_equal(np.asarray(back.params),
+                                      np.asarray(state.params))
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), back.opt_state, state.opt_state)
+
+    def test_adamw_state_conversion(self, problem, spec):
+        opt = optim.adamw()
+        state = init_state(jnp.zeros(problem.d), problem.n, optimizer=opt)
+        fstate = flat_lib.flatten_fedstate(spec, state)
+        assert fstate.opt_state["m"].shape == (problem.n, spec.d)
+        assert fstate.opt_state["count"].shape == ()
+        back = flat_lib.unflatten_fedstate(spec, fstate)
+        assert back.opt_state["count"].shape == (problem.n,)
+
+    def test_opt_state_conversion_keeps_f32_moments(self):
+        """bf16 parameter buffer: converted momentum stays f32, matching
+        what init_flat_state's optimizer.init(flat) produces."""
+        opt = optim.momentum_sgd()
+        params = jnp.ones((7,), jnp.bfloat16)
+        spec = flat_lib.make_flat_spec(params)
+        assert spec.dtype == jnp.bfloat16
+        state = init_state(params, 4, optimizer=opt)
+        fstate = flat_lib.flatten_fedstate(spec, state)
+        assert fstate.opt_state.dtype == jnp.float32
+        fresh = flat_lib.init_flat_state(spec, params, 4, optimizer=opt)
+        assert fresh.opt_state.dtype == fstate.opt_state.dtype
+
+    def test_gossip_impl_validation_message(self, problem):
+        cfg, _, _ = _setup(problem)
+        with pytest.raises(ValueError, match="make_permute_gossip"):
+            FedDecConfig(mixing=cfg.mixing, gossip_impl="permute")
+        with pytest.raises(ValueError, match="dense|none|pallas|sparse"):
+            FedDecConfig(mixing=cfg.mixing, gossip_impl="bogus")
