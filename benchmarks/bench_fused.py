@@ -17,7 +17,6 @@ Run:  PYTHONPATH=src python -m benchmarks.bench_fused [--quick]
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -212,7 +212,10 @@ def main(smoke: bool = False) -> None:
     out = {"workload": "gossip mix y = W @ x on model-shaped stacked params",
            "backend": jax.default_backend(), "smoke": smoke,
            "rows": rows, "acceptance": acceptance}
-    path = os.path.join(common.ensure_results_dir(), "BENCH_gossip.json")
+    # smoke runs get their own file so a local/CI --smoke never clobbers
+    # the committed full-run baseline the regression guard diffs against
+    name = "BENCH_gossip.smoke.json" if smoke else "BENCH_gossip.json"
+    path = os.path.join(common.ensure_results_dir(), name)
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote {path}")

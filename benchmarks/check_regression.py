@@ -1,0 +1,179 @@
+"""Perf-regression guard for the CI bench-smoke job.
+
+Freshly-produced smoke benchmark JSONs (written to
+results/benchmarks/BENCH_*.smoke.json — smoke runs never touch the
+committed full-run files) are diffed against the committed baselines
+(results/benchmarks/BENCH_gossip.json / BENCH_sharded.json).  Smoke and
+committed runs use different shapes (tiny D, fewer leaves), so raw
+wall-clock is never compared; the guard pins the *structural* perf
+evidence instead:
+
+  * exact   — ``dispatches_per_gossip`` (whole-buffer impls are 1 dispatch,
+    leaf-wise impls one per leaf) and the ``model_bytes``/``model_flops``
+    columns, recomputed from each row's own (n, d, leaves, graph) through
+    launch.analysis.gossip_cost_model: the emitted rows and the cost model
+    must never drift apart, in the fresh run or the committed baseline;
+  * ordering (generous tolerance) — the like-for-like kernel evidence that
+    justifies the flat engine: the SAME Pallas kernel applied leaf-wise
+    must stay slower than one whole-buffer call at the largest n
+    (committed baseline shows 5–9×; the guard only requires >1.1× so CPU
+    runner noise cannot flake it);
+  * sharded — BENCH_sharded.json rows are well-formed, the ppermute-halo
+    collective bytes stay at or below the dense psum_scatter's for every
+    multi-shard configuration, and every timed config passed its
+    equivalence check against the unsharded dense mix.
+
+Run (what ci.yml does):
+  PYTHONPATH=src python -m benchmarks.check_regression \\
+      --baseline-gossip results/benchmarks/BENCH_gossip.json \\
+      --fresh-gossip results/benchmarks/BENCH_gossip.smoke.json \\
+      --baseline-sharded results/benchmarks/BENCH_sharded.json \\
+      --fresh-sharded results/benchmarks/BENCH_sharded.smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import topology as topo
+from repro.launch import analysis
+
+ORDERING_MARGIN = 1.1  # generous: baseline like-for-like ratio is 5-9x
+
+REQUIRED_GOSSIP = {"impl", "n_agents", "d", "num_leaves", "us_per_call",
+                   "dispatches_per_gossip", "model_bytes", "model_flops"}
+REQUIRED_SHARDED = {"impl", "n_agents", "n_shards", "agents_per_device", "d",
+                    "us_per_call", "per_device_bytes", "collective_bytes",
+                    "num_cut_edges", "num_halo_rounds"}
+
+
+class RegressionError(AssertionError):
+    pass
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise RegressionError(msg)
+
+
+def check_gossip_doc(doc: dict, label: str) -> None:
+    """Well-formedness + cost-model consistency + kernel-evidence ordering."""
+    rows = doc.get("rows", [])
+    _require(bool(rows), f"{label}: no benchmark rows")
+    for row in rows:
+        missing = REQUIRED_GOSSIP - set(row)
+        _require(not missing, f"{label}: row missing {missing}: {row}")
+        _require(row["us_per_call"] > 0, f"{label}: non-positive time {row}")
+    impls = {r["impl"] for r in rows}
+    _require({"tree_dense", "flat_dense", "flat_pallas",
+              "flat_sparse"} <= impls, f"{label}: impl set shrank: {impls}")
+    _require(bool(doc["acceptance"]["sparse_large_n"]),
+             f"{label}: large-n sparse showcase rows vanished")
+
+    # exact: every row's model_bytes/model_flops/dispatches must equal the
+    # cost model recomputed at the row's own shape (bench_gossip contract:
+    # the grid graph is ring(n, k=2), f32 params)
+    for row in rows:
+        n, d = row["n_agents"], row["d"]
+        graph = topo.ring_graph(n, k=min(2, (n - 1) // 2 or 1))
+        model = analysis.gossip_cost_model(
+            n_agents=n, d=d, num_leaves=row["num_leaves"],
+            num_directed_edges=2 * graph.num_edges, param_bytes=4)
+        key = "flat_pallas" if row["impl"] == "tree_pallas" else row["impl"]
+        cm = model.get(key, model["flat_dense"])
+        for col, want in (("model_bytes", cm["bytes"]),
+                          ("model_flops", cm["flops"])):
+            _require(row[col] == want,
+                     f"{label}: {row['impl']} n={n} {col} drifted: "
+                     f"row={row[col]} cost-model={want}")
+        want_disp = row["num_leaves"] if row["impl"].startswith("tree") else 1
+        _require(row["dispatches_per_gossip"] == want_disp,
+                 f"{label}: {row['impl']} dispatches_per_gossip="
+                 f"{row['dispatches_per_gossip']} != {want_disp}")
+
+    # ordering: leaf-wise vs whole-buffer application of the SAME kernel
+    n_big = max(r["n_agents"] for r in rows)
+
+    def us(impl):
+        return next(r["us_per_call"] for r in rows
+                    if r["impl"] == impl and r["n_agents"] == n_big)
+
+    ratio = us("tree_pallas") / us("flat_pallas")
+    _require(ratio > ORDERING_MARGIN,
+             f"{label}: whole-buffer Pallas no longer beats leaf-wise at "
+             f"n={n_big}: tree/flat ratio {ratio:.2f} <= {ORDERING_MARGIN}")
+    print(f"[guard] {label}: {len(rows)} rows OK, "
+          f"leafwise/whole-buffer pallas ratio {ratio:.1f}x at n={n_big}")
+
+
+def check_sharded_doc(doc: dict, label: str) -> None:
+    rows = doc.get("rows", [])
+    _require(bool(rows), f"{label}: no benchmark rows")
+    for row in rows:
+        missing = REQUIRED_SHARDED - set(row)
+        _require(not missing, f"{label}: row missing {missing}: {row}")
+        _require(row["us_per_call"] > 0, f"{label}: non-positive time {row}")
+    _require(bool(doc.get("round_rows")),
+             f"{label}: fused sharded round rows vanished")
+    _require(doc["acceptance"]["equivalence_checked_vs_unsharded_dense"],
+             f"{label}: equivalence check was skipped")
+    by_key = {(r["impl"], r["n_agents"], r["n_shards"]): r for r in rows}
+    checked = 0
+    for (impl, n, s), row in by_key.items():
+        if impl != "sparse" or s == 1:
+            continue
+        dense = by_key.get(("dense", n, s))
+        _require(dense is not None,
+                 f"{label}: sparse row (n={n}, s={s}) has no dense partner")
+        _require(row["collective_bytes"] <= dense["collective_bytes"],
+                 f"{label}: halo collective bytes exceed dense psum_scatter "
+                 f"at n={n}, s={s}: {row['collective_bytes']} > "
+                 f"{dense['collective_bytes']}")
+        checked += 1
+    # vacuity guard: the halo-vs-dense byte evidence must actually exist —
+    # a shrunk shard grid or a dropped impl must fail loudly, not pass
+    _require(checked > 0,
+             f"{label}: no multi-shard sparse rows to check — the halo "
+             f"vs dense collective-byte evidence vanished")
+    print(f"[guard] {label}: {len(rows)} rows OK, halo <= dense collective "
+          f"bytes on {checked} multi-shard configs")
+
+
+def check_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
+    """The committed baseline's impl coverage must survive in the fresh run
+    (a fresh run may add impls, never silently drop them)."""
+    base_impls = {r["impl"] for r in baseline["rows"]}
+    fresh_impls = {r["impl"] for r in fresh["rows"]}
+    _require(base_impls <= fresh_impls,
+             f"fresh run dropped impls: {base_impls - fresh_impls}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--baseline-gossip", required=True)
+    p.add_argument("--fresh-gossip", required=True)
+    p.add_argument("--baseline-sharded", default=None,
+                   help="optional: committed BENCH_sharded.json baseline")
+    p.add_argument("--fresh-sharded", required=True)
+    args = p.parse_args()
+
+    with open(args.baseline_gossip) as f:
+        baseline = json.load(f)
+    with open(args.fresh_gossip) as f:
+        fresh = json.load(f)
+    with open(args.fresh_sharded) as f:
+        fresh_sharded = json.load(f)
+
+    check_gossip_doc(baseline, "baseline BENCH_gossip")
+    check_gossip_doc(fresh, "fresh BENCH_gossip")
+    check_baseline_vs_fresh(baseline, fresh)
+    check_sharded_doc(fresh_sharded, "fresh BENCH_sharded")
+    if args.baseline_sharded:
+        with open(args.baseline_sharded) as f:
+            check_sharded_doc(json.load(f), "baseline BENCH_sharded")
+    print("[guard] all perf-regression checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,8 @@ commentary) and writes full curves/tables under results/benchmarks/.
   bench_kernels    — kernel micro-benchmarks + Pallas validation
   bench_fused      — fused lax.scan round executor vs per-step dispatch
   bench_gossip     — gossip impls (dense/pallas/sparse × tree/flat layout)
+  bench_sharded    — agent-sharded flat engine weak-scaling (shard_map
+                     psum_scatter vs ppermute halo, 1–8 host devices)
   ablation_server  — beyond-paper: §5 conjecture (server vs pure gossip)
   roofline         — aggregates results/dryrun into the §Roofline table
 """
@@ -25,8 +27,9 @@ def main() -> None:
     args = p.parse_args()
 
     from benchmarks import (ablation_server, bench_fused, bench_gossip,
-                            bench_kernels, fig2_alpha, fig4_convergence,
-                            roofline, table1_lambda2, theory_check)
+                            bench_kernels, bench_sharded, fig2_alpha,
+                            fig4_convergence, roofline, table1_lambda2,
+                            theory_check)
     jobs = {
         "table1_lambda2": lambda: table1_lambda2.main(
             seeds=3 if args.quick else 10),
@@ -38,6 +41,7 @@ def main() -> None:
         "bench_kernels": bench_kernels.main,
         "bench_fused": lambda: bench_fused.main(quick=args.quick),
         "bench_gossip": lambda: bench_gossip.main(smoke=args.quick),
+        "bench_sharded": lambda: bench_sharded.main(smoke=args.quick),
         "ablation_server": lambda: ablation_server.main(
             t_steps=1500 if args.quick else 3000,
             seeds=3 if args.quick else 6),

@@ -13,7 +13,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch.serve import generate

@@ -8,12 +8,14 @@ Public surface:
   feddec     — Algorithm 1 as a jitted, model-agnostic step (tree engine)
   flat       — Algorithm 1 on one contiguous (n_agents, D) buffer
                (the single-buffer hot loop: Pallas / sparse gossip)
+  sharded    — the flat buffer block-sharded over a device mesh axis
+               (shard_map: psum_scatter dense gossip, ppermute halo)
   fedavg     — the FedAvg baseline (degenerate 𝒲 = {I})
   theory     — Theorem 1's constants and bound curve, executable
 """
 
-from repro.core import (fedavg, feddec, flat, gossip, mixing, server, theory,
-                        topology)
+from repro.core import (fedavg, feddec, flat, gossip, mixing, server, sharded,
+                        theory, topology)
 from repro.core.feddec import (FedDecConfig, FedState, init_state,
                                make_feddec_round, make_feddec_step)
 from repro.core.fedavg import FedAvgConfig, make_fedavg_round, make_fedavg_step
@@ -21,14 +23,18 @@ from repro.core.flat import (FlatFedState, FlatSpec, init_flat_state,
                              make_flat_feddec_round, make_flat_feddec_step,
                              make_flat_spec)
 from repro.core.mixing import MixingDistribution, identity_mixing
+from repro.core.sharded import (make_sharded_feddec_round,
+                                make_sharded_feddec_step, shard_flat_state)
 
 __all__ = [
-    "topology", "mixing", "gossip", "server", "feddec", "flat", "fedavg",
-    "theory",
+    "topology", "mixing", "gossip", "server", "feddec", "flat", "sharded",
+    "fedavg", "theory",
     "FedDecConfig", "FedState", "init_state", "make_feddec_step",
     "make_feddec_round",
     "FlatSpec", "FlatFedState", "init_flat_state", "make_flat_feddec_step",
-    "make_flat_feddec_round",
+    "make_flat_feddec_round", "make_flat_spec",
+    "make_sharded_feddec_step", "make_sharded_feddec_round",
+    "shard_flat_state",
     "FedAvgConfig", "make_fedavg_step", "make_fedavg_round",
     "MixingDistribution", "identity_mixing",
 ]

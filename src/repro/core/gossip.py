@@ -30,8 +30,6 @@ and tests/test_gossip_impls.py check it property-style.
 
 from __future__ import annotations
 
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,461 @@
+"""Device-sharded flat FedDec engine: the (n_agents, D) buffer over a mesh.
+
+The flat engine (repro.core.flat) made Algorithm 1's hot loop a handful of
+whole-buffer ops on one contiguous ``(n_agents, D)`` buffer — but on a single
+device, so n_agents × D is capped by one device's HBM and FLOPs.  This module
+shards the **agent axis** of that same buffer over a mesh axis with
+``shard_map``: each device owns a contiguous block of ``n_agents // n_shards``
+rows (agents-per-device ≥ 1 — the block-sharded layout), and every Algorithm-1
+op becomes a per-shard op plus the minimal collective:
+
+  * local SGD / optimizer update — embarrassingly parallel per shard: the
+    same elementwise pass over the local ``(n_local, D)`` block, zero
+    communication;
+  * dense gossip ``x_i ← Σ_j W_ij x_j`` — each shard contracts its *column*
+    block of W against its rows (``W[:, cols] @ x_blk``) and a single
+    ``psum_scatter`` over the agent axis both sums the partials and hands
+    every shard exactly its row block: no all-gather of X ever materialises;
+  * sparse / ring gossip — a ``ppermute`` **halo exchange** over only the
+    graph's *cut* edges: the base graph is collapsed to its block quotient
+    (shards adjacent iff any edge crosses between their blocks), the quotient
+    is decomposed into permutation rounds
+    (:func:`repro.core.topology.permutation_schedule` — the same machinery as
+    :func:`repro.core.gossip.make_permute_gossip`, generalized from the
+    one-agent-per-device tree layout to the block-sharded flat layout), and
+    each round is one ``ppermute`` of the local block followed by an
+    ``(n_local, n_local) @ (n_local, D)`` sub-block contraction.  Intra-block
+    edges cost no communication at all; ``gossip_impl='pallas'`` runs every
+    sub-block contraction through the Pallas streaming kernel
+    (kernels.ops.gossip_mix) per shard;
+  * server round (lines 8–10) — each shard contracts its slice of the c/K
+    participation weights against its block, one ``psum`` of the resulting
+    ``(D,)`` vector forms z, and the broadcast back is a local
+    ``broadcast_to``: the paper's "low-bandwidth, infrequent" server link is
+    exactly one (D,)-sized all-reduce.
+
+Correctness contract: a sharded round computes the same trajectory as the
+single-device flat engine within 1e-5 (tests/test_sharded_engine.py) — the
+per-step randomness is bit-identical (every shard derives the *full*
+``split(key_grad, n_agents)`` key array replicated and slices its rows), and
+each collective is the single-device contraction with the j-sum reordered
+across devices.  Everything here is exercisable on CPU-only CI via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import server as server_lib
+from repro.core import topology as topo
+from repro.core.feddec import FedDecConfig
+from repro.core.flat import FlatFedState, FlatSpec
+
+__all__ = ["quotient_graph", "cut_edge_stats", "make_sharded_gossip",
+           "make_sharded_feddec_step", "make_sharded_feddec_round",
+           "flat_state_specs", "shard_flat_state", "agent_axis_size"]
+
+GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
+LrFn = Callable[[jax.Array], jax.Array]
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """jax >= 0.5 exposes jax.shard_map; 0.4.x has the experimental one."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+def agent_axis_size(mesh: jax.sharding.Mesh,
+                    axis_name: str | tuple[str, ...]) -> int:
+    """Number of shards the agent dim is split into on this mesh."""
+    axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+# ---------------------------------------------------------------------------
+# Block-quotient topology: which shards must talk at all
+# ---------------------------------------------------------------------------
+
+
+def quotient_graph(graph: topo.Graph, n_shards: int) -> topo.Graph:
+    """Collapse the agent graph to its shard-block quotient.
+
+    Agents are block-sharded contiguously (shard s owns rows
+    ``[s·n_local, (s+1)·n_local)``); shards r ≠ s are adjacent iff **any**
+    base edge crosses between their blocks.  This is the communication
+    pattern of the halo exchange: intra-block edges never leave the device,
+    and the ``ppermute`` schedule only covers the quotient's edges.
+    """
+    n = graph.n
+    if n_shards < 1 or n % n_shards:
+        raise ValueError(f"n_shards must divide n_agents: {n_shards} ∤ {n}")
+    n_local = n // n_shards
+    adj = np.asarray(graph.adjacency)
+    blocks = adj.reshape(n_shards, n_local, n_shards, n_local).any(axis=(1, 3))
+    np.fill_diagonal(blocks, False)
+    return topo.Graph(blocks, name=f"quotient({graph.name}/{n_shards})")
+
+
+def cut_edge_stats(graph: topo.Graph, n_shards: int) -> dict:
+    """Static communication metadata of the sharded layout.
+
+    ``num_cut_edges`` counts *directed* base-graph edges whose endpoints live
+    on different shards — the edges the halo exchange exists to serve;
+    ``num_halo_rounds`` is the length of the quotient's permutation schedule
+    (each round moves one (n_local, D) block per participating shard).  The
+    dense path's psum_scatter is oblivious to the graph, so the ratio of the
+    two byte models is the sharding win of the sparse path — see
+    :func:`repro.launch.analysis.sharded_gossip_cost_model`.
+    """
+    n = graph.n
+    n_local = n // n_shards
+    recv, send = np.nonzero(np.asarray(graph.adjacency))
+    cut = (recv // n_local) != (send // n_local)
+    q = quotient_graph(graph, n_shards)
+    schedule = topo.permutation_schedule(q)
+    return {
+        "n_agents": n,
+        "n_shards": n_shards,
+        "agents_per_shard": n_local,
+        "num_directed_edges": int(len(recv)),
+        "num_cut_edges": int(cut.sum()),
+        "num_halo_rounds": len(schedule),
+        "quotient_max_degree": int(q.degrees.max()) if q.n else 0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Per-shard gossip mixers
+# ---------------------------------------------------------------------------
+
+
+def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
+                      block_d: int | None = None):
+    """gossip_impl → per-shard mix(w, x_blk, me) -> y_blk.
+
+    ``w`` is the full replicated (n, n) mixing matrix (weights stay random
+    per step — link failures zero entries; the *support* metadata below is
+    static), ``x_blk`` the shard's (n_local, D) row block, ``me`` the shard
+    index on the agent axis.
+    """
+    impl = cfg.gossip_impl
+    n = cfg.n_agents
+    n_local = n // n_shards
+
+    if impl == "none":
+        return lambda w, x_blk, me: x_blk
+
+    if impl == "dense":
+        def mix(w, x_blk, me):
+            cols = jax.lax.dynamic_slice_in_dim(w, me * n_local, n_local,
+                                                axis=1)
+            partial = jnp.einsum("ij,jd->id", cols.astype(x_blk.dtype),
+                                 x_blk, precision=jax.lax.Precision.HIGHEST)
+            if n_shards == 1:
+                return partial
+            return jax.lax.psum_scatter(partial, axis_name,
+                                        scatter_dimension=0, tiled=True)
+        return mix
+
+    if impl in ("sparse", "pallas"):
+        q = quotient_graph(cfg.mixing.graph, n_shards)
+        schedule = topo.permutation_schedule(q)
+        # (R, S) int32: round r, shard d receives shard perms[r, d]'s block
+        perms = jnp.asarray(
+            np.stack(schedule) if schedule
+            else np.zeros((0, n_shards), np.int64), jnp.int32)
+        pairs = [tuple((int(p[d]), d) for d in range(n_shards) if p[d] != d)
+                 for p in schedule]
+
+        if impl == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            def blk_mix(wb, xb):
+                if block_d is None:
+                    return kernel_ops.gossip_mix(wb, xb)
+                return kernel_ops.gossip_mix(wb, xb, block_d=block_d)
+        else:
+            def blk_mix(wb, xb):
+                return jnp.einsum("ij,jd->id", wb.astype(xb.dtype), xb,
+                                  precision=jax.lax.Precision.HIGHEST)
+
+        def mix(w, x_blk, me):
+            lo = me * n_local
+            own = jax.lax.dynamic_slice(w, (lo, lo), (n_local, n_local))
+            y = blk_mix(own, x_blk)
+            for r, pr in enumerate(pairs):
+                recv = jax.lax.ppermute(x_blk, axis_name, perm=pr)
+                src = perms[r, me]
+                wblk = jax.lax.dynamic_slice(w, (lo, src * n_local),
+                                             (n_local, n_local))
+                # idle shards this round (perm[me] == me) received zeros
+                # and must not re-add their own block
+                wblk = jnp.where(src == me, 0.0, 1.0).astype(wblk.dtype) \
+                    * wblk
+                y = y + blk_mix(wblk, recv)
+            return y
+        return mix
+
+    raise ValueError(f"unknown gossip_impl {impl!r}")  # pragma: no cover
+
+
+def make_sharded_gossip(cfg: FedDecConfig, mesh: jax.sharding.Mesh,
+                        axis_name: str | tuple[str, ...] = "agents",
+                        block_d: int | None = None):
+    """Whole-buffer gossip on an agent-sharded (n, D) buffer.
+
+    The block-sharded generalization of
+    :func:`repro.core.gossip.make_permute_gossip`: any
+    agents-per-device ≥ 1, flat single-buffer layout, and the three flat
+    impls (dense psum_scatter contraction / sparse ppermute halo / per-shard
+    Pallas kernel) instead of the per-leaf schedule.
+
+    Returns ``gossip(w, x) -> y`` for ``x`` of shape (n_agents, D) sharded
+    ``P(axis_name, None)``; usable under jit on the mesh.
+    """
+    n_shards = agent_axis_size(mesh, axis_name)
+    if cfg.n_agents % n_shards:
+        raise ValueError(
+            f"agent axis {axis_name!r} has {n_shards} shards which must "
+            f"divide n_agents={cfg.n_agents}")
+    ax = axis_name if isinstance(axis_name, str) or len(axis_name) > 1 \
+        else axis_name[0]
+    mixer = _make_shard_mixer(cfg, ax, n_shards, block_d=block_d)
+
+    def per_shard(w, x_blk):
+        return mixer(w, x_blk, jax.lax.axis_index(ax))
+
+    return _shard_map(per_shard, mesh, in_specs=(P(None, None), P(ax)),
+                      out_specs=P(ax))
+
+
+# ---------------------------------------------------------------------------
+# State placement helpers
+# ---------------------------------------------------------------------------
+
+
+def _leaf_spec(leaf, axis_name) -> P:
+    """THE sharding rule for flat-engine state leaves (single source of
+    truth for executors' shard_map specs and shard_flat_state placement):
+    (n, D) buffers follow the agent sharding, scalars (step, adamw count)
+    replicate.  ``leaf`` may be a live array or a ShapeDtypeStruct."""
+    return P(axis_name) if getattr(leaf, "ndim", 0) == 2 else P()
+
+
+def _opt_specs(optimizer, spec: FlatSpec, n_agents: int, axis_name) -> Any:
+    """PartitionSpecs for the flat optimizer buffers."""
+    if optimizer is None:
+        return ()
+    struct = jax.eval_shape(
+        optimizer.init, jax.ShapeDtypeStruct((n_agents, spec.d), spec.dtype))
+    return jax.tree.map(lambda s: _leaf_spec(s, axis_name), struct)
+
+
+def flat_state_specs(optimizer, spec: FlatSpec, n_agents: int,
+                     axis_name: str | tuple[str, ...] = "agents"
+                     ) -> FlatFedState:
+    """FlatFedState pytree of PartitionSpecs for the sharded engine."""
+    return FlatFedState(
+        flat=P(axis_name), step=P(),
+        opt_state=_opt_specs(optimizer, spec, n_agents, axis_name))
+
+
+def shard_flat_state(state: FlatFedState, mesh: jax.sharding.Mesh,
+                     axis_name: str | tuple[str, ...] = "agents"
+                     ) -> FlatFedState:
+    """Place a FlatFedState on the mesh with the agent dim block-sharded."""
+    specs = FlatFedState(
+        flat=P(axis_name), step=P(),
+        opt_state=jax.tree.map(lambda l: _leaf_spec(l, axis_name),
+                               state.opt_state))
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(state, shardings)
+
+
+# ---------------------------------------------------------------------------
+# The sharded engine
+# ---------------------------------------------------------------------------
+
+
+def _slice_agent_keys(keys: jax.Array, lo: jax.Array, n_local: int):
+    """Rows [lo, lo+n_local) of a typed key array (exactly the keys the
+    single-device engine's split(key_grad, n) would hand these agents)."""
+    data = jax.random.key_data(keys)
+    blk = jax.lax.dynamic_slice_in_dim(data, lo, n_local, axis=0)
+    return jax.random.wrap_key_data(blk)
+
+
+def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+                          lr_fn: LrFn, axis_name, n_shards: int,
+                          optimizer, block_d: int | None):
+    """Algorithm-1 body on one shard's row block; replicated scalars stay
+    bit-identical to repro.core.flat's step so trajectories match."""
+    n_agents = cfg.n_agents
+    n_local = n_agents // n_shards
+    mixer = _make_shard_mixer(cfg, axis_name, n_shards, block_d=block_d)
+
+    def shard_server_round(key, x_blk, me):
+        # lines 8–10 as psum + broadcast: every shard draws the same S_t
+        # from the replicated key, contracts its weight slice, and the
+        # (D,)-sized all-reduce is the entire server link
+        counts = server_lib.sample_participants(key, n_agents, cfg.k)
+        wts = server_lib.participant_weights(counts, cfg.k)
+        w_blk = jax.lax.dynamic_slice_in_dim(wts, me * n_local, n_local)
+        z = jnp.tensordot(w_blk.astype(x_blk.dtype), x_blk, axes=(0, 0))
+        if n_shards > 1:
+            z = jax.lax.psum(z, axis_name)
+        return jnp.broadcast_to(z[None], x_blk.shape)
+
+    def step(x_blk, opt_blk, t, batch_blk, key):
+        me = jax.lax.axis_index(axis_name)
+        key_w, key_grad, key_server = jax.random.split(
+            jax.random.fold_in(key, t), 3)
+        eta = lr_fn(t)
+
+        # line 3: sample W^t (replicated compute — identical on every shard)
+        w = cfg.mixing.sample(key_w)
+
+        # lines 4–5: this shard's agents only; the full per-agent key array
+        # is derived replicated and row-sliced so agent i's key matches the
+        # single-device engine exactly
+        params = spec.unflatten(x_blk)
+        agent_keys = _slice_agent_keys(
+            jax.random.split(key_grad, n_agents), me * n_local, n_local)
+        losses, grads = jax.vmap(grad_fn)(params, batch_blk, agent_keys)
+        g_blk = spec.flatten(grads)
+        if optimizer is None:
+            x_half = x_blk - eta.astype(spec.dtype) * g_blk
+            new_opt = opt_blk
+        else:
+            x_half, new_opt = optimizer.update(x_blk, g_blk, opt_blk, eta)
+
+        # line 6: gossip — per-shard contraction + the impl's collective
+        x_next = mixer(w, x_half, me)
+
+        # lines 7–12: periodic server round
+        if cfg.server_enabled:
+            is_round = (t + 1) % cfg.h == 0
+            z_next = jax.lax.cond(
+                is_round,
+                lambda x: shard_server_round(key_server, x, me),
+                lambda x: x,
+                x_next)
+        else:
+            z_next = x_next
+
+        loss = jnp.sum(losses)
+        if n_shards > 1:
+            loss = jax.lax.psum(loss, axis_name)
+        metrics = {"loss": loss / n_agents, "eta": eta}
+        return z_next, new_opt, metrics
+
+    return step
+
+
+def _resolve_axis(mesh, axis_name):
+    axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+    for a in axes:
+        if a not in mesh.shape:
+            raise ValueError(f"mesh has no axis {a!r}: {mesh.shape}")
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _validate(cfg, mesh, axis_name):
+    n_shards = agent_axis_size(mesh, axis_name)
+    if cfg.n_agents % n_shards:
+        raise ValueError(
+            f"n_agents={cfg.n_agents} must be divisible by the agent axis "
+            f"size {n_shards} (block-sharded rows)")
+    return n_shards
+
+
+def make_sharded_feddec_step(cfg: FedDecConfig, spec: FlatSpec,
+                             grad_fn: GradFn, lr_fn: LrFn,
+                             mesh: jax.sharding.Mesh, *,
+                             axis_name: str | tuple[str, ...] = "agents",
+                             optimizer=None, block_d: int | None = None,
+                             donate: bool = True, jit: bool = True):
+    """One-iteration sharded executor: step(state, batch, key) carrying a
+    FlatFedState whose buffer rows are block-sharded over ``axis_name``.
+
+    Same contract as repro.core.flat.make_flat_feddec_step; batch leaves
+    keep the leading agent dim and are consumed sharded ``P(axis_name)``.
+    """
+    ax = _resolve_axis(mesh, axis_name)
+    n_shards = _validate(cfg, mesh, ax)
+    per_shard = _build_per_shard_step(cfg, spec, grad_fn, lr_fn, ax,
+                                      n_shards, optimizer, block_d)
+    opt_specs = _opt_specs(optimizer, spec, cfg.n_agents, ax)
+    metric_specs = {"loss": P(), "eta": P()}
+    smapped = _shard_map(
+        per_shard, mesh,
+        in_specs=(P(ax), opt_specs, P(), P(ax), P()),
+        out_specs=(P(ax), opt_specs, metric_specs))
+
+    def step(state: FlatFedState, batch: Any, key: jax.Array):
+        flat, opt, metrics = smapped(state.flat, state.opt_state, state.step,
+                                     batch, key)
+        return FlatFedState(flat=flat, step=state.step + 1,
+                            opt_state=opt), metrics
+
+    if not jit:
+        return step
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def make_sharded_feddec_round(cfg: FedDecConfig, spec: FlatSpec,
+                              grad_fn: GradFn, lr_fn: LrFn,
+                              mesh: jax.sharding.Mesh, *,
+                              axis_name: str | tuple[str, ...] = "agents",
+                              optimizer=None, block_d: int | None = None,
+                              donate: bool = True, jit: bool = True,
+                              unroll: int = 1):
+    """The fused sharded executor: H steps per compiled call, one shard_map.
+
+    Same contract as repro.core.flat.make_flat_feddec_round — batches carry
+    a leading fused-step dim (consumed ``P(None, axis_name)``), W^t resamples
+    per scanned step, metrics stack to (H,) — but the whole ``lax.scan`` runs
+    *inside* a single ``shard_map``, so each device scans its own row block
+    and the per-step collectives (psum_scatter / ppermute halo / server psum)
+    are the only cross-device traffic in the round.
+    """
+    ax = _resolve_axis(mesh, axis_name)
+    n_shards = _validate(cfg, mesh, ax)
+    per_shard = _build_per_shard_step(cfg, spec, grad_fn, lr_fn, ax,
+                                      n_shards, optimizer, block_d)
+    opt_specs = _opt_specs(optimizer, spec, cfg.n_agents, ax)
+    metric_specs = {"loss": P(None), "eta": P(None)}
+
+    def per_shard_round(x_blk, opt_blk, t0, batches_blk, key):
+        def body(carry, batch):
+            x, opt, t = carry
+            z, new_opt, metrics = per_shard(x, opt, t, batch, key)
+            return (z, new_opt, t + 1), metrics
+
+        (x, opt, t), metrics = jax.lax.scan(
+            body, (x_blk, opt_blk, t0), batches_blk, unroll=unroll)
+        return x, opt, t, metrics
+
+    smapped = _shard_map(
+        per_shard_round, mesh,
+        in_specs=(P(ax), opt_specs, P(), P(None, ax), P()),
+        out_specs=(P(ax), opt_specs, P(), metric_specs))
+
+    def round_fn(state: FlatFedState, batches: Any, key: jax.Array):
+        flat, opt, t, metrics = smapped(state.flat, state.opt_state,
+                                        state.step, batches, key)
+        return FlatFedState(flat=flat, step=t, opt_state=opt), metrics
+
+    if not jit:
+        return round_fn
+    return jax.jit(round_fn, donate_argnums=(0,) if donate else ())

@@ -21,7 +21,7 @@ jax-traceable.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Sequence
+from typing import Literal
 
 import numpy as np
 

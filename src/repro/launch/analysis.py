@@ -23,7 +23,8 @@ from repro.launch import hlo_analysis
 
 __all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "CollectiveStats",
            "parse_collectives", "roofline_terms", "RooflineReport",
-           "dtype_bytes", "gossip_cost_model"]
+           "dtype_bytes", "gossip_cost_model", "sharded_gossip_cost_model",
+           "hlo_analysis"]
 
 PEAK_FLOPS = 197e12   # bf16 per chip
 HBM_BW = 819e9        # bytes/s per chip
@@ -168,6 +169,70 @@ def gossip_cost_model(*, n_agents: int, d: int, num_leaves: int,
         "flat_dense": entry(stream + upcast, dense_flops, 1),
         "flat_pallas": entry(stream, dense_flops, 1),
         "flat_sparse": entry(sparse_bytes, sparse_flops, 1),
+    }
+
+
+def sharded_gossip_cost_model(*, n_agents: int, d: int, n_shards: int,
+                              num_cut_edges: int, num_halo_rounds: int,
+                              param_bytes: int = 4,
+                              dispatch_us: float = 5.0) -> dict[str, dict]:
+    """Analytic per-gossip-step cost of the agent-sharded flat engine.
+
+    The agent dim of the (n, D) buffer is block-sharded over ``n_shards``
+    devices (n_local = n/n_shards rows each; repro.core.sharded).  Per-shard
+    HBM traffic and FLOPs shrink by n_shards, and the collective term splits
+    the impls:
+
+      * ``dense``  — W[:, cols] @ x_blk partials + one ring psum_scatter:
+        each device moves ~((s−1)/s)·n·D bytes regardless of the graph;
+      * ``sparse`` — the ppermute halo: ``num_halo_rounds`` block exchanges
+        of n_local·D bytes per device, i.e. traffic scales with the
+        *quotient* degree (the graph's cut), not with n.  For a ring over
+        contiguous blocks this is 2 rounds total at any scale — the
+        weak-scaling regime bench_sharded.py measures.
+
+    ``ideal_cut_edge_bytes`` is the graph-theoretic floor (one row of D per
+    directed cut edge, summed over devices): the halo moves whole blocks, so
+    ``collective_bytes × n_shards ≥ ideal`` with equality when every
+    neighbouring block pair is fully cut-connected.
+
+    Returns {impl: {per_device_bytes, flops, collective_bytes, pred_us}}
+    (collective_bytes per device; pred at TPU constants, CPU CI only checks
+    the relative shape).
+    """
+    n, dd, b, s = n_agents, float(d), param_bytes, n_shards
+    n_local = n // s
+    stream_blk = 2.0 * n_local * dd * b            # read + write own block
+
+    def entry(bytes_, flops, coll_bytes, extra=None):
+        pred = max(bytes_ / HBM_BW, flops / PEAK_FLOPS) * 1e6 \
+            + coll_bytes / ICI_BW * 1e6 + dispatch_us
+        out = {"per_device_bytes": bytes_, "flops": flops,
+               "collective_bytes": coll_bytes, "pred_us": pred}
+        if extra:
+            out.update(extra)
+        return out
+
+    # dense: write the (n, D) partial, read it back for the reduce-scatter
+    dense_bytes = stream_blk + 2.0 * n * dd * b
+    dense_flops = 2.0 * n * n_local * dd
+    dense_coll = (s - 1) / s * n * dd * b if s > 1 else 0.0
+
+    # sparse halo: own-block contraction + one sub-block contraction and one
+    # block receive per round
+    halo_bytes = stream_blk + num_halo_rounds * n_local * dd * b
+    halo_flops = 2.0 * (1 + num_halo_rounds) * n_local * n_local * dd
+    halo_coll = num_halo_rounds * n_local * dd * b if s > 1 else 0.0
+    ideal_cut = num_cut_edges * dd * b
+
+    return {
+        "dense": entry(dense_bytes, dense_flops, dense_coll),
+        "sparse": entry(halo_bytes, halo_flops, halo_coll,
+                        {"num_halo_rounds": num_halo_rounds,
+                         "ideal_cut_edge_bytes": ideal_cut}),
+        "pallas": entry(halo_bytes, halo_flops, halo_coll,
+                        {"num_halo_rounds": num_halo_rounds}),
+        "none": entry(stream_blk, 0.0, 0.0),
     }
 
 

@@ -49,10 +49,16 @@ def _model_flops(cfg, shape) -> float:
     return 2.0 * n_active * 1 * shape.global_batch  # one token per request
 
 
-def _gossip_model(cfg, axes, state_layout: str) -> dict:
+def _gossip_model(cfg, axes, state_layout: str,
+                  mesh_agents: int | None = None) -> dict:
     """Analytic per-impl gossip cost for this (arch × mesh) — the flat-path
     extension of the roofline: predicted per-step mix time for the tree
-    leaf-wise dense path vs the flat dense/pallas/sparse whole-buffer ops."""
+    leaf-wise dense path vs the flat dense/pallas/sparse whole-buffer ops.
+
+    ``mesh_agents=N`` adds the agent-sharded engine's model (per-device
+    bytes + collective bytes on the graph's cut edges — the psum_scatter
+    vs ppermute-halo comparison of repro.core.sharded)."""
+    from repro.core import sharded as sharded_lib
     from repro.launch.steps import adapt_for_mesh, build_fed_setup
     from repro.models import build_model
     acfg = adapt_for_mesh(cfg, axes)
@@ -65,14 +71,29 @@ def _gossip_model(cfg, axes, state_layout: str) -> dict:
         n_agents=n_agents, d=d, num_leaves=len(leaves),
         num_directed_edges=2 * fcfg.mixing.graph.num_edges,
         param_bytes=pbytes)
-    return {"n_agents": n_agents, "d": d, "num_leaves": len(leaves),
-            "state_layout": state_layout, "impls": model}
+    rec = {"n_agents": n_agents, "d": d, "num_leaves": len(leaves),
+           "state_layout": state_layout, "impls": model}
+    if mesh_agents:
+        if n_agents % mesh_agents:
+            rec["sharded"] = {"skipped": f"mesh_agents={mesh_agents} does "
+                              f"not divide n_agents={n_agents}"}
+        else:
+            cut = sharded_lib.cut_edge_stats(fcfg.mixing.graph, mesh_agents)
+            rec["sharded"] = {
+                **cut,
+                "impls": analysis.sharded_gossip_cost_model(
+                    n_agents=n_agents, d=d, n_shards=mesh_agents,
+                    num_cut_edges=cut["num_cut_edges"],
+                    num_halo_rounds=cut["num_halo_rounds"],
+                    param_bytes=pbytes)}
+    return rec
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool,
             out_dir: str | None = RESULTS_DIR,
             fused_steps: int | None = None,
-            state_layout: str = "tree") -> dict:
+            state_layout: str = "tree",
+            mesh_agents: int | None = None) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -81,8 +102,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
     if fused_steps and shape.kind == "train":
         tag += f"__fused{fused_steps}"
-    if state_layout == "flat" and shape.kind == "train":
-        tag += "__flat"
+    if state_layout in ("flat", "sharded") and shape.kind == "train":
+        tag += f"__{state_layout}"
     rec: dict = {"arch": arch, "shape": shape_name,
                  "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
                  "fused_steps": fused_steps if shape.kind == "train" else None,
@@ -91,7 +112,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     try:
         low = build_lowerable(cfg, shape, axes, fused_steps=fused_steps,
-                              state_layout=state_layout)
+                              state_layout=state_layout, mesh=mesh)
         lowered = low.lower(mesh)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -136,7 +157,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             "roofline": report.row(),
         })
         if shape.kind == "train":
-            rec["gossip_cost_model"] = _gossip_model(cfg, axes, state_layout)
+            rec["gossip_cost_model"] = _gossip_model(cfg, axes, state_layout,
+                                                     mesh_agents)
         print(f"[ok]   {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s")
         print(f"       memory_analysis: {mem}")
         print(f"       hlo(loop-aware): {hlo.summary()}")
@@ -150,6 +172,17 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                 f"{k} {v['pred_us']:.0f}µs" for k, v in gm["impls"].items())
             print(f"       gossip/step (n={gm['n_agents']}, "
                   f"D={gm['d']:.2e}, {gm['num_leaves']} leaves): {pred}")
+        if shape.kind == "train" and mesh_agents \
+                and "sharded" in rec.get("gossip_cost_model", {}):
+            sh = rec["gossip_cost_model"]["sharded"]
+            if "impls" in sh:
+                coll = ", ".join(
+                    f"{k} {v['collective_bytes'] / 1e6:.1f}MB"
+                    for k, v in sh["impls"].items())
+                print(f"       sharded over {mesh_agents}: cut edges "
+                      f"{sh['num_cut_edges']}/{sh['num_directed_edges']}, "
+                      f"{sh['num_halo_rounds']} halo rounds; "
+                      f"collective/device: {coll}")
     except Exception as e:  # noqa: BLE001 — record and continue the sweep
         rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()})
@@ -173,11 +206,19 @@ def main() -> None:
                         "executor (0 = per-step; non-train shapes "
                         "unaffected)")
     p.add_argument("--state-layout", default="tree",
-                   choices=["tree", "flat"],
+                   choices=["tree", "flat", "sharded"],
                    help="train-state engine: 'flat' compiles the single "
                         "(n_agents, D)-buffer hot loop and reports the "
-                        "per-impl gossip cost model (non-train shapes "
+                        "per-impl gossip cost model; 'sharded' compiles "
+                        "the shard_map engine (agent dim block-sharded "
+                        "over the mesh's data axes, repro.core.sharded — "
+                        "sharded-layout archs only; non-train shapes "
                         "unaffected)")
+    p.add_argument("--mesh-agents", type=int, default=None, metavar="N",
+                   help="add the agent-sharded engine's cost model "
+                        "(per-device + cut-edge collective bytes for the "
+                        "flat buffer block-sharded over N devices; "
+                        "repro.core.sharded) to train-shape records")
     p.add_argument("--out", default=RESULTS_DIR)
     args = p.parse_args()
 
@@ -193,7 +234,8 @@ def main() -> None:
             for multi in meshes:
                 rec = run_one(arch, shape, multi, args.out,
                               fused_steps=args.fused or None,
-                              state_layout=args.state_layout)
+                              state_layout=args.state_layout,
+                              mesh_agents=args.mesh_agents)
                 if rec["status"] != "ok":
                     failures.append(rec)
     print(f"\n{len(failures)} failures / "

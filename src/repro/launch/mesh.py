@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_agent_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -25,3 +25,23 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over the actually-present devices (tests / examples)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_agent_mesh(n_shards: int,
+                    axis_name: str = "agents") -> jax.sharding.Mesh:
+    """1-D mesh for the sharded flat engine (repro.core.sharded).
+
+    The flat (n_agents, D) buffer is block-sharded over this single axis —
+    each device owns n_agents/n_shards whole agent rows; the model dims stay
+    unsharded (the flat layout trades inner tensor parallelism for
+    whole-buffer ops).  On CPU CI the devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    avail = len(jax.devices())
+    if not 1 <= n_shards <= avail:
+        raise ValueError(
+            f"need 1 <= n_shards <= {avail} available devices, got "
+            f"{n_shards} (force host devices with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N on CPU)")
+    return jax.make_mesh((n_shards,), (axis_name,),
+                         devices=jax.devices()[:n_shards])

@@ -27,7 +27,8 @@ from jax.sharding import PartitionSpec as P
 from repro import sharding as shd
 from repro.configs.base import ArchConfig, FedConfig
 from repro.configs.shapes import ShapeConfig
-from repro.core import feddec, flat as flat_lib, theory, topology as topo
+from repro.core import (feddec, flat as flat_lib, sharded as sharded_lib,
+                        topology as topo)
 from repro.core.mixing import MixingDistribution
 from repro.launch import specs as specs_lib
 from repro.models import build_model
@@ -188,6 +189,14 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     buffer sharded over the agent axes (each agent's row stays whole — the
     flat layout trades inner tensor-parallel sharding for whole-buffer ops,
     so it suits archs whose per-agent replica fits a device slice).
+
+    ``state_layout='sharded'`` lowers the shard_map engine
+    (repro.core.sharded) over the same flat buffer: the agent dim is
+    block-sharded over the mesh's data axes (needs ``mesh`` and the sharded
+    agent layout), gossip is the psum_scatter contraction / ppermute halo
+    exchange picked by ``fed.gossip_impl``, and the model runs whole per
+    shard (tensor-parallel axis names are cleared — inner TP and the
+    shard_map engine are mutually exclusive by design).
     """
     cfg = adapt_for_mesh(cfg, axes)
     if cfg.fed_agent_layout == "replicated":
@@ -231,10 +240,54 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     batch_specs = shd.batch_pspecs(cfg, batch_struct, axes, stacked=True)
     name = f"train:{cfg.name}:{shape.name}"
 
-    if state_layout not in ("tree", "flat"):
-        raise ValueError(f"state_layout must be 'tree' or 'flat', "
-                         f"got {state_layout!r}")
-    if state_layout == "flat":
+    if state_layout not in ("tree", "flat", "sharded"):
+        raise ValueError(f"state_layout must be 'tree', 'flat' or "
+                         f"'sharded', got {state_layout!r}")
+    if state_layout == "sharded":
+        if mesh is None or cfg.fed_agent_layout != "sharded":
+            raise ValueError("state_layout='sharded' needs a mesh and the "
+                             "sharded agent layout")
+        if fed is not None and fed.gossip_impl == "permute":
+            raise ValueError("the sharded engine subsumes 'permute': use "
+                             "gossip_impl='sparse' (ppermute halo exchange)")
+        # the model runs whole on each shard — no inner TP/batch collectives
+        # and no TP weight gather (its sharding constraints would name mesh
+        # axes that are manual inside the shard_map)
+        cfg = dataclasses.replace(cfg, tp_axis_name=None,
+                                  batch_axis_name=None,
+                                  attn_weight_gather=False)
+        model = build_model(cfg)
+        grad_fn = _microbatch_grad(model.grad_fn(), microbatches)
+        params_struct = jax.eval_shape(model.init, jax.random.key(0))
+        spec = flat_lib.make_flat_spec(params_struct)
+        state_struct = jax.eval_shape(
+            lambda p: flat_lib.init_flat_state(spec, p, n_agents),
+            params_struct)
+        agent_ax = axes.data_axes if len(axes.data_axes) > 1 \
+            else axes.data_axes[0]
+        state_specs = sharded_lib.flat_state_specs(None, spec, n_agents,
+                                                   agent_ax)
+
+        def _sharded(maker):
+            def make(gossip_fn=None, jit=True, **kw):
+                if gossip_fn is not None:
+                    raise ValueError("the sharded engine resolves gossip "
+                                     "from fed.gossip_impl; gossip_fn "
+                                     "overrides are a tree/flat feature")
+                if kw.get("optimizer") is not None:
+                    # state_struct/state_specs above are built without
+                    # optimizer buffers; threading one through here would
+                    # lower with inconsistent arg structs
+                    raise ValueError("optimizer state is not threaded "
+                                     "through the sharded lowerable yet")
+                return maker(fcfg, spec, grad_fn, lr_fn, mesh,
+                             axis_name=agent_ax, jit=jit, **kw)
+            return make
+
+        make_step = _sharded(sharded_lib.make_sharded_feddec_step)
+        make_round = _sharded(sharded_lib.make_sharded_feddec_round)
+        name += ":sharded"
+    elif state_layout == "flat":
         spec = flat_lib.make_flat_spec(params_struct)
         state_struct = jax.eval_shape(
             lambda p: flat_lib.init_flat_state(spec, p, n_agents),

@@ -14,7 +14,6 @@ Example (host scale):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -27,8 +26,10 @@ from repro.configs import get_config
 from repro.configs.base import ArchConfig, FedConfig
 from repro.core import feddec
 from repro.core import flat as flat_lib
+from repro.core import sharded as sharded_lib
 from repro.core.fedavg import FedAvgConfig
 from repro.data.federated_lm import make_federated_lm
+from repro.launch.mesh import make_agent_mesh
 from repro.launch.steps import build_fed_setup
 from repro.models import build_model
 from repro.sharding import MeshAxes
@@ -51,6 +52,7 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                per_agent_batch: int, seq_len: int, lr: float = 3e-3,
                optimizer: str = "sgd", fedavg_control: bool = False,
                fused: bool = True, state_layout: str | None = None,
+               mesh_agents: int | None = None,
                ckpt_dir: str | None = None, ckpt_every: int = 0,
                log_every: int = 10, seed: int = 0,
                data_alpha: float = 0.3):
@@ -72,6 +74,13 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     The returned state is always a tree-engine ``FedState``.  The gossip
     execution path comes from ``fed.gossip_impl``
     (dense|pallas|sparse|none).
+
+    ``mesh_agents=N`` runs the device-sharded engine (repro.core.sharded):
+    the flat (n_agents, D) buffer is block-sharded over an N-device
+    ``agents`` mesh axis (n_agents must be divisible by N) and gossip /
+    server rounds execute as psum_scatter / ppermute-halo / psum
+    collectives.  Implies the flat layout.  On CPU force host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
     """
     model = build_model(cfg)
     axes = MeshAxes(("data",), "model", {"data": fed.n_agents, "model": 1})
@@ -79,10 +88,13 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     if fedavg_control:
         fcfg = FedAvgConfig(n_agents, h=fed.h, k=fed.k)
     if state_layout is None:
-        state_layout = "flat" if fused else "tree"
+        state_layout = "flat" if fused or mesh_agents else "tree"
     if state_layout not in ("tree", "flat"):
         raise ValueError(f"state_layout must be 'tree' or 'flat', "
                          f"got {state_layout!r}")
+    if mesh_agents is not None and state_layout != "flat":
+        raise ValueError("--mesh-agents shards the flat (n_agents, D) "
+                         "buffer; it requires --state-layout flat")
 
     opt = {"sgd": None, "momentum": optim.momentum_sgd(),
            "adamw": optim.adamw()}[optimizer]
@@ -96,7 +108,21 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
         spec = flat_lib.make_flat_spec(params0)
         state = flat_lib.init_flat_state(spec, params0, n_agents,
                                          optimizer=opt)
-        if fused:
+        if mesh_agents is not None:
+            if n_agents % mesh_agents:
+                raise ValueError(f"--mesh-agents {mesh_agents} must divide "
+                                 f"--agents {n_agents}")
+            mesh = make_agent_mesh(mesh_agents)
+            state = sharded_lib.shard_flat_state(state, mesh)
+            if fused:
+                round_fn = sharded_lib.make_sharded_feddec_round(
+                    fcfg, spec, model.grad_fn(), lr_fn, mesh,
+                    optimizer=opt, donate=True)
+            else:
+                step = sharded_lib.make_sharded_feddec_step(
+                    fcfg, spec, model.grad_fn(), lr_fn, mesh,
+                    optimizer=opt, donate=True)
+        elif fused:
             round_fn = flat_lib.make_flat_feddec_round(
                 fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
                 donate=True)
@@ -120,7 +146,9 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     print(f"[train] {cfg.name}: {model.param_count(params0):,} params × "
           f"{n_agents} agents, graph={fed.graph}, H={fed.h}, K={fcfg.k}, "
           f"opt={optimizer}, executor={'fused' if fused else 'per-step'}, "
-          f"layout={state_layout}, gossip={fcfg.gossip_impl}")
+          f"layout={state_layout}"
+          + (f" (sharded over {mesh_agents} devices)" if mesh_agents else "")
+          + f", gossip={fcfg.gossip_impl}")
 
     positions = jnp.broadcast_to(
         jnp.arange(seq_len, dtype=jnp.int32)[None, None],
@@ -208,6 +236,11 @@ def main() -> None:
     p.add_argument("--gossip-impl", default="dense",
                    choices=["dense", "pallas", "sparse", "none"],
                    help="how the gossip mix executes (Algorithm 1 line 6)")
+    p.add_argument("--mesh-agents", type=int, default=None, metavar="N",
+                   help="shard the flat (n_agents, D) buffer over an "
+                        "N-device 'agents' mesh axis (repro.core.sharded); "
+                        "composes with --gossip-impl and --fused.  On CPU: "
+                        "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--d-model", type=int, default=768)
     p.add_argument("--layers", type=int, default=12)
@@ -226,7 +259,8 @@ def main() -> None:
         cfg, fed, steps=args.steps, per_agent_batch=args.batch,
         seq_len=args.seq, lr=args.lr, optimizer=args.optimizer,
         fedavg_control=args.fedavg, fused=args.fused,
-        state_layout=args.state_layout, ckpt_dir=args.ckpt_dir)
+        state_layout=args.state_layout, mesh_agents=args.mesh_agents,
+        ckpt_dir=args.ckpt_dir)
     first = np.mean(losses[:5])
     last = np.mean(losses[-5:])
     print(f"[train] done: loss {first:.4f} → {last:.4f} "

@@ -18,8 +18,6 @@ Cross-attention (seamless decoder) reuses the same params/apply with
 
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -23,7 +23,6 @@ Handles every assigned architecture through three mechanisms:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax

@@ -109,7 +109,6 @@ class TestAssign:
 
 class TestHloAnalysis:
     def test_trip_counts_and_flops(self):
-        import os
         # runs in-process: device count already fixed at 1; scan still works
         def f(x, w):
             def body(c, _):
