@@ -22,13 +22,22 @@ evidence instead:
     collective bytes stay at or below the dense psum_scatter's for every
     multi-shard configuration, and every timed config passed its
     equivalence check against the unsharded dense mix.
+  * compress — BENCH_compress.json halo rows' collective-byte columns are
+    exact against analysis.compressed_halo_cost_model, the int8 halo moves
+    ≤ 0.30× the f32 halo's bytes on every multi-shard config (with a
+    vacuity proof that such configs exist), the payload ordering
+    int8 < bf16 < f32 and the fused-kernel < unfused-kernel streamed-byte
+    ordering hold exactly, and the recorded int8+EF linreg run tracked the
+    uncompressed final loss within 5%.
 
 Run (what ci.yml does):
   PYTHONPATH=src python -m benchmarks.check_regression \\
       --baseline-gossip results/benchmarks/BENCH_gossip.json \\
       --fresh-gossip results/benchmarks/BENCH_gossip.smoke.json \\
       --baseline-sharded results/benchmarks/BENCH_sharded.json \\
-      --fresh-sharded results/benchmarks/BENCH_sharded.smoke.json
+      --fresh-sharded results/benchmarks/BENCH_sharded.smoke.json \\
+      --baseline-compress results/benchmarks/BENCH_compress.json \\
+      --fresh-compress results/benchmarks/BENCH_compress.smoke.json
 """
 
 from __future__ import annotations
@@ -46,6 +55,13 @@ REQUIRED_GOSSIP = {"impl", "n_agents", "d", "num_leaves", "us_per_call",
 REQUIRED_SHARDED = {"impl", "n_agents", "n_shards", "agents_per_device", "d",
                     "us_per_call", "per_device_bytes", "collective_bytes",
                     "num_cut_edges", "num_halo_rounds"}
+REQUIRED_COMPRESS_HALO = {"compress", "n_agents", "n_shards", "d",
+                          "us_per_call", "row_payload_bytes",
+                          "collective_bytes", "payload_ratio_vs_f32",
+                          "num_halo_rounds"}
+REQUIRED_COMPRESS_KERNEL = {"impl", "n_agents", "d", "us_per_call",
+                            "model_stream_bytes"}
+INT8_HALO_CEILING = 0.30  # acceptance: int8 halo bytes ≤ 0.30× f32 halo
 
 
 class RegressionError(AssertionError):
@@ -140,6 +156,107 @@ def check_sharded_doc(doc: dict, label: str) -> None:
           f"bytes on {checked} multi-shard configs")
 
 
+def check_compress_doc(doc: dict, label: str) -> None:
+    """Compressed-gossip evidence: exact byte columns, int8 ≤ 0.30× f32
+    halo, payload/kernel byte orderings, EF convergence — plus vacuity
+    proofs that each class of evidence actually exists in the doc."""
+    rows = doc.get("rows", [])
+    _require(bool(rows), f"{label}: no benchmark rows")
+    halo = [r for r in rows if r.get("section") == "halo"]
+    kernels = [r for r in rows if r.get("section") == "kernel"]
+    for row in halo:
+        missing = REQUIRED_COMPRESS_HALO - set(row)
+        _require(not missing, f"{label}: halo row missing {missing}: {row}")
+        _require(row["us_per_call"] > 0, f"{label}: non-positive time {row}")
+    for row in kernels:
+        missing = REQUIRED_COMPRESS_KERNEL - set(row)
+        _require(not missing,
+                 f"{label}: kernel row missing {missing}: {row}")
+    schemes = {r["compress"] for r in halo}
+    _require({"none", "bf16", "int8"} <= schemes
+             and any(s.startswith("topk:") for s in schemes),
+             f"{label}: compressor coverage shrank: {schemes}")
+
+    # exact: every halo row's byte columns must equal the cost model
+    # recomputed at the row's own (n, s, d, rounds) — emitted rows and the
+    # model must never drift apart
+    for row in halo:
+        model = analysis.compressed_halo_cost_model(
+            n_agents=row["n_agents"], d=row["d"],
+            n_shards=row["n_shards"],
+            num_halo_rounds=row["num_halo_rounds"], param_bytes=4,
+            schemes=(row["compress"],))[row["compress"]]
+        for col in ("row_payload_bytes", "collective_bytes"):
+            _require(row[col] == model[col],
+                     f"{label}: {row['compress']} n_shards="
+                     f"{row['n_shards']} {col} drifted: row={row[col]} "
+                     f"cost-model={model[col]}")
+
+    # int8 ≤ 0.30× f32 on every multi-shard config (+ vacuity proof)
+    by_key = {(r["compress"], r["n_agents"], r["n_shards"]): r for r in halo}
+    checked = 0
+    for (scheme, n, s), row in by_key.items():
+        if s == 1:
+            continue
+        base = by_key.get(("none", n, s))
+        _require(base is not None,
+                 f"{label}: {scheme} halo row (n={n}, s={s}) has no "
+                 f"uncompressed partner")
+        if scheme == "int8":
+            ratio = row["collective_bytes"] / base["collective_bytes"]
+            _require(ratio <= INT8_HALO_CEILING,
+                     f"{label}: int8 halo bytes {ratio:.3f}× f32 exceed "
+                     f"the {INT8_HALO_CEILING} ceiling at n={n}, s={s}")
+            checked += 1
+        if scheme == "bf16":
+            _require(row["collective_bytes"] < base["collective_bytes"],
+                     f"{label}: bf16 halo not below f32 at n={n}, s={s}")
+    _require(checked > 0,
+             f"{label}: no multi-shard int8 rows to check — the "
+             f"compressed-halo byte evidence vanished")
+    for (scheme, n, s), row in by_key.items():
+        if scheme == "int8":
+            bf = by_key.get(("bf16", n, s))
+            _require(bf is not None
+                     and row["collective_bytes"] < bf["collective_bytes"],
+                     f"{label}: int8 < bf16 halo ordering broken at "
+                     f"n={n}, s={s}")
+
+    # kernel ordering on the streamed-byte model (wall-clock off-TPU is
+    # interpret-mode noise): fused receive side < unfused XLA composition
+    def kernel_bytes(impl):
+        return next(r["model_stream_bytes"] for r in kernels
+                    if r["impl"] == impl)
+
+    _require(kernel_bytes("fused_dequant_mix")
+             < kernel_bytes("xla_dequant_mix"),
+             f"{label}: fused dequant-mix no longer streams fewer bytes "
+             f"than the unfused composition")
+
+    acc = doc["acceptance"]
+    _require(bool(acc["identity_bit_identical_to_uncompressed"]),
+             f"{label}: identity-compressor bit-identity check vanished")
+    _require(bool(acc["equivalence_checked_sharded_vs_flat"]),
+             f"{label}: sharded-vs-flat equivalence check was skipped")
+    _require(acc["int8_halo_ratio_vs_f32"] <= INT8_HALO_CEILING,
+             f"{label}: acceptance int8 halo ratio "
+             f"{acc['int8_halo_ratio_vs_f32']} > {INT8_HALO_CEILING}")
+    _require(abs(acc["int8_final_loss_ratio"] - 1.0) <= 0.05,
+             f"{label}: int8+EF linreg final loss drifted "
+             f"{acc['int8_final_loss_ratio']}× from uncompressed (>5%)")
+    print(f"[guard] {label}: {len(halo)} halo + {len(kernels)} kernel rows "
+          f"OK, int8 halo ratio {acc['int8_halo_ratio_vs_f32']}, "
+          f"int8 linreg loss ratio {acc['int8_final_loss_ratio']}")
+
+
+def check_compress_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
+    base = {r["compress"] for r in baseline["rows"]
+            if r.get("section") == "halo"}
+    new = {r["compress"] for r in fresh["rows"] if r.get("section") == "halo"}
+    _require(base <= new,
+             f"fresh compress run dropped schemes: {base - new}")
+
+
 def check_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
     """The committed baseline's impl coverage must survive in the fresh run
     (a fresh run may add impls, never silently drop them)."""
@@ -156,6 +273,10 @@ def main() -> None:
     p.add_argument("--baseline-sharded", default=None,
                    help="optional: committed BENCH_sharded.json baseline")
     p.add_argument("--fresh-sharded", required=True)
+    p.add_argument("--baseline-compress", default=None,
+                   help="optional: committed BENCH_compress.json baseline")
+    p.add_argument("--fresh-compress", default=None,
+                   help="fresh BENCH_compress[.smoke].json to check")
     args = p.parse_args()
 
     with open(args.baseline_gossip) as f:
@@ -172,6 +293,16 @@ def main() -> None:
     if args.baseline_sharded:
         with open(args.baseline_sharded) as f:
             check_sharded_doc(json.load(f), "baseline BENCH_sharded")
+    if args.fresh_compress:
+        with open(args.fresh_compress) as f:
+            fresh_compress = json.load(f)
+        check_compress_doc(fresh_compress, "fresh BENCH_compress")
+        if args.baseline_compress:
+            with open(args.baseline_compress) as f:
+                baseline_compress = json.load(f)
+            check_compress_doc(baseline_compress, "baseline BENCH_compress")
+            check_compress_baseline_vs_fresh(baseline_compress,
+                                             fresh_compress)
     print("[guard] all perf-regression checks passed")
 
 

@@ -12,6 +12,8 @@ commentary) and writes full curves/tables under results/benchmarks/.
   bench_gossip     — gossip impls (dense/pallas/sparse × tree/flat layout)
   bench_sharded    — agent-sharded flat engine weak-scaling (shard_map
                      psum_scatter vs ppermute halo, 1–8 host devices)
+  bench_compress   — compressed gossip (EF codecs, compressed halo bytes,
+                     fused quant/dequant-mix kernels, linreg convergence)
   ablation_server  — beyond-paper: §5 conjecture (server vs pure gossip)
   roofline         — aggregates results/dryrun into the §Roofline table
 """
@@ -26,10 +28,10 @@ def main() -> None:
     p.add_argument("--only", default=None)
     args = p.parse_args()
 
-    from benchmarks import (ablation_server, bench_fused, bench_gossip,
-                            bench_kernels, bench_sharded, fig2_alpha,
-                            fig4_convergence, roofline, table1_lambda2,
-                            theory_check)
+    from benchmarks import (ablation_server, bench_compress, bench_fused,
+                            bench_gossip, bench_kernels, bench_sharded,
+                            fig2_alpha, fig4_convergence, roofline,
+                            table1_lambda2, theory_check)
     jobs = {
         "table1_lambda2": lambda: table1_lambda2.main(
             seeds=3 if args.quick else 10),
@@ -42,6 +44,7 @@ def main() -> None:
         "bench_fused": lambda: bench_fused.main(quick=args.quick),
         "bench_gossip": lambda: bench_gossip.main(smoke=args.quick),
         "bench_sharded": lambda: bench_sharded.main(smoke=args.quick),
+        "bench_compress": lambda: bench_compress.main(smoke=args.quick),
         "ablation_server": lambda: ablation_server.main(
             t_steps=1500 if args.quick else 3000,
             seeds=3 if args.quick else 6),

@@ -287,4 +287,7 @@ class FedConfig:
     graph: str = "ring2"           # ring<k> | geo<r> | er<p> | full
     p_fail: float = 0.0
     gossip_impl: str = "dense"     # dense | permute | pallas | sparse | none
-    gossip_dtype: str = "f32"      # f32 | bf16 (compressed exchange)
+    gossip_dtype: str = "f32"      # f32 | bf16 (permute-path exchange cast)
+    # gossip payload compression with error feedback (repro.core.compress):
+    # none | identity | bf16 | int8 | topk:R
+    gossip_compress: str = "none"

@@ -45,6 +45,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import compress as compress_lib
 from repro.core import gossip as gossip_lib
 from repro.core import server as server_lib
 from repro.core.mixing import MixingDistribution
@@ -79,6 +80,11 @@ class FedDecConfig:
         config value: build it with gossip.make_permute_gossip(graph, mesh,
         agent_axes) and pass it as make_feddec_step(gossip_fn=...) (or
         FedConfig(gossip_impl='permute') in launch/steps.py).
+      gossip_compress: how the gossip *payload* is compressed
+        ('none'|'identity'|'bf16'|'int8'|'topk:R', repro.core.compress):
+        agents exchange encoded values with a CHOCO-style error-feedback
+        residual carried in the state; 'none' (default) is the exact
+        uncompressed path with no residual state.
     """
 
     mixing: MixingDistribution
@@ -86,6 +92,7 @@ class FedDecConfig:
     k: int = 2
     server_enabled: bool = True
     gossip_impl: str = "dense"
+    gossip_compress: str = "none"
 
     GOSSIP_IMPLS = ("dense", "none", "pallas", "sparse")
 
@@ -94,6 +101,7 @@ class FedDecConfig:
             raise ValueError(f"H must be >= 1, got {self.h}")
         if self.k < 1:
             raise ValueError(f"K must be >= 1, got {self.k}")
+        compress_lib.parse_compress(self.gossip_compress)  # validate spec
         if self.gossip_impl not in self.GOSSIP_IMPLS:
             hint = (" (the mesh ppermute path is not a gossip_impl: build it "
                     "with gossip.make_permute_gossip and pass gossip_fn=...)"
@@ -115,10 +123,12 @@ class FedState:
     params: Any          # pytree, every leaf (n_agents, ...)
     step: jax.Array      # scalar int32, the paper's t (starts at 1)
     opt_state: Any = ()  # stacked per-agent optimizer state (SGD: empty)
+    residual: Any = ()   # compressed-gossip EF residual (compress='none': ())
 
 
 def init_state(params_single: Any, n_agents: int,
-               dtype=None, optimizer=None) -> FedState:
+               dtype=None, optimizer=None,
+               compress: str = "none") -> FedState:
     """Replicate one agent's init to all agents: z_i^1 = z^1 ∀i (Alg. 1 l.1)."""
     def rep(leaf):
         leaf = jnp.asarray(leaf, dtype=dtype)
@@ -128,8 +138,10 @@ def init_state(params_single: Any, n_agents: int,
     if optimizer is not None:
         single = optimizer.init(params_single)
         opt_state = jax.tree.map(rep, single)
+    residual = compress_lib.init_residual_tree(
+        compress_lib.parse_compress(compress), stacked)
     return FedState(params=stacked, step=jnp.asarray(1, dtype=jnp.int32),
-                    opt_state=opt_state)
+                    opt_state=opt_state, residual=residual)
 
 
 def resolve_tree_gossip(cfg: FedDecConfig) -> GossipFn:
@@ -153,6 +165,13 @@ def _build_step_body(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
     """The un-jitted Algorithm-1 body shared by both executors."""
     if gossip_fn is None:
         gossip_fn = resolve_tree_gossip(cfg)
+    # leaf-wise compressed exchange with error feedback (repro.core.compress);
+    # W = I (impl 'none') exchanges nothing, so there is nothing to compress
+    compressor = compress_lib.parse_compress(cfg.gossip_compress) \
+        if cfg.gossip_impl != "none" else None
+    if compressor is not None:
+        ef_gossip = compress_lib.make_tree_ef_gossip(compressor, gossip_fn,
+                                                     cfg.n_agents)
 
     def local_update(params, grads, opt_state, eta):
         if optimizer is None:  # Alg. 1 line 5: plain SGD
@@ -166,6 +185,10 @@ def _build_step_body(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
         t = state.step
         key_w, key_grad, key_server = jax.random.split(
             jax.random.fold_in(key, t), 3)
+        if compressor is not None:
+            # derived (not split) so key_w/key_grad/key_server — and with
+            # them every uncompressed trajectory — stay bit-identical
+            key_c = jax.random.fold_in(key_w, 1)
         eta = lr_fn(t)
 
         # line 3: sample W^t
@@ -177,8 +200,13 @@ def _build_step_body(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
         x_half, new_opt = jax.vmap(local_update, in_axes=(0, 0, 0, None))(
             state.params, grads, state.opt_state, eta)
 
-        # line 6: gossip averaging with neighbours
-        x_next = gossip_fn(w, x_half)
+        # line 6: gossip averaging with neighbours (compressed payload + EF
+        # residual when gossip_compress != 'none')
+        if compressor is None:
+            x_next = gossip_fn(w, x_half)
+            new_res = state.residual
+        else:
+            x_next, new_res = ef_gossip(w, x_half, state.residual, key_c)
 
         # lines 7–12: periodic server round (partial participation)
         if cfg.server_enabled:
@@ -191,7 +219,8 @@ def _build_step_body(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
         else:
             z_next = x_next
 
-        new_state = FedState(params=z_next, step=t + 1, opt_state=new_opt)
+        new_state = FedState(params=z_next, step=t + 1, opt_state=new_opt,
+                             residual=new_res)
         metrics = {"loss": jnp.mean(losses), "eta": eta}
         return new_state, metrics
 

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import compress as compress_lib
 from repro.core import gossip as gossip_lib
 from repro.core import server as server_lib
 from repro.core.feddec import FedDecConfig, FedState
@@ -169,16 +170,23 @@ class FlatFedState:
     flat: jax.Array      # (n_agents, D), spec.dtype
     step: jax.Array      # scalar int32, the paper's t (starts at 1)
     opt_state: Any = ()  # flat optimizer buffers (SGD: empty)
+    residual: Any = ()   # (n, D) compressed-gossip EF residual, or ()
 
 
 def init_flat_state(spec: FlatSpec, params_single: Any, n_agents: int,
-                    optimizer=None) -> FlatFedState:
-    """z_i^1 = z^1 ∀i (Alg. 1 line 1), directly in the flat layout."""
+                    optimizer=None, compress: str = "none") -> FlatFedState:
+    """z_i^1 = z^1 ∀i (Alg. 1 line 1), directly in the flat layout.
+
+    ``compress != 'none'`` adds the zero-initialised (n, D) error-feedback
+    residual buffer the compressed-gossip step carries (repro.core.compress).
+    """
     row = spec.ravel(params_single)
     flat = jnp.tile(row[None], (n_agents, 1))
     opt_state = optimizer.init(flat) if optimizer is not None else ()
+    residual = compress_lib.init_residual(
+        compress_lib.parse_compress(compress), n_agents, spec.d, spec.dtype)
     return FlatFedState(flat=flat, step=jnp.asarray(1, dtype=jnp.int32),
-                        opt_state=opt_state)
+                        opt_state=opt_state, residual=residual)
 
 
 def _flatten_opt_state(spec: FlatSpec, opt_state: Any):
@@ -221,17 +229,29 @@ def _unflatten_opt_state(spec: FlatSpec, opt_state: Any, n_agents: int):
     return spec.unflatten(opt_state, cast=False)
 
 
+def _no_residual(residual: Any) -> bool:
+    """() is the 'no residual' sentinel; a *tuple-structured* residual tree
+    (tuple/NamedTuple params) is real state and must not match."""
+    return isinstance(residual, tuple) and residual == ()
+
+
 def flatten_fedstate(spec: FlatSpec, state: FedState) -> FlatFedState:
     """Tree-engine FedState → FlatFedState (one-time ravel, e.g. at start)."""
+    residual = () if _no_residual(state.residual) \
+        else spec.flatten(state.residual)
     return FlatFedState(flat=spec.flatten(state.params), step=state.step,
-                        opt_state=_flatten_opt_state(spec, state.opt_state))
+                        opt_state=_flatten_opt_state(spec, state.opt_state),
+                        residual=residual)
 
 
 def unflatten_fedstate(spec: FlatSpec, fstate: FlatFedState) -> FedState:
     """FlatFedState → tree-engine FedState (e.g. for checkpointing/eval)."""
     n = fstate.flat.shape[0]
+    residual = () if _no_residual(fstate.residual) \
+        else spec.unflatten(fstate.residual, cast=False)
     return FedState(params=spec.unflatten(fstate.flat), step=fstate.step,
-                    opt_state=_unflatten_opt_state(spec, fstate.opt_state, n))
+                    opt_state=_unflatten_opt_state(spec, fstate.opt_state, n),
+                    residual=residual)
 
 
 # ---------------------------------------------------------------------------
@@ -282,14 +302,29 @@ def resolve_flat_gossip(cfg: FedDecConfig,
 def _build_flat_step_body(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                           lr_fn: LrFn, gossip_fn, optimizer):
     """Algorithm-1 body on the flat carry; unflattens only around grad_fn."""
+    custom_gossip = gossip_fn is not None
     if gossip_fn is None:
         gossip_fn = resolve_flat_gossip(cfg)
     n_agents = cfg.n_agents
+    # whole-buffer compressed exchange with error feedback; the int8 ×
+    # 'pallas' combination runs the fused quantize→mix→dequantize kernel
+    # (kernels/compress_mix.py) instead of three whole-buffer passes
+    compressor = compress_lib.parse_compress(cfg.gossip_compress) \
+        if cfg.gossip_impl != "none" else None
+    if compressor is not None:
+        ef_gossip = compress_lib.make_flat_ef_gossip(
+            compressor, gossip_fn, n_agents,
+            fused_int8_pallas=cfg.gossip_impl == "pallas"
+            and not custom_gossip)
 
     def step(state: FlatFedState, batch: Any, key: jax.Array):
         t = state.step
         key_w, key_grad, key_server = jax.random.split(
             jax.random.fold_in(key, t), 3)
+        if compressor is not None:
+            # derived (not split) so key_w/key_grad/key_server — and with
+            # them every uncompressed trajectory — stay bit-identical
+            key_c = jax.random.fold_in(key_w, 1)
         eta = lr_fn(t)
 
         # line 3: sample W^t
@@ -308,7 +343,11 @@ def _build_flat_step_body(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                                                state.opt_state, eta)
 
         # line 6: gossip — one whole-buffer mixing op
-        x_next = gossip_fn(w, x_half)
+        if compressor is None:
+            x_next = gossip_fn(w, x_half)
+            new_res = state.residual
+        else:
+            x_next, new_res = ef_gossip(w, x_half, state.residual, key_c)
 
         # lines 7–12: periodic server round on the flat buffer
         if cfg.server_enabled:
@@ -321,7 +360,8 @@ def _build_flat_step_body(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
         else:
             z_next = x_next
 
-        new_state = FlatFedState(flat=z_next, step=t + 1, opt_state=new_opt)
+        new_state = FlatFedState(flat=z_next, step=t + 1, opt_state=new_opt,
+                                 residual=new_res)
         metrics = {"loss": jnp.mean(losses), "eta": eta}
         return new_state, metrics
 

@@ -172,7 +172,9 @@ def make_permute_gossip(graph: topo.Graph, mesh: jax.sharding.Mesh,
         shard_map preserves inner tensor-parallel sharding.  Defaults to
         agents-only sharding.
       exchange_dtype: cast leaves to this dtype for the exchange and back
-        (e.g. bf16 gossip compression — §Perf iteration A2), accumulate in
+        (a simple bf16 wire cast; the full §Perf iteration A2 compression
+        subsystem — int8/top-k payloads with error feedback — lives in
+        repro.core.compress and the flat/sharded engines), accumulate in
         f32.
 
     Returns:

@@ -51,14 +51,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import compress as compress_lib
 from repro.core import server as server_lib
 from repro.core import topology as topo
 from repro.core.feddec import FedDecConfig
 from repro.core.flat import FlatFedState, FlatSpec
 
 __all__ = ["quotient_graph", "cut_edge_stats", "make_sharded_gossip",
-           "make_sharded_feddec_step", "make_sharded_feddec_round",
-           "flat_state_specs", "shard_flat_state", "agent_axis_size"]
+           "make_sharded_ef_gossip", "make_sharded_feddec_step",
+           "make_sharded_feddec_round", "flat_state_specs",
+           "shard_flat_state", "agent_axis_size"]
 
 GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
 LrFn = Callable[[jax.Array], jax.Array]
@@ -138,6 +140,47 @@ def cut_edge_stats(graph: topo.Graph, n_shards: int) -> dict:
 # ---------------------------------------------------------------------------
 
 
+def _halo_setup(cfg: FedDecConfig, n_shards: int):
+    """Static ppermute metadata of the quotient graph, shared by the
+    uncompressed and compressed halo mixers: ``perms`` is (R, S) int32
+    (round r, shard d receives shard perms[r, d]'s block), ``pairs`` the
+    per-round (src, dst) ppermute arguments."""
+    q = quotient_graph(cfg.mixing.graph, n_shards)
+    schedule = topo.permutation_schedule(q)
+    perms = jnp.asarray(
+        np.stack(schedule) if schedule
+        else np.zeros((0, n_shards), np.int64), jnp.int32)
+    pairs = [tuple((int(p[d]), d) for d in range(n_shards) if p[d] != d)
+             for p in schedule]
+    return perms, pairs
+
+
+def _blk_mix_for(impl: str, block_d: int | None):
+    """The (n_local, n_local) @ (n_local, D) sub-block contraction: the
+    Pallas streaming kernel for impl='pallas', the XLA einsum otherwise."""
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        def blk_mix(wb, xb):
+            if block_d is None:
+                return kernel_ops.gossip_mix(wb, xb)
+            return kernel_ops.gossip_mix(wb, xb, block_d=block_d)
+        return blk_mix
+
+    def blk_mix(wb, xb):
+        return jnp.einsum("ij,jd->id", wb.astype(xb.dtype), xb,
+                          precision=jax.lax.Precision.HIGHEST)
+    return blk_mix
+
+
+def _halo_wblk(w, lo, src, me, n_local):
+    """Round-r weight sub-block W[rows, src-block]; idle shards this round
+    (perm[me] == me) received zeros and must not re-add their own block."""
+    wblk = jax.lax.dynamic_slice(w, (lo, src * n_local),
+                                 (n_local, n_local))
+    return jnp.where(src == me, 0.0, 1.0).astype(wblk.dtype) * wblk
+
+
 def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
                       block_d: int | None = None):
     """gossip_impl → per-shard mix(w, x_blk, me) -> y_blk.
@@ -167,26 +210,8 @@ def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
         return mix
 
     if impl in ("sparse", "pallas"):
-        q = quotient_graph(cfg.mixing.graph, n_shards)
-        schedule = topo.permutation_schedule(q)
-        # (R, S) int32: round r, shard d receives shard perms[r, d]'s block
-        perms = jnp.asarray(
-            np.stack(schedule) if schedule
-            else np.zeros((0, n_shards), np.int64), jnp.int32)
-        pairs = [tuple((int(p[d]), d) for d in range(n_shards) if p[d] != d)
-                 for p in schedule]
-
-        if impl == "pallas":
-            from repro.kernels import ops as kernel_ops
-
-            def blk_mix(wb, xb):
-                if block_d is None:
-                    return kernel_ops.gossip_mix(wb, xb)
-                return kernel_ops.gossip_mix(wb, xb, block_d=block_d)
-        else:
-            def blk_mix(wb, xb):
-                return jnp.einsum("ij,jd->id", wb.astype(xb.dtype), xb,
-                                  precision=jax.lax.Precision.HIGHEST)
+        perms, pairs = _halo_setup(cfg, n_shards)
+        blk_mix = _blk_mix_for(impl, block_d)
 
         def mix(w, x_blk, me):
             lo = me * n_local
@@ -194,14 +219,69 @@ def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
             y = blk_mix(own, x_blk)
             for r, pr in enumerate(pairs):
                 recv = jax.lax.ppermute(x_blk, axis_name, perm=pr)
-                src = perms[r, me]
-                wblk = jax.lax.dynamic_slice(w, (lo, src * n_local),
-                                             (n_local, n_local))
-                # idle shards this round (perm[me] == me) received zeros
-                # and must not re-add their own block
-                wblk = jnp.where(src == me, 0.0, 1.0).astype(wblk.dtype) \
-                    * wblk
+                wblk = _halo_wblk(w, lo, perms[r, me], me, n_local)
                 y = y + blk_mix(wblk, recv)
+            return y
+        return mix
+
+    raise ValueError(f"unknown gossip_impl {impl!r}")  # pragma: no cover
+
+
+def _make_compressed_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
+                                 compressor, block_d: int | None = None):
+    """Compressed-gossip per-shard mixer (repro.core.compress semantics):
+
+        mix(w, p_blk, s_blk, payload, me) -> y_blk
+        y_i = W_ii p_i + Σ_{j≠i} W_ij s_j
+
+    ``p_blk`` is the shard's full-precision (n_local, D) block, ``s_blk``
+    its dequantized compressed values, ``payload`` the encoded wire form.
+    The dense path contracts against s and psum_scatters f32 partials (the
+    collective is graph-oblivious — compression there only changes the
+    *semantics*); the sparse/pallas halo ``ppermute``s the **encoded
+    payload** itself (int8 buffer + scales / top-k values + indices), so
+    the cut-edge collective bytes in the compiled HLO shrink by the
+    compressor's payload ratio, and each receiver fuses decode into its
+    sub-block contraction.
+    """
+    impl = cfg.gossip_impl
+    n = cfg.n_agents
+    n_local = n // n_shards
+
+    def diag_blk(w, me):
+        return jax.lax.dynamic_slice_in_dim(
+            jnp.diagonal(w), me * n_local, n_local)
+
+    if impl == "dense":
+        def mix(w, p_blk, s_blk, payload, me):
+            cols = jax.lax.dynamic_slice_in_dim(w, me * n_local, n_local,
+                                                axis=1)
+            partial = jnp.einsum("ij,jd->id", cols.astype(s_blk.dtype),
+                                 s_blk, precision=jax.lax.Precision.HIGHEST)
+            y = partial if n_shards == 1 else jax.lax.psum_scatter(
+                partial, axis_name, scatter_dimension=0, tiled=True)
+            dg = diag_blk(w, me).astype(p_blk.dtype)[:, None]
+            return y + dg * (p_blk - s_blk)
+        return mix
+
+    if impl in ("sparse", "pallas"):
+        perms, pairs = _halo_setup(cfg, n_shards)
+        blk_mix = _blk_mix_for(impl, block_d)
+
+        def mix(w, p_blk, s_blk, payload, me):
+            lo = me * n_local
+            own = jax.lax.dynamic_slice(w, (lo, lo), (n_local, n_local))
+            dg = diag_blk(w, me).astype(p_blk.dtype)[:, None]
+            y = blk_mix(own, s_blk) + dg * (p_blk - s_blk)
+            for r, pr in enumerate(pairs):
+                # the halo moves the *encoded* payload, leaf by leaf
+                recv = jax.tree.map(
+                    lambda a: jax.lax.ppermute(a, axis_name, perm=pr),
+                    payload)
+                s_recv = compressor.decode(recv, p_blk.dtype,
+                                           p_blk.shape[1])
+                wblk = _halo_wblk(w, lo, perms[r, me], me, n_local)
+                y = y + blk_mix(wblk, s_recv)
             return y
         return mix
 
@@ -238,6 +318,52 @@ def make_sharded_gossip(cfg: FedDecConfig, mesh: jax.sharding.Mesh,
                       out_specs=P(ax))
 
 
+def make_sharded_ef_gossip(cfg: FedDecConfig, mesh: jax.sharding.Mesh,
+                           axis_name: str | tuple[str, ...] = "agents",
+                           block_d: int | None = None):
+    """Compressed whole-buffer gossip with error feedback on the mesh.
+
+    The standalone counterpart of :func:`repro.core.compress
+    .make_flat_ef_gossip` for an agent-sharded (n, D) buffer — the op the
+    compressed step body executes, exposed for benchmarks/tests:
+
+        gossip(w, p, res, key_c) -> (y, new_res)
+
+    with ``p``/``res`` sharded ``P(axis_name)`` and ``key_c`` the step's
+    codec key (per-agent keys are derived replicated and row-sliced, so the
+    result matches the single-device EF gossip on the same inputs).  The
+    sparse/pallas impls ppermute the *encoded* halo payload.  With
+    ``cfg.gossip_compress='none'`` this degrades to
+    :func:`make_sharded_gossip` plus an untouched ().
+    """
+    compressor = compress_lib.parse_compress(cfg.gossip_compress)
+    if compressor is None or cfg.gossip_impl == "none":
+        # same bypass as the engines: W = I exchanges nothing to compress
+        plain = make_sharded_gossip(cfg, mesh, axis_name, block_d=block_d)
+        return lambda w, p, res, key_c: (plain(w, p), res)
+    n_shards = agent_axis_size(mesh, axis_name)
+    if cfg.n_agents % n_shards:
+        raise ValueError(
+            f"agent axis {axis_name!r} has {n_shards} shards which must "
+            f"divide n_agents={cfg.n_agents}")
+    ax = axis_name if isinstance(axis_name, str) or len(axis_name) > 1 \
+        else axis_name[0]
+    cmixer = _make_compressed_shard_mixer(cfg, ax, n_shards,
+                                          compressor, block_d=block_d)
+    n_agents = cfg.n_agents
+    n_local = n_agents // n_shards
+
+    def per_shard(w, p_blk, res_blk, key_c):
+        me = jax.lax.axis_index(ax)
+        payload, s_blk, new_res = _encode_shard_block(
+            compressor, key_c, n_agents, n_local, me, p_blk, res_blk)
+        return cmixer(w, p_blk, s_blk, payload, me), new_res
+
+    return _shard_map(per_shard, mesh,
+                      in_specs=(P(None, None), P(ax), P(ax), P()),
+                      out_specs=(P(ax), P(ax)))
+
+
 # ---------------------------------------------------------------------------
 # State placement helpers
 # ---------------------------------------------------------------------------
@@ -261,12 +387,13 @@ def _opt_specs(optimizer, spec: FlatSpec, n_agents: int, axis_name) -> Any:
 
 
 def flat_state_specs(optimizer, spec: FlatSpec, n_agents: int,
-                     axis_name: str | tuple[str, ...] = "agents"
-                     ) -> FlatFedState:
+                     axis_name: str | tuple[str, ...] = "agents",
+                     compress: str = "none") -> FlatFedState:
     """FlatFedState pytree of PartitionSpecs for the sharded engine."""
     return FlatFedState(
         flat=P(axis_name), step=P(),
-        opt_state=_opt_specs(optimizer, spec, n_agents, axis_name))
+        opt_state=_opt_specs(optimizer, spec, n_agents, axis_name),
+        residual=() if compress == "none" else P(axis_name))
 
 
 def shard_flat_state(state: FlatFedState, mesh: jax.sharding.Mesh,
@@ -276,7 +403,9 @@ def shard_flat_state(state: FlatFedState, mesh: jax.sharding.Mesh,
     specs = FlatFedState(
         flat=P(axis_name), step=P(),
         opt_state=jax.tree.map(lambda l: _leaf_spec(l, axis_name),
-                               state.opt_state))
+                               state.opt_state),
+        residual=jax.tree.map(lambda l: _leaf_spec(l, axis_name),
+                              state.residual))
     shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                              is_leaf=lambda x: isinstance(x, P))
     return jax.device_put(state, shardings)
@@ -295,6 +424,23 @@ def _slice_agent_keys(keys: jax.Array, lo: jax.Array, n_local: int):
     return jax.random.wrap_key_data(blk)
 
 
+def _encode_shard_block(compressor, key_c, n_agents: int, n_local: int,
+                        me, x_blk, res_blk):
+    """Per-shard EF encode → (payload, s_blk, new_res).
+
+    The per-agent codec keys are derived replicated and row-sliced (like
+    the grad keys), so agent i's rounding noise — and with it s_i and the
+    residual — matches the single-device flat engine bit for bit.
+    """
+    keys = _slice_agent_keys(
+        jax.random.split(key_c, n_agents), me * n_local, n_local) \
+        if compressor.needs_key else None
+    u = x_blk + res_blk
+    payload = compressor.encode(keys, u)
+    s_blk = compressor.decode(payload, u.dtype, u.shape[1])
+    return payload, s_blk, u - s_blk
+
+
 def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                           lr_fn: LrFn, axis_name, n_shards: int,
                           optimizer, block_d: int | None):
@@ -302,7 +448,13 @@ def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
     bit-identical to repro.core.flat's step so trajectories match."""
     n_agents = cfg.n_agents
     n_local = n_agents // n_shards
-    mixer = _make_shard_mixer(cfg, axis_name, n_shards, block_d=block_d)
+    compressor = compress_lib.parse_compress(cfg.gossip_compress) \
+        if cfg.gossip_impl != "none" else None
+    if compressor is None:
+        mixer = _make_shard_mixer(cfg, axis_name, n_shards, block_d=block_d)
+    else:
+        cmixer = _make_compressed_shard_mixer(cfg, axis_name, n_shards,
+                                              compressor, block_d=block_d)
 
     def shard_server_round(key, x_blk, me):
         # lines 8–10 as psum + broadcast: every shard draws the same S_t
@@ -316,10 +468,14 @@ def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
             z = jax.lax.psum(z, axis_name)
         return jnp.broadcast_to(z[None], x_blk.shape)
 
-    def step(x_blk, opt_blk, t, batch_blk, key):
+    def step(x_blk, res_blk, opt_blk, t, batch_blk, key):
         me = jax.lax.axis_index(axis_name)
         key_w, key_grad, key_server = jax.random.split(
             jax.random.fold_in(key, t), 3)
+        if compressor is not None:
+            # same derivation as the flat/tree engines: key_c is folded off
+            # key_w, never split, so uncompressed streams are untouched
+            key_c = jax.random.fold_in(key_w, 1)
         eta = lr_fn(t)
 
         # line 3: sample W^t (replicated compute — identical on every shard)
@@ -339,8 +495,15 @@ def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
         else:
             x_half, new_opt = optimizer.update(x_blk, g_blk, opt_blk, eta)
 
-        # line 6: gossip — per-shard contraction + the impl's collective
-        x_next = mixer(w, x_half, me)
+        # line 6: gossip — per-shard contraction + the impl's collective;
+        # compressed, the halo moves the encoded payload
+        if compressor is None:
+            x_next = mixer(w, x_half, me)
+            new_res = res_blk
+        else:
+            payload, s_blk, new_res = _encode_shard_block(
+                compressor, key_c, n_agents, n_local, me, x_half, res_blk)
+            x_next = cmixer(w, x_half, s_blk, payload, me)
 
         # lines 7–12: periodic server round
         if cfg.server_enabled:
@@ -357,7 +520,7 @@ def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
         if n_shards > 1:
             loss = jax.lax.psum(loss, axis_name)
         metrics = {"loss": loss / n_agents, "eta": eta}
-        return z_next, new_opt, metrics
+        return z_next, new_res, new_opt, metrics
 
     return step
 
@@ -396,17 +559,20 @@ def make_sharded_feddec_step(cfg: FedDecConfig, spec: FlatSpec,
     per_shard = _build_per_shard_step(cfg, spec, grad_fn, lr_fn, ax,
                                       n_shards, optimizer, block_d)
     opt_specs = _opt_specs(optimizer, spec, cfg.n_agents, ax)
+    res_specs = () if cfg.gossip_compress == "none" \
+        or cfg.gossip_impl == "none" else P(ax)
     metric_specs = {"loss": P(), "eta": P()}
     smapped = _shard_map(
         per_shard, mesh,
-        in_specs=(P(ax), opt_specs, P(), P(ax), P()),
-        out_specs=(P(ax), opt_specs, metric_specs))
+        in_specs=(P(ax), res_specs, opt_specs, P(), P(ax), P()),
+        out_specs=(P(ax), res_specs, opt_specs, metric_specs))
 
     def step(state: FlatFedState, batch: Any, key: jax.Array):
-        flat, opt, metrics = smapped(state.flat, state.opt_state, state.step,
-                                     batch, key)
+        flat, res, opt, metrics = smapped(state.flat, state.residual,
+                                          state.opt_state, state.step,
+                                          batch, key)
         return FlatFedState(flat=flat, step=state.step + 1,
-                            opt_state=opt), metrics
+                            opt_state=opt, residual=res), metrics
 
     if not jit:
         return step
@@ -434,27 +600,32 @@ def make_sharded_feddec_round(cfg: FedDecConfig, spec: FlatSpec,
     per_shard = _build_per_shard_step(cfg, spec, grad_fn, lr_fn, ax,
                                       n_shards, optimizer, block_d)
     opt_specs = _opt_specs(optimizer, spec, cfg.n_agents, ax)
+    res_specs = () if cfg.gossip_compress == "none" \
+        or cfg.gossip_impl == "none" else P(ax)
     metric_specs = {"loss": P(None), "eta": P(None)}
 
-    def per_shard_round(x_blk, opt_blk, t0, batches_blk, key):
+    def per_shard_round(x_blk, res_blk, opt_blk, t0, batches_blk, key):
         def body(carry, batch):
-            x, opt, t = carry
-            z, new_opt, metrics = per_shard(x, opt, t, batch, key)
-            return (z, new_opt, t + 1), metrics
+            x, res, opt, t = carry
+            z, new_res, new_opt, metrics = per_shard(x, res, opt, t, batch,
+                                                     key)
+            return (z, new_res, new_opt, t + 1), metrics
 
-        (x, opt, t), metrics = jax.lax.scan(
-            body, (x_blk, opt_blk, t0), batches_blk, unroll=unroll)
-        return x, opt, t, metrics
+        (x, res, opt, t), metrics = jax.lax.scan(
+            body, (x_blk, res_blk, opt_blk, t0), batches_blk, unroll=unroll)
+        return x, res, opt, t, metrics
 
     smapped = _shard_map(
         per_shard_round, mesh,
-        in_specs=(P(ax), opt_specs, P(), P(None, ax), P()),
-        out_specs=(P(ax), opt_specs, P(), metric_specs))
+        in_specs=(P(ax), res_specs, opt_specs, P(), P(None, ax), P()),
+        out_specs=(P(ax), res_specs, opt_specs, P(), metric_specs))
 
     def round_fn(state: FlatFedState, batches: Any, key: jax.Array):
-        flat, opt, t, metrics = smapped(state.flat, state.opt_state,
-                                        state.step, batches, key)
-        return FlatFedState(flat=flat, step=t, opt_state=opt), metrics
+        flat, res, opt, t, metrics = smapped(state.flat, state.residual,
+                                             state.opt_state, state.step,
+                                             batches, key)
+        return FlatFedState(flat=flat, step=t, opt_state=opt,
+                            residual=res), metrics
 
     if not jit:
         return round_fn

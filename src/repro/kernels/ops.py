@@ -12,13 +12,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import compress_mix as _cm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gossip_mix as _gm
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import ssd_scan as _ssd
 
 __all__ = ["flash_attention", "gossip_mix", "gossip_mix_tree",
-           "make_sparse_gossip_pallas", "ssd_scan", "rglru_scan", "on_tpu"]
+           "make_sparse_gossip_pallas", "quant_mix", "dequant_mix",
+           "ssd_scan", "rglru_scan", "on_tpu"]
 
 
 def on_tpu() -> bool:
@@ -103,6 +105,50 @@ def make_sparse_gossip_pallas(graph, *, block_d: int = _gm.BLOCK_D):
         return y[:n, :d]
 
     return mix
+
+
+def _pad_compress_args(w, scale, tiles, block_d):
+    """Pad n→8k rows / D→block_d cols for the compress_mix kernels.
+
+    Padded rows are isolated (zero W rows/cols, diag 0) and carry scale 1
+    so the in-kernel ``u / scale`` stays finite; padded columns hold zeros
+    (u=0, noise=0 ⇒ q=0) and are sliced off the outputs.
+    """
+    n, d = tiles[0].shape
+    n_pad = (-n) % 8
+    d_pad = (-d) % block_d
+    wp = jnp.pad(w, ((0, n_pad), (0, n_pad)))
+    diag = jnp.pad(jnp.diagonal(w), (0, n_pad))
+    scale_p = jnp.pad(scale.astype(jnp.float32), (0, n_pad),
+                      constant_values=1.0)
+    padded = [jnp.pad(t, ((0, n_pad), (0, d_pad))) for t in tiles]
+    return wp, diag, scale_p, padded, n, d
+
+
+def quant_mix(w: jax.Array, u: jax.Array, noise: jax.Array, p: jax.Array,
+              scale: jax.Array, *, block_d: int = _cm.BLOCK_D):
+    """Fused int8 quantize → mix → EF-correct (send side).
+
+    Returns (y, q): y = W·(q·scale) + diag(W)·(p − q·scale) with
+    q = clip(⌊u/scale + noise⌋, ±127) — identical, element for element, to
+    composing Int8Compressor.encode/decode with the dense mix (the noise
+    and scale come from the caller, shared with the XLA path).
+    """
+    wp, diag, scale_p, (up, np_, pp), n, d = _pad_compress_args(
+        w, scale, [u, noise, p], block_d)
+    y, q = _cm.quant_mix_pallas(wp, diag, scale_p, up, np_, pp,
+                                block_d=block_d, interpret=_interpret())
+    return y[:n, :d], q[:n, :d]
+
+
+def dequant_mix(w: jax.Array, q: jax.Array, scale: jax.Array, p: jax.Array,
+                *, block_d: int = _cm.BLOCK_D):
+    """Fused int8 dequantize → mix (receive side): streams q at 1 B/elem."""
+    wp, diag, scale_p, (qp, pp), n, d = _pad_compress_args(
+        w, scale, [q, p], block_d)
+    y = _cm.dequant_mix_pallas(wp, diag, scale_p, qp.astype(jnp.int8), pp,
+                               block_d=block_d, interpret=_interpret())
+    return y[:n, :d]
 
 
 def ssd_scan(x, dt, a, b, c, *, chunk: int = 256):

@@ -24,7 +24,8 @@ from repro.launch import hlo_analysis
 __all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "CollectiveStats",
            "parse_collectives", "roofline_terms", "RooflineReport",
            "dtype_bytes", "gossip_cost_model", "sharded_gossip_cost_model",
-           "hlo_analysis"]
+           "compress_row_bytes", "compressed_halo_cost_model",
+           "COMPRESS_SCHEMES", "hlo_analysis"]
 
 PEAK_FLOPS = 197e12   # bf16 per chip
 HBM_BW = 819e9        # bytes/s per chip
@@ -234,6 +235,57 @@ def sharded_gossip_cost_model(*, n_agents: int, d: int, n_shards: int,
                         {"num_halo_rounds": num_halo_rounds}),
         "none": entry(stream_blk, 0.0, 0.0),
     }
+
+
+COMPRESS_SCHEMES = ("none", "bf16", "int8", "topk:0.1")
+
+
+def compress_row_bytes(compress: str, d: int, param_bytes: int = 4) -> float:
+    """Analytic wire bytes per agent row of the compressed gossip payload.
+
+    Mirrors ``repro.core.compress.Compressor.wire_bytes_per_row`` without
+    importing the codecs (this module stays jax-free at the cost-model
+    level): int8 is one byte per element plus one f32 scale per row, top-k
+    moves ⌈R·d⌉ (value, int32 index) pairs, bf16 halves the payload.
+    """
+    if compress in ("none", "identity"):
+        return float(d * param_bytes)
+    if compress == "bf16":
+        return 2.0 * d
+    if compress == "int8":
+        return float(d) + 4.0
+    if compress.startswith("topk:"):
+        ratio = float(compress[5:])
+        k = max(1, min(d, int(round(ratio * d))))
+        return float(k) * (param_bytes + 4.0)
+    raise ValueError(f"unknown compress scheme {compress!r}")
+
+
+def compressed_halo_cost_model(*, n_agents: int, d: int, n_shards: int,
+                               num_halo_rounds: int, param_bytes: int = 4,
+                               schemes: tuple = COMPRESS_SCHEMES) -> dict:
+    """Per-device halo collective bytes of the compressed sparse gossip.
+
+    The sharded engine's halo (repro.core.sharded) moves one *encoded*
+    (n_local, D) block per ppermute round, so per-device collective bytes
+    are ``num_halo_rounds · n_local · compress_row_bytes(scheme)`` — the
+    dense psum_scatter path is compression-oblivious (f32 partial sums) and
+    is not modelled here.  ``payload_ratio_vs_f32`` is the column CI's
+    regression guard pins (int8 ≈ 0.25 ≤ 0.30 at any realistic D).
+    """
+    n_local = n_agents // n_shards
+    f32_row = float(d * param_bytes)
+    out = {}
+    for scheme in schemes:
+        row = compress_row_bytes(scheme, d, param_bytes)
+        coll = num_halo_rounds * n_local * row if n_shards > 1 else 0.0
+        out[scheme] = {
+            "row_payload_bytes": row,
+            "collective_bytes": coll,
+            "payload_ratio_vs_f32": row / f32_row,
+            "pred_us": coll / ICI_BW * 1e6,
+        }
+    return out
 
 
 def roofline_terms(*, name: str, chips: int, per_device_flops: float,

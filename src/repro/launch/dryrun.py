@@ -53,11 +53,14 @@ def _gossip_model(cfg, axes, state_layout: str,
                   mesh_agents: int | None = None) -> dict:
     """Analytic per-impl gossip cost for this (arch × mesh) — the flat-path
     extension of the roofline: predicted per-step mix time for the tree
-    leaf-wise dense path vs the flat dense/pallas/sparse whole-buffer ops.
+    leaf-wise dense path vs the flat dense/pallas/sparse whole-buffer ops,
+    plus the compressed-payload byte model (per-row wire bytes for every
+    gossip_compress scheme; repro.core.compress).
 
     ``mesh_agents=N`` adds the agent-sharded engine's model (per-device
     bytes + collective bytes on the graph's cut edges — the psum_scatter
-    vs ppermute-halo comparison of repro.core.sharded)."""
+    vs ppermute-halo comparison of repro.core.sharded) and the compressed
+    halo collective bytes per scheme."""
     from repro.core import sharded as sharded_lib
     from repro.launch.steps import adapt_for_mesh, build_fed_setup
     from repro.models import build_model
@@ -72,7 +75,10 @@ def _gossip_model(cfg, axes, state_layout: str,
         num_directed_edges=2 * fcfg.mixing.graph.num_edges,
         param_bytes=pbytes)
     rec = {"n_agents": n_agents, "d": d, "num_leaves": len(leaves),
-           "state_layout": state_layout, "impls": model}
+           "state_layout": state_layout, "impls": model,
+           "compress_payload_bytes_per_row": {
+               scheme: analysis.compress_row_bytes(scheme, d, pbytes)
+               for scheme in analysis.COMPRESS_SCHEMES}}
     if mesh_agents:
         if n_agents % mesh_agents:
             rec["sharded"] = {"skipped": f"mesh_agents={mesh_agents} does "
@@ -85,6 +91,10 @@ def _gossip_model(cfg, axes, state_layout: str,
                     n_agents=n_agents, d=d, n_shards=mesh_agents,
                     num_cut_edges=cut["num_cut_edges"],
                     num_halo_rounds=cut["num_halo_rounds"],
+                    param_bytes=pbytes),
+                "compress": analysis.compressed_halo_cost_model(
+                    n_agents=n_agents, d=d, n_shards=mesh_agents,
+                    num_halo_rounds=cut["num_halo_rounds"],
                     param_bytes=pbytes)}
     return rec
 
@@ -93,7 +103,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             out_dir: str | None = RESULTS_DIR,
             fused_steps: int | None = None,
             state_layout: str = "tree",
-            mesh_agents: int | None = None) -> dict:
+            mesh_agents: int | None = None,
+            gossip_compress: str = "none") -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -109,9 +120,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                  "fused_steps": fused_steps if shape.kind == "train" else None,
                  "state_layout": state_layout
                  if shape.kind == "train" else None}
+    if gossip_compress != "none" and shape.kind == "train":
+        rec["gossip_compress"] = gossip_compress
     t0 = time.time()
     try:
-        low = build_lowerable(cfg, shape, axes, fused_steps=fused_steps,
+        from repro.configs.base import FedConfig
+        fed = FedConfig(gossip_compress=gossip_compress) \
+            if gossip_compress != "none" else None
+        low = build_lowerable(cfg, shape, axes, fed=fed,
+                              fused_steps=fused_steps,
                               state_layout=state_layout, mesh=mesh)
         lowered = low.lower(mesh)
         t_lower = time.time() - t0
@@ -183,6 +200,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                       f"{sh['num_cut_edges']}/{sh['num_directed_edges']}, "
                       f"{sh['num_halo_rounds']} halo rounds; "
                       f"collective/device: {coll}")
+                comp = ", ".join(
+                    f"{k} {v['collective_bytes'] / 1e6:.1f}MB"
+                    f" ({v['payload_ratio_vs_f32']:.2f}x)"
+                    for k, v in sh["compress"].items())
+                print(f"       compressed halo/device: {comp}")
     except Exception as e:  # noqa: BLE001 — record and continue the sweep
         rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()})
@@ -219,6 +241,12 @@ def main() -> None:
                         "(per-device + cut-edge collective bytes for the "
                         "flat buffer block-sharded over N devices; "
                         "repro.core.sharded) to train-shape records")
+    p.add_argument("--gossip-compress", default="none", metavar="SPEC",
+                   help="compile train steps with the compressed-gossip "
+                        "subsystem (repro.core.compress: none | identity | "
+                        "bf16 | int8 | topk:R) — the state gains the EF "
+                        "residual buffer and the cost model records the "
+                        "compressed payload bytes")
     p.add_argument("--out", default=RESULTS_DIR)
     args = p.parse_args()
 
@@ -235,7 +263,8 @@ def main() -> None:
                 rec = run_one(arch, shape, multi, args.out,
                               fused_steps=args.fused or None,
                               state_layout=args.state_layout,
-                              mesh_agents=args.mesh_agents)
+                              mesh_agents=args.mesh_agents,
+                              gossip_compress=args.gossip_compress)
                 if rec["status"] != "ok":
                     failures.append(rec)
     print(f"\n{len(failures)} failures / "

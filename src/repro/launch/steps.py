@@ -76,7 +76,8 @@ def build_fed_setup(cfg: ArchConfig, axes: shd.MeshAxes,
     # unknown impl is left for FedDecConfig's validation to reject
     impl = "dense" if fed.gossip_impl == "permute" else fed.gossip_impl
     fcfg = feddec.FedDecConfig(mixing=mixing, h=fed.h,
-                               k=min(fed.k, n), gossip_impl=impl)
+                               k=min(fed.k, n), gossip_impl=impl,
+                               gossip_compress=fed.gossip_compress)
     return fcfg, n
 
 
@@ -207,6 +208,9 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
         cfg = dataclasses.replace(cfg, batch_axis_name="data")
     model = build_model(cfg)
     fcfg, n_agents = build_fed_setup(cfg, axes, fed)
+    # the engines carry no residual when W = I exchanges nothing, so the
+    # state structs must not either
+    compress = fcfg.gossip_compress if fcfg.gossip_impl != "none" else "none"
     per_agent = shape.global_batch // n_agents
     if microbatches is None:
         microbatches = _default_microbatches(cfg, per_agent, axes)
@@ -214,7 +218,8 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
 
     params_struct = jax.eval_shape(model.init, jax.random.key(0))
     state_struct = jax.eval_shape(
-        lambda p: feddec.init_state(p, n_agents), params_struct)
+        lambda p: feddec.init_state(p, n_agents, compress=compress),
+        params_struct)
     batch_struct = specs_lib.train_batch_specs(cfg, shape, n_agents)
 
     param_specs = shd.param_pspecs(cfg, state_struct.params, axes)
@@ -261,12 +266,14 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
         params_struct = jax.eval_shape(model.init, jax.random.key(0))
         spec = flat_lib.make_flat_spec(params_struct)
         state_struct = jax.eval_shape(
-            lambda p: flat_lib.init_flat_state(spec, p, n_agents),
+            lambda p: flat_lib.init_flat_state(spec, p, n_agents,
+                                               compress=compress),
             params_struct)
         agent_ax = axes.data_axes if len(axes.data_axes) > 1 \
             else axes.data_axes[0]
         state_specs = sharded_lib.flat_state_specs(None, spec, n_agents,
-                                                   agent_ax)
+                                                   agent_ax,
+                                                   compress=compress)
 
         def _sharded(maker):
             def make(gossip_fn=None, jit=True, **kw):
@@ -290,22 +297,25 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     elif state_layout == "flat":
         spec = flat_lib.make_flat_spec(params_struct)
         state_struct = jax.eval_shape(
-            lambda p: flat_lib.init_flat_state(spec, p, n_agents),
+            lambda p: flat_lib.init_flat_state(spec, p, n_agents,
+                                               compress=compress),
             params_struct)
         agent_ax = axes.data_axes if len(axes.data_axes) > 1 \
             else axes.data_axes[0]
         flat_spec_p = P(agent_ax, None) \
             if cfg.fed_agent_layout == "sharded" else P(None, None)
-        state_specs = flat_lib.FlatFedState(flat=flat_spec_p, step=P(),
-                                            opt_state=())
+        state_specs = flat_lib.FlatFedState(
+            flat=flat_spec_p, step=P(), opt_state=(),
+            residual=() if compress == "none" else flat_spec_p)
         make_step = functools.partial(flat_lib.make_flat_feddec_step,
                                       fcfg, spec, grad_fn, lr_fn)
         make_round = functools.partial(flat_lib.make_flat_feddec_round,
                                        fcfg, spec, grad_fn, lr_fn)
         name += ":flat"
     else:
-        state_specs = feddec.FedState(params=param_specs, step=P(),
-                                      opt_state=())
+        state_specs = feddec.FedState(
+            params=param_specs, step=P(), opt_state=(),
+            residual=() if compress == "none" else param_specs)
         make_step = functools.partial(feddec.make_feddec_step,
                                       fcfg, grad_fn, lr_fn)
         make_round = functools.partial(feddec.make_feddec_round,

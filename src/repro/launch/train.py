@@ -99,6 +99,8 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     opt = {"sgd": None, "momentum": optim.momentum_sgd(),
            "adamw": optim.adamw()}[optimizer]
     lr_fn = lambda t: jnp.asarray(lr, jnp.float32)  # noqa: E731
+    # no exchange (FedAvg / impl 'none') ⇒ nothing to compress, no residual
+    compress = fcfg.gossip_compress if fcfg.gossip_impl != "none" else "none"
 
     data = make_federated_lm(cfg.vocab_size, n_agents, seq_len,
                              alpha=data_alpha, seed=seed)
@@ -107,7 +109,7 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     if state_layout == "flat":
         spec = flat_lib.make_flat_spec(params0)
         state = flat_lib.init_flat_state(spec, params0, n_agents,
-                                         optimizer=opt)
+                                         optimizer=opt, compress=compress)
         if mesh_agents is not None:
             if n_agents % mesh_agents:
                 raise ValueError(f"--mesh-agents {mesh_agents} must divide "
@@ -131,7 +133,8 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                 fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
                 donate=True)
     else:
-        state = feddec.init_state(params0, n_agents, optimizer=opt)
+        state = feddec.init_state(params0, n_agents, optimizer=opt,
+                                  compress=compress)
         if fused:
             round_fn = feddec.make_feddec_round(
                 fcfg, model.grad_fn(), lr_fn, optimizer=opt, donate=True)
@@ -148,7 +151,8 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
           f"opt={optimizer}, executor={'fused' if fused else 'per-step'}, "
           f"layout={state_layout}"
           + (f" (sharded over {mesh_agents} devices)" if mesh_agents else "")
-          + f", gossip={fcfg.gossip_impl}")
+          + f", gossip={fcfg.gossip_impl}"
+          + (f", compress={compress}" if compress != "none" else ""))
 
     positions = jnp.broadcast_to(
         jnp.arange(seq_len, dtype=jnp.int32)[None, None],
@@ -236,6 +240,12 @@ def main() -> None:
     p.add_argument("--gossip-impl", default="dense",
                    choices=["dense", "pallas", "sparse", "none"],
                    help="how the gossip mix executes (Algorithm 1 line 6)")
+    p.add_argument("--gossip-compress", default="none", metavar="SPEC",
+                   help="compress the gossip payload with error feedback "
+                        "(repro.core.compress): none | identity | bf16 | "
+                        "int8 | topk:R (e.g. topk:0.1); the sharded "
+                        "engine's ppermute halo then moves the encoded "
+                        "payload")
     p.add_argument("--mesh-agents", type=int, default=None, metavar="N",
                    help="shard the flat (n_agents, D) buffer over an "
                         "N-device 'agents' mesh axis (repro.core.sharded); "
@@ -254,7 +264,8 @@ def main() -> None:
             cfg = cfg.smoke()
     fed = FedConfig(n_agents=args.agents, h=args.h, k=args.k,
                     graph=args.graph, p_fail=args.p_fail,
-                    gossip_impl=args.gossip_impl)
+                    gossip_impl=args.gossip_impl,
+                    gossip_compress=args.gossip_compress)
     state, losses = train_loop(
         cfg, fed, steps=args.steps, per_agent_batch=args.batch,
         seq_len=args.seq, lr=args.lr, optimizer=args.optimizer,
