@@ -29,6 +29,13 @@ evidence instead:
     int8 < bf16 < f32 and the fused-kernel < unfused-kernel streamed-byte
     ordering hold exactly, and the recorded int8+EF linreg run tracked the
     uncompressed final loss within 5%.
+  * sweep — BENCH_sweep.json rows' dispatch-count and state/stream-byte
+    columns are exact against analysis.sweep_cost_model, the batched
+    lattice stays faster than the per-seed windowed loop on every row
+    (generous 1.5× floor so CPU-runner noise cannot flake the smoke job),
+    every timed config passed its slice-equivalence check against the
+    single-run flat engine, and the committed (non-smoke) baseline shows
+    the ≥5× acceptance speedup at the fig4 seed count.
 
 Run (what ci.yml does):
   PYTHONPATH=src python -m benchmarks.check_regression \\
@@ -61,7 +68,12 @@ REQUIRED_COMPRESS_HALO = {"compress", "n_agents", "n_shards", "d",
                           "num_halo_rounds"}
 REQUIRED_COMPRESS_KERNEL = {"impl", "n_agents", "d", "us_per_call",
                             "model_stream_bytes"}
+REQUIRED_SWEEP = {"r_runs", "n_agents", "d", "t_steps", "h", "us_per_call",
+                  "loop_us_per_call", "speedup", "dispatches_loop",
+                  "dispatches_sweep", "state_bytes", "step_stream_bytes"}
 INT8_HALO_CEILING = 0.30  # acceptance: int8 halo bytes ≤ 0.30× f32 halo
+SWEEP_SMOKE_MARGIN = 1.5   # generous: committed baseline shows 6-17x
+SWEEP_ACCEPT_SPEEDUP = 5.0  # ISSUE acceptance at fig4 shapes (committed)
 
 
 class RegressionError(AssertionError):
@@ -249,6 +261,49 @@ def check_compress_doc(doc: dict, label: str) -> None:
           f"int8 linreg loss ratio {acc['int8_final_loss_ratio']}")
 
 
+def check_sweep_doc(doc: dict, label: str) -> None:
+    """Sweep-engine evidence: exact cost-model columns, batched ≥ threshold
+    over the per-seed loop, slice equivalence actually checked."""
+    rows = doc.get("rows", [])
+    _require(bool(rows), f"{label}: no benchmark rows")
+    for row in rows:
+        missing = REQUIRED_SWEEP - set(row)
+        _require(not missing, f"{label}: row missing {missing}: {row}")
+        _require(row["us_per_call"] > 0, f"{label}: non-positive time {row}")
+        model = analysis.sweep_cost_model(
+            r_runs=row["r_runs"], n_agents=row["n_agents"], d=row["d"],
+            t_steps=row["t_steps"], h=row["h"], param_bytes=4)
+        for col in ("state_bytes", "step_stream_bytes", "dispatches_loop",
+                    "dispatches_sweep"):
+            _require(row[col] == model[col],
+                     f"{label}: R={row['r_runs']} {col} drifted: "
+                     f"row={row[col]} cost-model={model[col]}")
+        _require(row["speedup"] > SWEEP_SMOKE_MARGIN,
+                 f"{label}: batched sweep no longer beats the per-seed "
+                 f"loop at R={row['r_runs']}: speedup {row['speedup']} <= "
+                 f"{SWEEP_SMOKE_MARGIN}")
+    acc = doc["acceptance"]
+    _require(bool(acc["equivalence_checked_vs_flat"]),
+             f"{label}: sweep-vs-flat slice equivalence check vanished")
+    _require(acc["max_slice_err"] is not None
+             and acc["max_slice_err"] <= 1e-5,
+             f"{label}: sweep slice error {acc['max_slice_err']} > 1e-5")
+    if not doc.get("smoke"):
+        _require(acc["speedup_at_fig4_seeds"] >= SWEEP_ACCEPT_SPEEDUP,
+                 f"{label}: committed baseline speedup at fig4 seeds "
+                 f"{acc['speedup_at_fig4_seeds']} < {SWEEP_ACCEPT_SPEEDUP}")
+    print(f"[guard] {label}: {len(rows)} rows OK, speedups "
+          f"{[r['speedup'] for r in rows]}, max slice err "
+          f"{acc['max_slice_err']}")
+
+
+def check_sweep_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
+    """The fig4-seed-count row (the acceptance shape) must survive."""
+    fig4_r = baseline["acceptance"]["fig4_shape"]["seeds"]
+    _require(any(r["r_runs"] == fig4_r for r in fresh["rows"]),
+             f"fresh sweep run dropped the fig4-shape row (R={fig4_r})")
+
+
 def check_compress_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
     base = {r["compress"] for r in baseline["rows"]
             if r.get("section") == "halo"}
@@ -277,6 +332,10 @@ def main() -> None:
                    help="optional: committed BENCH_compress.json baseline")
     p.add_argument("--fresh-compress", default=None,
                    help="fresh BENCH_compress[.smoke].json to check")
+    p.add_argument("--baseline-sweep", default=None,
+                   help="optional: committed BENCH_sweep.json baseline")
+    p.add_argument("--fresh-sweep", default=None,
+                   help="fresh BENCH_sweep[.smoke].json to check")
     args = p.parse_args()
 
     with open(args.baseline_gossip) as f:
@@ -303,6 +362,15 @@ def main() -> None:
             check_compress_doc(baseline_compress, "baseline BENCH_compress")
             check_compress_baseline_vs_fresh(baseline_compress,
                                              fresh_compress)
+    if args.fresh_sweep:
+        with open(args.fresh_sweep) as f:
+            fresh_sweep = json.load(f)
+        check_sweep_doc(fresh_sweep, "fresh BENCH_sweep")
+        if args.baseline_sweep:
+            with open(args.baseline_sweep) as f:
+                baseline_sweep = json.load(f)
+            check_sweep_doc(baseline_sweep, "baseline BENCH_sweep")
+            check_sweep_baseline_vs_fresh(baseline_sweep, fresh_sweep)
     print("[guard] all perf-regression checks passed")
 
 

@@ -6,13 +6,17 @@ minibatch m=1, K=2 partial participation, T=5000 iterations, stepsize
 (Fig. 3), H ∈ {10, 100}, Laplacian (best-constant) mixing weights,
 averaged over 10 independent runs.
 
-Whole sweep runs on the **fused round executor**
-(core.feddec.make_feddec_round): an outer ``lax.scan`` over server-round
-windows wraps the fused H-step inner scan, with the per-step suboptimality
-f(z̄^t) − f* recorded on-device via the executor's ``metrics_fn`` hook — the
-entire (graph, H, alg) cell is still one jitted computation, vmapped over the
-10 seeds; float64 (c_20 = 2^20 squares into ~1e12, f32 would lose the
-suboptimality signal).
+The whole figure is **one compiled program on the batched sweep engine**
+(repro.core.sweep): the full (graph × H × alg × seed) lattice — 80 runs at
+the paper's settings — is stacked into a single (R, n, d) buffer and scanned
+through all T steps in one ``jax.jit``, with per-run mixing matrices,
+per-run H (the heterogeneous server-round period lives in the step body),
+per-run Theorem-1 stepsizes, and the per-step suboptimality f(z̄^t) − f*
+recorded on-device.  Each run's key chain reproduces the pre-sweep per-cell
+driver exactly (per-round ``split(key, 3)`` re-keying via the executor's
+``per_step_keys`` path), so run slices — and the emitted CSV — are
+unchanged from the per-cell drivers'; float64 (c_20 = 2^20 squares into
+~1e12, f32 would lose the suboptimality signal).
 
 Validated claims (asserted when run under pytest / run.py):
   C1  FedDec reaches lower suboptimality than FedAvg in all four settings;
@@ -22,64 +26,37 @@ Validated claims (asserted when run under pytest / run.py):
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import feddec, theory, topology as topo
+from repro.core import feddec, flat as flat_lib, sweep, topology as topo
 from repro.core.fedavg import FedAvgConfig
 from repro.core.mixing import MixingDistribution
 from repro.data import linreg
 
 N, D, M_ROWS, T, K, M_BATCH = 20, 25, 10, 5000, 2, 1
 SEEDS = 10
+H_VALUES = (10, 100)
 
 
-def _make_runner(problem: linreg.LinRegProblem, fcfg: feddec.FedDecConfig,
-                 t_steps: int, record_every: int):
-    lr = theory.paper_stepsize(
-        problem.mu, theory.gamma(problem.l_smooth, problem.mu, fcfg.h))
-    grad_fn = linreg.make_grad_fn(problem.m_rows)
-    xs = jnp.asarray(problem.x)
-    ys = jnp.asarray(problem.y)
-    f_star = problem.f_star
-
-    def subopt(params):
-        zbar = params.mean(axis=0)
-        r = jnp.einsum("imd,d->im", xs, zbar) - ys
-        return jnp.mean(jnp.sum(r * r, axis=-1)) / problem.m_rows - f_star
-
-    # the fused executor: one inner lax.scan per server-round window of H
-    # steps, suboptimality recorded per step on-device via metrics_fn
-    round_fn = feddec.make_feddec_round(
-        fcfg, grad_fn, lr, jit=False, donate=False,
-        metrics_fn=lambda s: {"subopt": subopt(s.params)})
-    h = fcfg.h
-    assert t_steps % h == 0, (t_steps, h)
-    n_rounds = t_steps // h
-
-    @jax.jit
-    def run(seed_key):
-        state = feddec.init_state(jnp.zeros(D, xs.dtype), fcfg.n_agents)
-
-        def body(carry, _):
-            state, key = carry
-            key, kb, ks = jax.random.split(key, 3)
-            idx = jax.random.randint(kb, (h, N, M_BATCH), 0, M_ROWS)
-            xb = jnp.take_along_axis(xs[None], idx[..., None], axis=2)
-            yb = jnp.take_along_axis(ys[None], idx, axis=2)
-            state, metrics = round_fn(state, (xb, yb), ks)
-            return (state, key), metrics["subopt"]
-
-        (final_state, _), sub = jax.lax.scan(body, (state, seed_key),
-                                             jnp.arange(n_rounds))
-        sub = sub.reshape(-1)  # (n_rounds, H) -> (t_steps,)
-        return sub[::record_every], subopt(final_state.params)
-
-    return run
+def _lattice(problem, graphs: dict, seeds: int):
+    """The figure's (graph × H × alg) cells × seeds, in CSV row order."""
+    cells, cfgs, gammas = [], [], []
+    for gname, graph in graphs.items():
+        for h in H_VALUES:
+            for alg in ("feddec", "fedavg"):
+                cells.append((gname, h, alg))
+                if alg == "feddec":
+                    fcfg = feddec.FedDecConfig(
+                        mixing=MixingDistribution(graph, scheme="laplacian"),
+                        h=h, k=K)
+                else:
+                    fcfg = FedAvgConfig(N, h=h, k=K)
+                cfgs.extend([fcfg] * seeds)
+                gammas.extend([common.paper_gamma(problem, h)] * seeds)
+    return cells, cfgs, np.asarray(gammas)
 
 
 def run_experiment(t_steps: int = T, seeds: int = SEEDS,
@@ -88,23 +65,52 @@ def run_experiment(t_steps: int = T, seeds: int = SEEDS,
     problem = linreg.make_problem(n=N, m_rows=M_ROWS, d=D, seed=0)
     graphs = {"sparse_r0.35": topo.geographic_graph(N, 0.35, seed=1),
               "dense_r0.50": topo.geographic_graph(N, 0.50, seed=1)}
+    cells, cfgs, gammas = _lattice(problem, graphs, seeds)
+    plan = sweep.make_sweep_plan(cfgs)
+    spec = flat_lib.make_flat_spec(jnp.zeros(D, jnp.asarray(problem.x).dtype))
+    grad_fn = linreg.make_grad_fn(problem.m_rows)
+    lr_fn = lambda t: 2.0 / (problem.mu * (gammas + t))  # noqa: E731
+
+    # every cell re-keys each H-step server window from the same per-seed
+    # chain (key, kb, ks = split(key, 3)) the per-cell drivers used; runs
+    # with larger H consume a prefix of the same chain
+    assert all(t_steps % h == 0 for h in H_VALUES), (t_steps, H_VALUES)
+    seed_keys = jax.random.split(jax.random.key(42), seeds)
+    run_seed_keys = jnp.concatenate([seed_keys] * len(cells))
+    max_rounds = t_steps // min(H_VALUES)
+    kbs, kss = common.round_key_chains(run_seed_keys, max_rounds)
+    step_keys = common.per_step_keys(kss, plan.h, t_steps)
+    idx_all = jnp.asarray(common.lattice_minibatch_indices(
+        kbs, plan.h, t_steps, N, M_BATCH, M_ROWS))
+
+    gather = common.sweep_minibatch_gather(problem)
+    subopt = common.sweep_suboptimality(problem)
+    step = sweep.make_sweep_feddec_step(plan, spec, grad_fn, lr_fn,
+                                        jit=False)
+
+    @jax.jit
+    def run_all():
+        state0 = sweep.init_sweep_state(plan, spec, jnp.zeros(D))
+
+        def body(state, xs):
+            idx_t, keys_t = xs
+            state, _ = step(state, gather(idx_t), keys_t)
+            return state, subopt(state.flat)
+
+        final_state, sub = jax.lax.scan(body, state0, (idx_all, step_keys))
+        return sub[::record_every], subopt(final_state.flat)
+
+    sub_rec, last = run_all()  # one compile, one device program
+    sub_rec = np.asarray(sub_rec)                       # (T/rec, R)
+    last = np.asarray(last)                             # (R,)
+
     rows, finals = [], {}
-    for gname, graph in graphs.items():
-        for h in (10, 100):
-            for alg in ("feddec", "fedavg"):
-                if alg == "feddec":
-                    fcfg = feddec.FedDecConfig(
-                        mixing=MixingDistribution(graph, scheme="laplacian"),
-                        h=h, k=K)
-                else:
-                    fcfg = FedAvgConfig(N, h=h, k=K)
-                runner = _make_runner(problem, fcfg, t_steps, record_every)
-                keys = jax.random.split(jax.random.key(42), seeds)
-                curves, last = jax.vmap(runner)(keys)
-                mean_curve = np.asarray(curves.mean(axis=0))
-                finals[(gname, h, alg)] = float(np.asarray(last).mean())
-                for i, v in enumerate(mean_curve):
-                    rows.append((gname, h, alg, i * record_every, float(v)))
+    for c, (gname, h, alg) in enumerate(cells):
+        cols = slice(c * seeds, (c + 1) * seeds)
+        mean_curve = sub_rec[:, cols].mean(axis=1)
+        finals[(gname, h, alg)] = float(last[cols].mean())
+        for i, v in enumerate(mean_curve):
+            rows.append((gname, h, alg, i * record_every, float(v)))
     return rows, finals
 
 
@@ -148,4 +154,8 @@ def main(t_steps: int = T, seeds: int = SEEDS) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    p = common.figure_arg_parser(__doc__, t_steps=T, seeds=SEEDS)
+    args = p.parse_args()
+    if args.smoke:
+        args.t_steps, args.seeds = 1500, 3
+    main(t_steps=args.t_steps, seeds=args.seeds)

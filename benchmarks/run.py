@@ -14,6 +14,8 @@ commentary) and writes full curves/tables under results/benchmarks/.
                      psum_scatter vs ppermute halo, 1–8 host devices)
   bench_compress   — compressed gossip (EF codecs, compressed halo bytes,
                      fused quant/dequant-mix kernels, linreg convergence)
+  bench_sweep      — batched sweep engine vs the per-seed Python loop
+                     (one-compile lattice execution at fig4 shapes)
   ablation_server  — beyond-paper: §5 conjecture (server vs pure gossip)
   roofline         — aggregates results/dryrun into the §Roofline table
 """
@@ -30,8 +32,8 @@ def main() -> None:
 
     from benchmarks import (ablation_server, bench_compress, bench_fused,
                             bench_gossip, bench_kernels, bench_sharded,
-                            fig2_alpha, fig4_convergence, roofline,
-                            table1_lambda2, theory_check)
+                            bench_sweep, fig2_alpha, fig4_convergence,
+                            roofline, table1_lambda2, theory_check)
     jobs = {
         "table1_lambda2": lambda: table1_lambda2.main(
             seeds=3 if args.quick else 10),
@@ -45,6 +47,7 @@ def main() -> None:
         "bench_gossip": lambda: bench_gossip.main(smoke=args.quick),
         "bench_sharded": lambda: bench_sharded.main(smoke=args.quick),
         "bench_compress": lambda: bench_compress.main(smoke=args.quick),
+        "bench_sweep": lambda: bench_sweep.main(smoke=args.quick),
         "ablation_server": lambda: ablation_server.main(
             t_steps=1500 if args.quick else 3000,
             seeds=3 if args.quick else 6),

@@ -3,6 +3,15 @@
 All constants are computed from the problem instance (L, μ, Γ exactly; G²
 and σ̄² estimated by sampling gradients along the trajectory, then inflated
 2× as a safe upper bound, since Assumption 1.3 requires a uniform bound).
+
+The trajectory runs on the batched sweep engine (repro.core.sweep, R=1 —
+the degenerate lattice): the pre-sweep driver dispatched one fused round
+per server window (T/H dispatches) with host round-trips in between; here
+the whole T-step trajectory is **one compiled scan** that records the
+per-step suboptimality *and* the per-step iterate on-device, and the G²/σ̄²
+estimation replays against the recorded iterates afterwards on the host —
+same estimator, same key chain, zero mid-run dispatches.
+
 Checks:
 
   B1  E[f(z̄^t)] − f(z*) ≤ bound(t) for all recorded t;
@@ -19,52 +28,76 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import feddec, theory, topology as topo
+from repro.core import feddec, flat as flat_lib, sweep, theory, \
+    topology as topo
 from repro.core.mixing import MixingDistribution
 from repro.data import linreg
 
 N, T, H, K = 20, 3000, 10, 2
 
 
-def run_experiment():
+def run_experiment(t_steps: int = T):
     jax.config.update("jax_enable_x64", True)
     problem = linreg.make_problem(n=N, seed=0)
     graph = topo.geographic_graph(N, 0.5, seed=1)
     md = MixingDistribution(graph, scheme="laplacian")
     fcfg = feddec.FedDecConfig(mixing=md, h=H, k=K)
-    gam = theory.gamma(problem.l_smooth, problem.mu, H)
-    lr = theory.paper_stepsize(problem.mu, gam)
+    lr = common.paper_lr_fn(problem, H)
     grad_fn = linreg.make_grad_fn(problem.m_rows)
-    # fused executor: H steps per dispatch, per-step f(z̄^t) − f* recorded
-    # on-device via metrics_fn
-    round_fn = feddec.make_feddec_round(
-        fcfg, grad_fn, lr, donate=False,
-        metrics_fn=lambda s: {"subopt": problem.suboptimality(s.params)})
-
-    state = feddec.init_state(jnp.zeros(problem.d), N)
-    key = jax.random.key(0)
-    sub, g2_max, sig2 = [], 0.0, []
     xs, ys = jnp.asarray(problem.x), jnp.asarray(problem.y)
-    assert T % H == 0, (T, H)
-    for r in range(T // H):
-        # estimate G² and σ̄² along the trajectory (every 50 steps)
+    assert t_steps % H == 0, (t_steps, H)
+    n_rounds = t_steps // H
+
+    # replay the pre-sweep driver's host key chain: per round, one optional
+    # estimation-batch split (every 50 steps) then the round's batch split
+    key = jax.random.key(0)
+    ke_rounds: dict[int, jax.Array] = {}
+    kb_list = []
+    for r in range(n_rounds):
         if (r * H) % 50 == 0:
             key, ke = jax.random.split(key)
-            batch = linreg.sample_minibatch(problem, ke, m=1)
-            zb = state.params
-            gfull = 2 * jnp.einsum("imd,im->id",
-                                   xs, jnp.einsum("imd,id->im", xs, zb) - ys
-                                   ) / problem.m_rows
-            gb = jax.vmap(lambda z, b_: grad_fn(z, b_, None)[1])(
-                zb, (batch[0], batch[1]))
-            g2_max = max(g2_max, float((gb ** 2).sum(-1).max()))
-            sig2.append(float(((gb - gfull) ** 2).sum(-1).mean()))
+            ke_rounds[r] = ke
         key, kb = jax.random.split(key)
-        batches = jax.vmap(
-            lambda k: linreg.sample_minibatch(problem, k, m=1))(
-            jax.random.split(kb, H))
-        state, metrics = round_fn(state, batches, jax.random.key(1))
-        sub.extend(np.asarray(metrics["subopt"]).tolist())
+        kb_list.append(kb)
+    # per-step minibatch keys: round r contributes split(kb_r, H)
+    step_batch_keys = jnp.concatenate(
+        [jax.random.split(kb, H) for kb in kb_list])
+
+    plan = sweep.make_sweep_plan([fcfg])
+    spec = flat_lib.make_flat_spec(jnp.zeros(problem.d, xs.dtype))
+    step = sweep.make_sweep_feddec_step(plan, spec, grad_fn, lr, jit=False)
+    run_keys = jnp.stack([jax.random.key(1)])  # the driver's constant key
+
+    @jax.jit
+    def run_all():
+        state0 = sweep.init_sweep_state(plan, spec, jnp.zeros(problem.d))
+
+        def body(state, bk):
+            xb, yb = linreg.sample_minibatch(problem, bk, m=1)
+            state, _ = step(state, (xb[None], yb[None]), run_keys)
+            return state, (problem.suboptimality(state.flat[0]),
+                           state.flat[0])
+
+        _, (sub, z_rec) = jax.lax.scan(body, state0, step_batch_keys)
+        return sub, z_rec
+
+    sub, z_rec = run_all()  # one compile, one device program
+    sub, z_rec = np.asarray(sub), np.asarray(z_rec)
+
+    # G²/σ̄² estimation along the recorded trajectory (every 50 steps),
+    # identical to the pre-sweep driver's: zb is the pre-round iterate
+    g2_max, sig2 = 0.0, []
+    z0 = np.zeros((N, problem.d))
+    for r, ke in ke_rounds.items():
+        zb = jnp.asarray(z0 if r == 0 else z_rec[r * H - 1])
+        batch = linreg.sample_minibatch(problem, ke, m=1)
+        gfull = 2 * jnp.einsum("imd,im->id",
+                               xs, jnp.einsum("imd,id->im", xs, zb) - ys
+                               ) / problem.m_rows
+        gb = jax.vmap(lambda z, b_: grad_fn(z, b_, None)[1])(
+            zb, (batch[0], batch[1]))
+        g2_max = max(g2_max, float((gb ** 2).sum(-1).max()))
+        sig2.append(float(((gb - gfull) ** 2).sum(-1).mean()))
 
     lam_hat = md.lambda2_hat()
     inp = theory.TheoremInputs(
@@ -73,13 +106,13 @@ def run_experiment():
         gamma_heterogeneity=problem.gamma_heterogeneity, n=N, k=K, h=H,
         lambda2_hat=lam_hat,
         dist0_sq=float((problem.z_star ** 2).sum()))
-    bound = theory.theorem1_curve(inp, T)
-    return np.asarray(sub), bound, inp
+    bound = theory.theorem1_curve(inp, t_steps)
+    return sub, bound, inp
 
 
-def main() -> None:
+def main(t_steps: int = T) -> None:
     t0 = time.perf_counter()
-    sub, bound, inp = run_experiment()
+    sub, bound, inp = run_experiment(t_steps)
     ts = np.arange(1, len(sub) + 1)
     rows = list(zip(ts[::25], sub[::25], bound[::25]))
     common.write_csv("theory_check.csv", ["t", "empirical", "bound"], rows)
@@ -105,4 +138,6 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    p = common.figure_arg_parser(__doc__, t_steps=T)
+    args = p.parse_args()
+    main(t_steps=1500 if args.smoke else args.t_steps)

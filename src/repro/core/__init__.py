@@ -10,12 +10,14 @@ Public surface:
                (the single-buffer hot loop: Pallas / sparse gossip)
   sharded    — the flat buffer block-sharded over a device mesh axis
                (shard_map: psum_scatter dense gossip, ppermute halo)
+  sweep      — R independent runs batched into one (R, n_agents, D)
+               program (the seed × H × topology lattice executor)
   fedavg     — the FedAvg baseline (degenerate 𝒲 = {I})
   theory     — Theorem 1's constants and bound curve, executable
 """
 
 from repro.core import (fedavg, feddec, flat, gossip, mixing, server, sharded,
-                        theory, topology)
+                        sweep, theory, topology)
 from repro.core.feddec import (FedDecConfig, FedState, init_state,
                                make_feddec_round, make_feddec_step)
 from repro.core.fedavg import FedAvgConfig, make_fedavg_round, make_fedavg_step
@@ -25,10 +27,15 @@ from repro.core.flat import (FlatFedState, FlatSpec, init_flat_state,
 from repro.core.mixing import MixingDistribution, identity_mixing
 from repro.core.sharded import (make_sharded_feddec_round,
                                 make_sharded_feddec_step, shard_flat_state)
+from repro.core.sweep import (SweepFedState, SweepPlan, init_sweep_state,
+                              make_sweep_feddec_round, make_sweep_feddec_step,
+                              make_sweep_plan)
 
 __all__ = [
     "topology", "mixing", "gossip", "server", "feddec", "flat", "sharded",
-    "fedavg", "theory",
+    "sweep", "fedavg", "theory",
+    "SweepPlan", "SweepFedState", "make_sweep_plan", "init_sweep_state",
+    "make_sweep_feddec_step", "make_sweep_feddec_round",
     "FedDecConfig", "FedState", "init_state", "make_feddec_step",
     "make_feddec_round",
     "FlatSpec", "FlatFedState", "init_flat_state", "make_flat_feddec_step",

@@ -40,9 +40,12 @@ from repro.core import topology as topo
 __all__ = [
     "gossip_mix_dense",
     "gossip_mix_permute",
+    "lattice_max_degree",
     "make_permute_gossip",
     "make_sparse_gossip",
+    "make_sparse_gossip_batched",
     "make_sparse_gossip_tree",
+    "stacked_ell_tables",
 ]
 
 
@@ -136,6 +139,79 @@ def make_sparse_gossip(graph: topo.Graph):
 
 if make_sparse_gossip.__doc__:  # stripped under python -OO
     make_sparse_gossip.__doc__ %= ELL_MAX_DEG
+
+
+def lattice_max_degree(graphs) -> int:
+    """The max degree over an R-run graph lattice — the shared ELL width
+    (and the TPU edge-blocked-kernel eligibility bound)."""
+    return max((int(g.degrees.max()) if g.n and g.num_edges else 0)
+               for g in graphs)
+
+
+def stacked_ell_tables(graphs, n_rows: int | None = None):
+    """Per-run ELL neighbour tables for a topology lattice, stacked.
+
+    Every run's neighbour lists are padded to the lattice-wide max degree;
+    padded slots (and rows beyond each graph's n, e.g. sublane padding)
+    point at the row's own index so a weight of 0 makes them exact +0.0
+    contributions.  Shared by the XLA stacked-ELL mix and the batched
+    Pallas kernel wrapper so the two paths can never drift.
+
+    Returns:
+      (nbr, valid, max_deg): nbr (R, n_rows, max(max_deg, 1)) int32 and
+      valid (same shape) bool marking real edges.
+    """
+    n = graphs[0].n
+    if n_rows is None:
+        n_rows = n
+    max_deg = max(lattice_max_degree(graphs), 1)
+    nbr = np.tile(np.arange(n_rows, dtype=np.int32)[None, :, None],
+                  (len(graphs), 1, max_deg))
+    valid = np.zeros((len(graphs), n_rows, max_deg), dtype=bool)
+    for r, g in enumerate(graphs):
+        adj = np.asarray(g.adjacency)
+        for i in range(n):
+            js = np.flatnonzero(adj[i])
+            nbr[r, i, :len(js)] = js
+            valid[r, i, :len(js)] = True
+    return nbr, valid, max_deg
+
+
+def make_sparse_gossip_batched(graphs):
+    """Neighbour-only gossip over an R-run topology lattice (sweep engine).
+
+    The stacked-ELL generalisation of :func:`make_sparse_gossip`: each run's
+    neighbour list is padded to the lattice-wide max degree (padding points
+    at the row's own agent with weight 0 — a +0.0 contribution, so every
+    run's slice is bit-identical to its own single-run ELL mix), and the mix
+    is max_deg fused gather-multiply-add passes over the whole (R, n, D)
+    buffer.  Runs whose graph has no edges (FedAvg members of a mixed
+    lattice, given W = I) reduce exactly to ``y = x``.  Lattices whose max
+    degree exceeds the single-run CSR threshold still use the stacked ELL —
+    the summation order then differs from the single-run CSR path (same
+    math, 1e-5 equivalence instead of bit-exactness).
+
+    Returns:
+      mix(w, x) -> y for w (R, n, n), x (R, n, ...).
+    """
+    nbr, valid, max_deg = stacked_ell_tables(graphs)
+    nbr_j = jnp.asarray(nbr)
+    pad_j = jnp.asarray(~valid)
+
+    def bcast(v, ndim):
+        return v[(...,) + (None,) * (ndim - 2)]
+
+    def mix(w: jax.Array, x: jax.Array) -> jax.Array:
+        wd = w.astype(x.dtype)
+        wv = jnp.where(pad_j, 0, jnp.take_along_axis(wd, nbr_j, axis=2))
+        y = bcast(jnp.diagonal(wd, axis1=1, axis2=2), x.ndim) * x
+        for k in range(max_deg):
+            gathered = jnp.take_along_axis(
+                x, nbr_j[:, :, k][(...,) + (None,) * (x.ndim - 2)], axis=1)
+            y = y + bcast(wv[:, :, k], x.ndim) * gathered
+        return y
+
+    return mix
 
 
 def make_sparse_gossip_tree(graph: topo.Graph):

@@ -24,7 +24,8 @@ import numpy as np
 
 from repro.core import topology as topo
 
-__all__ = ["MixingDistribution", "identity_mixing"]
+__all__ = ["MixingDistribution", "identity_mixing",
+           "sample_metropolis_traced"]
 
 
 @jax.tree_util.register_static
@@ -99,6 +100,18 @@ class MixingDistribution:
 def _sample_metropolis(key: jax.Array, adjacency: jax.Array, p_fail: float,
                        dtype) -> jax.Array:
     """Metropolis weights on the Bernoulli-surviving subgraph (traceable)."""
+    return sample_metropolis_traced(key, adjacency, p_fail, dtype)
+
+
+def sample_metropolis_traced(key: jax.Array, adjacency: jax.Array,
+                             p_fail, dtype) -> jax.Array:
+    """The un-jitted sampling body: ``p_fail`` may be a traced array.
+
+    The sweep engine (repro.core.sweep) vmaps this over per-run
+    ``(adjacency, p_fail)`` stacks; the ops are identical to the jitted
+    single-run path, so per-run draws stay bit-identical to
+    :meth:`MixingDistribution.sample` with the same key.
+    """
     n = adjacency.shape[0]
     u = jax.random.uniform(key, (n, n))
     u = jnp.triu(u, k=1)

@@ -1,0 +1,456 @@
+"""Batched sweep engine: R independent FedDec runs in one compiled program.
+
+The paper's headline results are *sweeps* — seeds × local-step counts H ×
+graph connectivity (Fig. 2/4, Table 1) — exactly the regime where FedDec's
+O(H) vs O(H²) advantage shows up.  Driving the flat engine once per run
+leaves the device idle between tiny dispatches: a (n=20, D=25) linreg step
+is microseconds of compute behind a fixed dispatch + sync tax, so a
+10-seed × 2-graph × 2-H × 2-alg lattice pays that tax 80 separate times per
+step window.  This module stacks the whole experiment lattice into a single
+``(R, n_agents, D)`` buffer and runs **all R trajectories inside one fused
+``lax.scan``** — one compile, one device program per figure.
+
+Design:
+
+  * **Per-run randomness is a fold, not a re-derivation.**  Each run r
+    carries its own base key (the exact key the single-run engine would
+    receive); the step body vmaps ``split(fold_in(key_r, t), 3)`` over the
+    run axis.  PRNG ops are elementwise in the key data, so run r's
+    key_w/key_grad/key_server streams — and with them its whole trajectory —
+    are **bit-identical** to the single-run flat engine
+    (tests/test_sweep_engine.py asserts slice equality at 1e-5, observed
+    exact on linreg for dense/pallas/sparse/none × optimizers × server
+    on/off).
+  * **Per-run mixing matrices.**  The lattice stacks one (n, n) W per run:
+    fixed Ws are precomputed host-side; runs with link failures
+    (p_fail > 0) resample Metropolis weights per scanned step from their
+    own adjacency (``mixing.sample_metropolis_traced`` vmapped with per-run
+    p_fail), so time-varying W schedules differ per run.  FedAvg members of
+    a mixed lattice (``gossip_impl='none'``) mix with W = I — exactly
+    ``y = x`` under every batched impl.
+  * **Batched gossip without a dense fallback.**  ``gossip_impl='pallas'``
+    runs the batched streaming kernel (kernels/gossip_mix.py — run axis as
+    the leading grid dimension, W VMEM-resident per run);  ``'sparse'``
+    runs the stacked-ELL mix (per-run neighbour tables padded to the
+    lattice max degree; Pallas edge-blocked variant on TPU).
+  * **Heterogeneous horizons.**  Per-run H lives in a (R,) array (the
+    server-round condition is ``(t+1) % h_r == 0``), and per-run step
+    budgets ``t_steps`` mask completed runs inside the scan: a run whose
+    H·K budget is exhausted keeps its state frozen (bit-preserved) while
+    the rest of the lattice finishes — short runs stay in the batch.
+
+Executors mirror repro.core.flat's: ``make_sweep_feddec_step`` /
+``make_sweep_feddec_round`` with the same (state, batches, keys) contract,
+except every array gains a leading run axis and ``keys`` is a (R,) key
+array (or (T, R) with ``per_step_keys=True``, for drivers that re-key each
+server window — benchmarks/fig4_convergence.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress as compress_lib
+from repro.core import gossip as gossip_lib
+from repro.core import mixing as mixing_lib
+from repro.core import server as server_lib
+from repro.core.feddec import FedDecConfig
+from repro.core.flat import FlatFedState, FlatSpec
+
+__all__ = ["SweepPlan", "SweepFedState", "make_sweep_plan",
+           "init_sweep_state", "stack_flat_states", "slice_run",
+           "resolve_sweep_gossip", "make_sweep_w_sampler",
+           "make_sweep_feddec_step", "make_sweep_feddec_round"]
+
+GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
+LrFn = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SweepPlan:
+    """Static description of an R-run lattice (host-side, closed over).
+
+    Built by :func:`make_sweep_plan` from one FedDecConfig per run.  The
+    axes that may vary per run: topology / mixing scheme / p_fail (stacked
+    into ``w_fixed`` / ``adjacency``), H (``h``), gossip_impl='none'
+    (FedAvg members → ``none_mask``), and the step budget ``t_steps``.
+    Shared across the lattice (validated): n_agents, K, server_enabled,
+    the non-'none' gossip impl, gossip_compress, and the mixing dtype.
+    """
+
+    configs: tuple[FedDecConfig, ...]
+    n_agents: int
+    k: int
+    server_enabled: bool
+    gossip_impl: str          # the shared non-'none' impl ('none' if all)
+    gossip_compress: str
+    h: np.ndarray             # (R,) int32 per-run server period
+    w_fixed: np.ndarray       # (R, n, n) f64 fixed Ws (I for 'none' runs)
+    adjacency: np.ndarray     # (R, n, n) bool (zeros for fixed/'none' runs)
+    p_fail: np.ndarray        # (R,) f32
+    stochastic: np.ndarray    # (R,) bool — runs that resample W per step
+    none_mask: np.ndarray     # (R,) bool — runs mixing with W = I
+    w_dtype: Any
+    t_steps: np.ndarray | None = None   # (R,) int32 per-run step budgets
+
+    @property
+    def r_runs(self) -> int:
+        return len(self.configs)
+
+    @property
+    def graphs(self) -> tuple:
+        """Per-run mixing-support graphs ('none' runs: their own graph —
+        identity mixing's graph has no edges, so ELL rows are empty)."""
+        return tuple(c.mixing.graph for c in self.configs)
+
+
+def make_sweep_plan(configs, t_steps=None) -> SweepPlan:
+    """Validate a per-run config lattice and stack its varying axes.
+
+    Args:
+      configs: one FedDecConfig per run (R total).  ``gossip_impl`` may mix
+        'none' (FedAvg) with exactly one other impl; everything the batched
+        step body cannot vary per run (n_agents, k, server_enabled,
+        gossip_compress, mixing dtype) must be shared.
+      t_steps: optional per-run step budgets (R ints).  Runs whose budget is
+        below the scan length finish early and are masked (state frozen).
+    """
+    configs = tuple(configs)
+    if not configs:
+        raise ValueError("sweep needs at least one run config")
+    n = configs[0].n_agents
+    k = configs[0].k
+    server_enabled = configs[0].server_enabled
+    compress = configs[0].gossip_compress
+    w_dtype = configs[0].mixing.dtype
+    for c in configs:
+        if c.n_agents != n:
+            raise ValueError(f"n_agents must be shared across the lattice: "
+                             f"{c.n_agents} != {n}")
+        if c.k != k:
+            raise ValueError(f"K must be shared across the lattice: "
+                             f"{c.k} != {k}")
+        if c.server_enabled != server_enabled:
+            raise ValueError("server_enabled must be shared across the "
+                             "lattice")
+        if c.gossip_compress != compress:
+            raise ValueError("gossip_compress must be shared across the "
+                             "lattice")
+        if c.mixing.dtype != w_dtype:
+            raise ValueError("mixing dtype must be shared across the "
+                             "lattice")
+    impls = {c.gossip_impl for c in configs} - {"none"}
+    if len(impls) > 1:
+        raise ValueError(f"a lattice may mix 'none' (FedAvg) with at most "
+                         f"one other gossip_impl, got {sorted(impls)}")
+    impl = impls.pop() if impls else "none"
+
+    r = len(configs)
+    h = np.asarray([c.h for c in configs], dtype=np.int32)
+    none_mask = np.asarray([c.gossip_impl == "none" for c in configs])
+    stochastic = np.asarray([c.mixing.p_fail > 0 and not nm
+                             for c, nm in zip(configs, none_mask)])
+    p_fail = np.asarray([c.mixing.p_fail for c in configs], dtype=np.float32)
+    w_fixed = np.zeros((r, n, n), dtype=np.float64)
+    adjacency = np.zeros((r, n, n), dtype=bool)
+    for i, c in enumerate(configs):
+        if none_mask[i]:
+            w_fixed[i] = np.eye(n)
+        elif stochastic[i]:
+            adjacency[i] = np.asarray(c.mixing.graph.adjacency)
+        else:
+            w_fixed[i] = c.mixing.fixed_w
+    if t_steps is not None:
+        t_steps = np.asarray(t_steps, dtype=np.int32)
+        if t_steps.shape != (r,):
+            raise ValueError(f"t_steps must be one budget per run, got "
+                             f"shape {t_steps.shape} for {r} runs")
+    return SweepPlan(configs=configs, n_agents=n, k=k,
+                     server_enabled=server_enabled, gossip_impl=impl,
+                     gossip_compress=compress, h=h, w_fixed=w_fixed,
+                     adjacency=adjacency, p_fail=p_fail,
+                     stochastic=stochastic, none_mask=none_mask,
+                     w_dtype=w_dtype, t_steps=t_steps)
+
+
+# ---------------------------------------------------------------------------
+# Batched state
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SweepFedState:
+    """The lattice's carried state: run r's slice is that run's
+    FlatFedState (``flat[r, i]`` is run r's x_i / z_i ∈ ℝ^D)."""
+
+    flat: jax.Array      # (R, n_agents, D)
+    step: jax.Array      # (R,) int32 per-run t (each starts at 1)
+    opt_state: Any = ()  # per-run flat optimizer buffers (leading R)
+    residual: Any = ()   # (R, n, D) compressed-gossip EF residual, or ()
+
+
+def init_sweep_state(plan: SweepPlan, spec: FlatSpec, params_single: Any,
+                     optimizer=None) -> SweepFedState:
+    """z_i^1 = z^1 for every agent of every run, in the batched layout."""
+    row = spec.ravel(params_single)
+    flat = jnp.tile(row[None, None], (plan.r_runs, plan.n_agents, 1))
+    opt_state = jax.vmap(optimizer.init)(flat) if optimizer is not None \
+        else ()
+    compress = plan.gossip_compress if plan.gossip_impl != "none" else "none"
+    residual = () if compress_lib.parse_compress(compress) is None else \
+        jnp.zeros((plan.r_runs, plan.n_agents, spec.d), spec.dtype)
+    return SweepFedState(flat=flat,
+                         step=jnp.ones((plan.r_runs,), jnp.int32),
+                         opt_state=opt_state, residual=residual)
+
+
+def stack_flat_states(states) -> SweepFedState:
+    """Stack per-run FlatFedStates (e.g. mid-training) into a SweepFedState."""
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *states)
+    return SweepFedState(flat=stacked.flat, step=stacked.step,
+                         opt_state=stacked.opt_state,
+                         residual=stacked.residual)
+
+
+def slice_run(state: SweepFedState, r: int) -> FlatFedState:
+    """Run r's slice as a single-run FlatFedState."""
+    take = lambda l: l[r]  # noqa: E731
+    return FlatFedState(flat=state.flat[r], step=state.step[r],
+                        opt_state=jax.tree.map(take, state.opt_state),
+                        residual=jax.tree.map(take, state.residual))
+
+
+# ---------------------------------------------------------------------------
+# Batched mixing-matrix sampling and gossip dispatch
+# ---------------------------------------------------------------------------
+
+
+def make_sweep_w_sampler(plan: SweepPlan):
+    """keys (R,) → (R, n, n) per-run W^t.
+
+    Fixed-W runs index the precomputed stack; stochastic runs resample
+    Metropolis weights on the Bernoulli-surviving subgraph from their own
+    (adjacency, p_fail) — the same ops as the single-run
+    ``MixingDistribution.sample``, vmapped, so per-run draws are
+    bit-identical for the same key.
+    """
+    w_fixed = jnp.asarray(plan.w_fixed, dtype=plan.w_dtype)
+    if not plan.stochastic.any():
+        return lambda keys: w_fixed
+    adj = jnp.asarray(plan.adjacency)
+    p_fail = jnp.asarray(plan.p_fail)
+    stoch = jnp.asarray(plan.stochastic)
+
+    def sample(keys: jax.Array) -> jax.Array:
+        ws = jax.vmap(
+            lambda kk, aa, pp: mixing_lib.sample_metropolis_traced(
+                kk, aa, pp, plan.w_dtype))(keys, adj, p_fail)
+        return jnp.where(stoch[:, None, None], ws, w_fixed)
+
+    return sample
+
+
+def resolve_sweep_gossip(plan: SweepPlan,
+                         block_d: int | None = None) -> Callable:
+    """gossip_impl → a whole-lattice (w (R,n,n), x (R,n,D)) -> (R,n,D) mix.
+
+    The batched mirror of ``flat.resolve_flat_gossip`` — same impl names,
+    one launch for all R runs:
+
+    'dense'  one batched einsum contraction;
+    'pallas' one kernels.ops.gossip_mix_batched call (run axis = leading
+             grid dim, per-run W VMEM-resident, cast fused);
+    'sparse' stacked-ELL neighbour mix over the per-run edge structures
+             (edge-blocked batched Pallas kernel on TPU, XLA gather off it);
+    'none'   identity (an all-FedAvg lattice).
+    """
+    impl = plan.gossip_impl
+    if impl == "none":
+        return lambda w, x: x
+    if impl == "dense":
+        def mix(w: jax.Array, x: jax.Array) -> jax.Array:
+            return jnp.einsum("rij,rjd->rid", w.astype(x.dtype), x,
+                              precision=jax.lax.Precision.HIGHEST)
+        return mix
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+        if block_d is None:
+            return kernel_ops.gossip_mix_batched
+        return lambda w, x: kernel_ops.gossip_mix_batched(w, x,
+                                                          block_d=block_d)
+    if impl == "sparse":
+        from repro.kernels import ops as kernel_ops
+        graphs = plan.graphs
+        max_deg = gossip_lib.lattice_max_degree(graphs)
+        if kernel_ops.on_tpu() and 0 < max_deg <= gossip_lib.ELL_MAX_DEG:
+            kw = {} if block_d is None else {"block_d": block_d}
+            return kernel_ops.make_sparse_gossip_batched_pallas(graphs, **kw)
+        return gossip_lib.make_sparse_gossip_batched(graphs)
+    raise ValueError(f"unknown gossip_impl {impl!r}")  # pragma: no cover
+
+
+# ---------------------------------------------------------------------------
+# The batched Algorithm-1 step body
+# ---------------------------------------------------------------------------
+
+
+def _build_sweep_step_body(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
+                           lr_fn: LrFn, optimizer, block_d=None):
+    """One batched step: every Algorithm-1 line as one whole-lattice op.
+
+    The run axis composes with the flat engine's whole-buffer layout: local
+    updates treat (R, n) as one flattened agent axis of R·n rows; gossip /
+    server ops act per run on the (R, n, D) buffer.  ``lr_fn`` receives the
+    (R,) per-run step counters — elementwise schedules (the paper's
+    η_t = 2/(μ(γ+t)), possibly with per-run γ arrays) vectorise unchanged.
+    """
+    r_runs, n = plan.r_runs, plan.n_agents
+    sample_w = make_sweep_w_sampler(plan)
+    gossip_fn = resolve_sweep_gossip(plan, block_d=block_d)
+    h_arr = jnp.asarray(plan.h)
+    t_max = None if plan.t_steps is None else jnp.asarray(plan.t_steps)
+    compressor = compress_lib.parse_compress(plan.gossip_compress) \
+        if plan.gossip_impl != "none" else None
+    # FedAvg members of a compressed lattice exchange nothing: bypass the
+    # codec so their trajectories (and frozen zero residuals) stay
+    # bit-identical to the single-run engine's uncompressed 'none' path
+    none3 = jnp.asarray(plan.none_mask)[:, None, None] \
+        if compressor is not None and plan.none_mask.any() else None
+
+    def step(state: SweepFedState, batch: Any, keys: jax.Array):
+        t = state.step                                  # (R,)
+        k3 = jax.vmap(lambda k, tt: jax.random.split(
+            jax.random.fold_in(k, tt), 3))(keys, t)
+        key_w, key_grad, key_server = k3[:, 0], k3[:, 1], k3[:, 2]
+        eta = jnp.broadcast_to(jnp.asarray(lr_fn(t)), (r_runs,))
+
+        # line 3: sample every run's W^t
+        w = sample_w(key_w)
+
+        # lines 4–5: tree view over the flattened (R·n) agent axis
+        flat3 = state.flat
+        params = spec.unflatten(flat3.reshape(r_runs * n, spec.d))
+        agent_keys = jax.vmap(lambda k: jax.random.split(k, n))(
+            key_grad).reshape(r_runs * n)
+        batch_rn = jax.tree.map(
+            lambda b: b.reshape((r_runs * n,) + b.shape[2:]), batch)
+        losses, grads = jax.vmap(grad_fn)(params, batch_rn, agent_keys)
+        g3 = spec.flatten(grads).reshape(r_runs, n, spec.d)
+        losses = losses.reshape(r_runs, n)
+        if optimizer is None:  # plain SGD: one pass over (R, n, D)
+            x_half = flat3 - eta[:, None, None].astype(spec.dtype) * g3
+            new_opt = state.opt_state
+        else:
+            x_half, new_opt = jax.vmap(optimizer.update)(
+                flat3, g3, state.opt_state, eta)
+
+        # line 6: gossip — one whole-lattice mixing op
+        if compressor is None:
+            x_next = gossip_fn(w, x_half)
+            new_res = state.residual
+        else:
+            key_c = jax.vmap(lambda k: jax.random.fold_in(k, 1))(key_w)
+            u = x_half + state.residual
+            if compressor.needs_key:
+                enc_keys = jax.vmap(lambda k: jax.random.split(k, n))(key_c)
+                payload = jax.vmap(compressor.encode)(enc_keys, u)
+            else:
+                payload = jax.vmap(
+                    lambda uu: compressor.encode(None, uu))(u)
+            s = jax.vmap(lambda p_: compressor.decode(p_, x_half.dtype,
+                                                      spec.d))(payload)
+            diag = jnp.diagonal(w, axis1=1, axis2=2) \
+                .astype(x_half.dtype)[:, :, None]
+            x_next = gossip_fn(w, s) + diag * (x_half - s)
+            new_res = u - s
+            if none3 is not None:
+                x_next = jnp.where(none3, x_half, x_next)
+                new_res = jnp.where(none3, state.residual, new_res)
+
+        # lines 7–12: per-run periodic server round ((t+1) % h_r == 0)
+        if plan.server_enabled:
+            counts = jax.vmap(
+                lambda k: server_lib.sample_participants(k, n, plan.k))(
+                key_server)
+            weights = server_lib.participant_weights(counts, plan.k)
+            z_all = jax.vmap(server_lib.aggregate_and_broadcast_flat)(
+                weights, x_next)
+            is_round = ((t + 1) % h_arr == 0)[:, None, None]
+            z_next = jnp.where(is_round, z_all, x_next)
+        else:
+            z_next = x_next
+
+        new_state = SweepFedState(flat=z_next, step=t + 1,
+                                  opt_state=new_opt, residual=new_res)
+        metrics = {"loss": jnp.mean(losses, axis=1), "eta": eta}
+        if t_max is not None:
+            # heterogeneous budgets: finished runs freeze (state preserved
+            # bitwise — every carried leaf has a leading run axis)
+            active = t <= t_max
+            def keep(new, old):
+                m = active.reshape((r_runs,) + (1,) * (new.ndim - 1))
+                return jnp.where(m, new, old)
+            new_state = jax.tree.map(keep, new_state, state)
+            metrics["active"] = active
+        return new_state, metrics
+
+    return step
+
+
+def make_sweep_feddec_step(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
+                           lr_fn: LrFn, optimizer=None, block_d=None,
+                           donate: bool = True, jit: bool = True):
+    """One-iteration batched executor: step(state, batch, keys) advances all
+    R runs by one Algorithm-1 step.  ``batch`` leaves are (R, n, ...);
+    ``keys`` is a (R,) key array (run r's key = the single-run engine's)."""
+    step = _build_sweep_step_body(plan, spec, grad_fn, lr_fn, optimizer,
+                                  block_d=block_d)
+    if not jit:
+        return step
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(step, donate_argnums=donate_argnums)
+
+
+def make_sweep_feddec_round(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
+                            lr_fn: LrFn, optimizer=None,
+                            metrics_fn: Callable[[SweepFedState], dict]
+                            | None = None,
+                            block_d=None, donate: bool = True,
+                            jit: bool = True, unroll: int = 1,
+                            per_step_keys: bool = False):
+    """The fused lattice executor: T steps × R runs per compiled call.
+
+    Same contract as ``flat.make_flat_feddec_round`` with a leading run
+    axis everywhere: ``batches`` leaves are (T, R, n, ...), metrics stack
+    to (T, R), and ``metrics_fn`` receives the post-step SweepFedState
+    (return (R,)-leading diagnostics).  ``per_step_keys=True`` makes
+    ``keys`` a (T, R) array scanned alongside the batches — step s of run r
+    folds ``keys[s, r]`` with the carried counter t, which lets a driver
+    reproduce a per-window re-keying scheme (fig4) inside one program.
+    With ``plan.t_steps`` set, runs past their budget are masked: their
+    carried state is bit-preserved while longer runs continue.
+    """
+    step = _build_sweep_step_body(plan, spec, grad_fn, lr_fn, optimizer,
+                                  block_d=block_d)
+
+    def round_fn(state: SweepFedState, batches: Any, keys: jax.Array):
+        def body(carry, xs):
+            batch, kk = xs if per_step_keys else (xs, keys)
+            new_state, metrics = step(carry, batch, kk)
+            if metrics_fn is not None:
+                metrics = {**metrics, **metrics_fn(new_state)}
+            return new_state, metrics
+
+        xs = (batches, keys) if per_step_keys else batches
+        return jax.lax.scan(body, state, xs, unroll=unroll)
+
+    if not jit:
+        return round_fn
+    donate_argnums = (0,) if donate else ()
+    return jax.jit(round_fn, donate_argnums=donate_argnums)

@@ -37,7 +37,9 @@ __all__ = [
     "max_degree_weights",
     "build_weights",
     "lambda2",
+    "lambda2_batched",
     "lambda2_hat_fixed",
+    "lambda2_hat_fixed_batched",
     "alpha_from_lambda2_hat",
     "is_connected",
     "edge_list",
@@ -247,6 +249,23 @@ def lambda2(w: np.ndarray) -> float:
     eig = np.linalg.eigvalsh(np.asarray(w, dtype=np.float64))
     mags = np.sort(np.abs(eig))[::-1]
     return float(mags[1])
+
+
+def lambda2_batched(ws: np.ndarray) -> np.ndarray:
+    """|λ₂| for a stacked (R, n, n) batch of symmetric Ws in one call.
+
+    LAPACK factorises each slice with the same routine the scalar
+    :func:`lambda2` uses, so every entry is bit-identical to the per-matrix
+    loop it replaces (benchmarks/table1_lambda2.py's per-seed cells).
+    """
+    eig = np.linalg.eigvalsh(np.asarray(ws, dtype=np.float64))
+    mags = np.sort(np.abs(eig), axis=-1)[:, ::-1]
+    return mags[:, 1]
+
+
+def lambda2_hat_fixed_batched(ws: np.ndarray) -> np.ndarray:
+    """Batched :func:`lambda2_hat_fixed`: |λ̂₂| = |λ₂|² per stacked W."""
+    return lambda2_batched(ws) ** 2
 
 
 def lambda2_hat_fixed(w: np.ndarray) -> float:

@@ -29,7 +29,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["gossip_mix_kernel", "gossip_mix_pallas",
-           "gossip_mix_sparse_kernel", "gossip_mix_sparse_pallas"]
+           "gossip_mix_sparse_kernel", "gossip_mix_sparse_pallas",
+           "gossip_mix_batched_kernel", "gossip_mix_batched_pallas",
+           "gossip_mix_sparse_batched_kernel",
+           "gossip_mix_sparse_batched_pallas"]
 
 BLOCK_D = 2048
 
@@ -59,6 +62,53 @@ def gossip_mix_pallas(w: jax.Array, x: jax.Array, *, block_d: int = BLOCK_D,
         ],
         out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(w, x)
+
+
+# ---------------------------------------------------------------------------
+# Batched (sweep-engine) variant: R independent runs, one kernel launch
+# ---------------------------------------------------------------------------
+#
+# The sweep engine (repro.core.sweep) stacks R independent runs into one
+# (R, n, D) buffer with per-run mixing matrices (R, n, n).  Mixing it run by
+# run would reintroduce exactly the per-call dispatch the flat engine
+# removed per leaf, so the batched kernel adds the run axis as the *leading
+# grid dimension*: grid (R, D/BLOCK_D), with run r's W block VMEM-resident
+# across that run's D tiles (index_map (r, i) → (r, 0, 0)).  Per grid step
+# the work and VMEM footprint are identical to the single-run kernel — the
+# batch multiplies the number of grid steps, not the working set — and the
+# per-run arithmetic is the same (n, n) @ (n, BLOCK_D) dot, so each run's
+# output is bit-identical to the single-run kernel on its slice.
+
+
+def gossip_mix_batched_kernel(w_ref, x_ref, y_ref):
+    w = w_ref[0].astype(jnp.float32)
+    x = x_ref[0].astype(jnp.float32)
+    y_ref[0] = jnp.dot(
+        w, x, preferred_element_type=jnp.float32).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gossip_mix_batched_pallas(w: jax.Array, x: jax.Array, *,
+                              block_d: int = BLOCK_D,
+                              interpret: bool = False) -> jax.Array:
+    """y[r] = w[r] @ x[r] with w (R, n, n), x (R, n, D); D must be a
+    multiple of block_d and n a multiple of 8 (ops.gossip_mix_batched pads
+    both)."""
+    r, n, d = x.shape
+    assert w.shape == (r, n, n), (w.shape, x.shape)
+    assert d % block_d == 0, (d, block_d)
+    grid = (r, d // block_d)
+    return pl.pallas_call(
+        gossip_mix_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda r_, i: (r_, 0, 0)),
+            pl.BlockSpec((1, n, block_d), lambda r_, i: (r_, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, n, block_d), lambda r_, i: (r_, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, n, d), x.dtype),
         interpret=interpret,
     )(w, x)
 
@@ -122,5 +172,58 @@ def gossip_mix_sparse_pallas(nbr: jax.Array, wv: jax.Array, wd: jax.Array,
         ],
         out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(nbr, wv, wd, x)
+
+
+def gossip_mix_sparse_batched_kernel(nbr_ref, wv_ref, wd_ref, x_ref, y_ref):
+    x = x_ref[0].astype(jnp.float32)                   # (n, bd)
+    acc = wd_ref[0].reshape(-1, 1) * x                 # diagonal W_ii x_i
+    max_deg = nbr_ref.shape[2]
+
+    def body(k, acc):
+        nbr = nbr_ref[0, :, k]                         # (n,) int32
+        coeff = wv_ref[0, :, k].astype(jnp.float32)    # (n,), 0 on padding
+        return acc + coeff[:, None] * jnp.take(x, nbr, axis=0)
+
+    acc = jax.lax.fori_loop(0, max_deg, body, acc)
+    y_ref[0] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gossip_mix_sparse_batched_pallas(nbr: jax.Array, wv: jax.Array,
+                                     wd: jax.Array, x: jax.Array, *,
+                                     block_d: int = BLOCK_D,
+                                     interpret: bool = False) -> jax.Array:
+    """Edge-blocked sparse mix over R runs in one launch (sweep engine).
+
+    Per-run topologies may differ: each run carries its own ELL table,
+    padded to the lattice-wide max degree (padding points at the row's own
+    agent with weight 0, contributing exactly +0.0).  Grid (R, D/block_d):
+    run r's (n, max_deg) tables stay VMEM-resident across its D tiles.
+
+    Args:
+      nbr: (R, n, max_deg) int32 per-run ELL neighbour indices.
+      wv:  (R, n, max_deg) edge weights W[r, i, nbr[r, i, k]] (0 on padding).
+      wd:  (R, n) diagonal weights W_ii per run.
+      x:   (R, n, d) stacked run buffers; d a multiple of block_d.
+    """
+    r, n, d = x.shape
+    assert nbr.shape == wv.shape and nbr.shape[:2] == (r, n), \
+        (nbr.shape, x.shape)
+    assert d % block_d == 0, (d, block_d)
+    grid = (r, d // block_d)
+    max_deg = nbr.shape[2]
+    return pl.pallas_call(
+        gossip_mix_sparse_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n, max_deg), lambda r_, i: (r_, 0, 0)),
+            pl.BlockSpec((1, n, max_deg), lambda r_, i: (r_, 0, 0)),
+            pl.BlockSpec((1, n), lambda r_, i: (r_, 0)),
+            pl.BlockSpec((1, n, block_d), lambda r_, i: (r_, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, n, block_d), lambda r_, i: (r_, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((r, n, d), x.dtype),
         interpret=interpret,
     )(nbr, wv, wd, x)

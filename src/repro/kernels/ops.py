@@ -19,7 +19,8 @@ from repro.kernels import rglru_scan as _rg
 from repro.kernels import ssd_scan as _ssd
 
 __all__ = ["flash_attention", "gossip_mix", "gossip_mix_tree",
-           "make_sparse_gossip_pallas", "quant_mix", "dequant_mix",
+           "gossip_mix_batched", "make_sparse_gossip_pallas",
+           "make_sparse_gossip_batched_pallas", "quant_mix", "dequant_mix",
            "ssd_scan", "rglru_scan", "on_tpu"]
 
 
@@ -50,6 +51,25 @@ def gossip_mix(w: jax.Array, x: jax.Array, *, block_d: int = _gm.BLOCK_D):
     y = _gm.gossip_mix_pallas(wp, xp, block_d=block_d,
                               interpret=_interpret())
     return y[:n, :d]
+
+
+def gossip_mix_batched(w: jax.Array, x: jax.Array, *,
+                       block_d: int = _gm.BLOCK_D):
+    """y[r] = W[r] @ X[r] for (R, n, D) stacked run buffers (sweep engine).
+
+    One kernel launch for the whole run lattice — grid (R, D/block_d) —
+    instead of R dispatches of the single-run kernel; pads n→8k and
+    D→block_d exactly like :func:`gossip_mix`, so every run's slice is
+    bit-identical to the single-run kernel's output.
+    """
+    r, n, d = x.shape
+    n_pad = (-n) % 8
+    d_pad = (-d) % block_d
+    wp = jnp.pad(w, ((0, 0), (0, n_pad), (0, n_pad)))
+    xp = jnp.pad(x, ((0, 0), (0, n_pad), (0, d_pad)))
+    y = _gm.gossip_mix_batched_pallas(wp, xp, block_d=block_d,
+                                      interpret=_interpret())
+    return y[:, :n, :d]
 
 
 def gossip_mix_tree(w: jax.Array, stacked) -> object:
@@ -103,6 +123,44 @@ def make_sparse_gossip_pallas(graph, *, block_d: int = _gm.BLOCK_D):
         y = _gm.gossip_mix_sparse_pallas(nbr_j, wv, wd, xp, block_d=block_d,
                                          interpret=_interpret())
         return y[:n, :d]
+
+    return mix
+
+
+def make_sparse_gossip_batched_pallas(graphs, *, block_d: int = _gm.BLOCK_D):
+    """Build the edge-blocked sparse mix for an R-run topology lattice.
+
+    Per-run ELL tables (n, max_deg) — max_deg is the lattice-wide maximum,
+    shorter rows padded with weight-0 self-edges — are stacked to
+    (R, n, max_deg) host-side and closed over; ``mix(w, x)`` with
+    w (R, n, n), x (R, n, D) reads each run's live edge weights from its
+    sampled W, so per-step link failures and per-run topologies need no
+    re-indexing.  One kernel launch (grid (R, D/block_d)) covers the whole
+    lattice.
+    """
+    from repro.core import gossip as gossip_lib
+    n = graphs[0].n
+    r_runs = len(graphs)
+    n_tot = n + ((-n) % 8)
+    nbr, mask, max_deg = gossip_lib.stacked_ell_tables(graphs, n_rows=n_tot)
+    nbr_j = jnp.asarray(nbr)
+    mask_j = jnp.asarray(mask)
+    row_idx = jnp.asarray(nbr[:, :n])  # unpadded rows' neighbour columns
+
+    def mix(w: jax.Array, x: jax.Array) -> jax.Array:
+        assert x.shape[:2] == (r_runs, n), (x.shape, r_runs, n)
+        d = x.shape[2]
+        d_pad = (-d) % block_d
+        wf = w.astype(jnp.float32)
+        wv = jnp.zeros((r_runs, n_tot, max_deg), jnp.float32).at[:, :n].set(
+            jnp.take_along_axis(wf, row_idx, axis=2))
+        wv = jnp.where(mask_j, wv, 0.0)
+        wd = jnp.zeros((r_runs, n_tot), jnp.float32).at[:, :n].set(
+            jnp.diagonal(wf, axis1=1, axis2=2))
+        xp = jnp.pad(x, ((0, 0), (0, n_tot - n), (0, d_pad)))
+        y = _gm.gossip_mix_sparse_batched_pallas(
+            nbr_j, wv, wd, xp, block_d=block_d, interpret=_interpret())
+        return y[:, :n, :d]
 
     return mix
 

@@ -24,8 +24,8 @@ from repro.launch import hlo_analysis
 __all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "CollectiveStats",
            "parse_collectives", "roofline_terms", "RooflineReport",
            "dtype_bytes", "gossip_cost_model", "sharded_gossip_cost_model",
-           "compress_row_bytes", "compressed_halo_cost_model",
-           "COMPRESS_SCHEMES", "hlo_analysis"]
+           "sweep_cost_model", "compress_row_bytes",
+           "compressed_halo_cost_model", "COMPRESS_SCHEMES", "hlo_analysis"]
 
 PEAK_FLOPS = 197e12   # bf16 per chip
 HBM_BW = 819e9        # bytes/s per chip
@@ -235,6 +235,52 @@ def sharded_gossip_cost_model(*, n_agents: int, d: int, n_shards: int,
                         {"num_halo_rounds": num_halo_rounds}),
         "none": entry(stream_blk, 0.0, 0.0),
     }
+
+
+def sweep_cost_model(*, r_runs: int, n_agents: int, d: int,
+                     t_steps: int | None = None, h: int | None = None,
+                     param_bytes: int = 4, opt_slots: int = 0,
+                     residual: bool = False,
+                     dispatch_us: float = 5.0) -> dict:
+    """Analytic cost of the batched sweep engine vs the per-run loop.
+
+    The sweep engine (repro.core.sweep) stacks R runs into one
+    ``(R, n_agents, D)`` buffer and scans all of them in one compiled
+    program; the per-run baseline (the pre-sweep figure-driver / train-loop
+    pattern) dispatches one fused H-step engine call **per run per server
+    window** — R·(T/H) dispatch + host-sync round-trips per trajectory.
+    Per-step device *work* is identical (R × the single-run bytes/FLOPs —
+    ``gossip_cost_model`` per impl, R×); what the batch removes is the
+    fixed per-dispatch cost, which dominates when the per-run tensors are
+    tiny (the figure regime: n=20, D=25).
+
+    Returns the exact columns the regression guard pins:
+      * ``state_bytes``       — R·n·D·b·(1 + opt_slots + residual), the
+        resident sweep state (the dryrun memory prediction);
+      * ``step_stream_bytes`` — 2·R·n·D·b, one read+write pass over the
+        lattice buffer per step (the local-update floor; gossip adds its
+        impl term from ``gossip_cost_model`` × R);
+      * ``dispatches_loop``   — R·(T/H) (one engine call per run per
+        window; R when T/H is unknown) vs ``dispatches_sweep`` = 1;
+      * ``dispatch_overhead_us_saved`` — (dispatches_loop − 1)·dispatch_us
+        (vanishes into the single program).
+    """
+    slots = 1 + opt_slots + (1 if residual else 0)
+    state_bytes = float(r_runs * n_agents * d * param_bytes * slots)
+    step_stream = 2.0 * r_runs * n_agents * d * param_bytes
+    n_windows = max(1, t_steps // h) if t_steps and h else 1
+    disp_loop = r_runs * n_windows
+    out = {
+        "r_runs": r_runs,
+        "state_bytes": state_bytes,
+        "step_stream_bytes": step_stream,
+        "dispatches_loop": disp_loop,
+        "dispatches_sweep": 1,
+        "dispatch_overhead_us_saved": (disp_loop - 1) * dispatch_us,
+    }
+    if t_steps is not None:
+        out["t_steps"] = int(t_steps)
+    return out
 
 
 COMPRESS_SCHEMES = ("none", "bf16", "int8", "topk:0.1")

@@ -75,6 +75,7 @@ def _gossip_model(cfg, axes, state_layout: str,
         num_directed_edges=2 * fcfg.mixing.graph.num_edges,
         param_bytes=pbytes)
     rec = {"n_agents": n_agents, "d": d, "num_leaves": len(leaves),
+           "param_bytes": int(pbytes),
            "state_layout": state_layout, "impls": model,
            "compress_payload_bytes_per_row": {
                scheme: analysis.compress_row_bytes(scheme, d, pbytes)
@@ -104,7 +105,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             fused_steps: int | None = None,
             state_layout: str = "tree",
             mesh_agents: int | None = None,
-            gossip_compress: str = "none") -> dict:
+            gossip_compress: str = "none",
+            sweep_runs: int | None = None,
+            sweep_axis: str = "seed") -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -115,6 +118,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         tag += f"__fused{fused_steps}"
     if state_layout in ("flat", "sharded") and shape.kind == "train":
         tag += f"__{state_layout}"
+    if sweep_runs and shape.kind == "train":
+        tag += f"__sweep{sweep_runs}-{sweep_axis}"
     rec: dict = {"arch": arch, "shape": shape_name,
                  "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
                  "fused_steps": fused_steps if shape.kind == "train" else None,
@@ -122,6 +127,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                  if shape.kind == "train" else None}
     if gossip_compress != "none" and shape.kind == "train":
         rec["gossip_compress"] = gossip_compress
+    if sweep_runs and shape.kind == "train":
+        rec["sweep_runs"] = sweep_runs
+        rec["sweep_axis"] = sweep_axis
     t0 = time.time()
     try:
         from repro.configs.base import FedConfig
@@ -129,7 +137,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             if gossip_compress != "none" else None
         low = build_lowerable(cfg, shape, axes, fed=fed,
                               fused_steps=fused_steps,
-                              state_layout=state_layout, mesh=mesh)
+                              state_layout=state_layout, mesh=mesh,
+                              sweep_runs=sweep_runs
+                              if shape.kind == "train" else None,
+                              sweep_axis=sweep_axis)
         lowered = low.lower(mesh)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -176,6 +187,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         if shape.kind == "train":
             rec["gossip_cost_model"] = _gossip_model(cfg, axes, state_layout,
                                                      mesh_agents)
+            if sweep_runs:
+                gm = rec["gossip_cost_model"]
+                rec["sweep_cost_model"] = analysis.sweep_cost_model(
+                    r_runs=sweep_runs, n_agents=gm["n_agents"], d=gm["d"],
+                    param_bytes=gm["param_bytes"],
+                    residual=gossip_compress != "none")
         print(f"[ok]   {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s")
         print(f"       memory_analysis: {mem}")
         print(f"       hlo(loop-aware): {hlo.summary()}")
@@ -189,6 +206,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                 f"{k} {v['pred_us']:.0f}µs" for k, v in gm["impls"].items())
             print(f"       gossip/step (n={gm['n_agents']}, "
                   f"D={gm['d']:.2e}, {gm['num_leaves']} leaves): {pred}")
+        if shape.kind == "train" and sweep_runs:
+            sm = rec["sweep_cost_model"]
+            print(f"       sweep lattice R={sweep_runs} ({sweep_axis}): "
+                  f"state {sm['state_bytes'] / 1e9:.2f} GB "
+                  f"(R× flat buffer), step stream "
+                  f"{sm['step_stream_bytes'] / 1e9:.2f} GB, "
+                  f"1 dispatch/round vs {sm['dispatches_loop']} "
+                  f"in the per-run loop")
         if shape.kind == "train" and mesh_agents \
                 and "sharded" in rec.get("gossip_cost_model", {}):
             sh = rec["gossip_cost_model"]["sharded"]
@@ -247,6 +272,17 @@ def main() -> None:
                         "bf16 | int8 | topk:R) — the state gains the EF "
                         "residual buffer and the cost model records the "
                         "compressed payload bytes")
+    p.add_argument("--sweep-runs", type=int, default=None, metavar="R",
+                   help="compile train steps as the batched sweep engine "
+                        "(repro.core.sweep): the carried state becomes the "
+                        "(R, n_agents, D) lattice buffer and the record "
+                        "gains the sweep memory/bytes prediction "
+                        "(analysis.sweep_cost_model).  Needs --state-layout "
+                        "flat and --fused H")
+    p.add_argument("--sweep-axis", default="seed",
+                   choices=["seed", "h", "topology"],
+                   help="lattice axis for --sweep-runs (see "
+                        "launch.steps.sweep_lattice_configs)")
     p.add_argument("--out", default=RESULTS_DIR)
     args = p.parse_args()
 
@@ -264,7 +300,9 @@ def main() -> None:
                               fused_steps=args.fused or None,
                               state_layout=args.state_layout,
                               mesh_agents=args.mesh_agents,
-                              gossip_compress=args.gossip_compress)
+                              gossip_compress=args.gossip_compress,
+                              sweep_runs=args.sweep_runs,
+                              sweep_axis=args.sweep_axis)
                 if rec["status"] != "ok":
                     failures.append(rec)
     print(f"\n{len(failures)} failures / "

@@ -28,14 +28,14 @@ from repro import sharding as shd
 from repro.configs.base import ArchConfig, FedConfig
 from repro.configs.shapes import ShapeConfig
 from repro.core import (feddec, flat as flat_lib, sharded as sharded_lib,
-                        topology as topo)
+                        sweep as sweep_lib, topology as topo)
 from repro.core.mixing import MixingDistribution
 from repro.launch import specs as specs_lib
 from repro.models import build_model
 
-__all__ = ["build_fed_setup", "Lowerable", "build_train_lowerable",
-           "build_prefill_lowerable", "build_decode_lowerable",
-           "build_lowerable"]
+__all__ = ["build_fed_setup", "sweep_lattice_configs", "Lowerable",
+           "build_train_lowerable", "build_prefill_lowerable",
+           "build_decode_lowerable", "build_lowerable"]
 
 
 def adapt_for_mesh(cfg: ArchConfig, axes: shd.MeshAxes) -> ArchConfig:
@@ -79,6 +79,45 @@ def build_fed_setup(cfg: ArchConfig, axes: shd.MeshAxes,
                                k=min(fed.k, n), gossip_impl=impl,
                                gossip_compress=fed.gossip_compress)
     return fcfg, n
+
+
+def sweep_lattice_configs(fcfg: feddec.FedDecConfig, fed: FedConfig | None,
+                          sweep_runs: int,
+                          sweep_axis: str = "seed") -> list:
+    """Per-run FedDecConfigs for a --sweep-runs lattice.
+
+    ``seed``     — R replicas of the base config (the runs differ only in
+                   their per-run PRNG keys, supplied by the driver);
+    ``h``        — doubling server-period lattice H·{1, 2, 4, …} (the
+                   paper's Fig. 4 axis);
+    ``topology`` — R independent draws of the base graph family (geo/er
+                   re-drawn with seed = run index; deterministic families
+                   have nothing to sweep and are rejected).
+    """
+    fed = fed or FedConfig()
+    if sweep_axis == "seed":
+        return [fcfg] * sweep_runs
+    if sweep_axis == "h":
+        return [dataclasses.replace(fcfg, h=fcfg.h * (1 << r))
+                for r in range(sweep_runs)]
+    if sweep_axis == "topology":
+        n = fcfg.n_agents
+        if fed.graph.startswith("geo"):
+            graphs = [topo.geographic_graph(n, float(fed.graph[3:]), seed=r)
+                      for r in range(sweep_runs)]
+        elif fed.graph.startswith("er"):
+            graphs = [topo.erdos_renyi_graph(n, float(fed.graph[2:]), seed=r)
+                      for r in range(sweep_runs)]
+        else:
+            raise ValueError(
+                f"--sweep-axis topology needs a random graph family "
+                f"(geoR/erP), got {fed.graph!r}")
+        return [dataclasses.replace(
+            fcfg, mixing=MixingDistribution(g, p_fail=fed.p_fail,
+                                            scheme="metropolis"))
+            for g in graphs]
+    raise ValueError(f"unknown sweep_axis {sweep_axis!r}; choose "
+                     f"seed|h|topology")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,7 +209,9 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
                           microbatches: int | None = None,
                           mesh: jax.sharding.Mesh | None = None,
                           fused_steps: int | None = None,
-                          state_layout: str = "tree") -> Lowerable:
+                          state_layout: str = "tree",
+                          sweep_runs: int | None = None,
+                          sweep_axis: str = "seed") -> Lowerable:
     """The FedDec training step at production shape.
 
     ``fed.gossip_impl='permute'`` selects the neighbour-only ppermute gossip
@@ -190,6 +231,13 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     buffer sharded over the agent axes (each agent's row stays whole — the
     flat layout trades inner tensor-parallel sharding for whole-buffer ops,
     so it suits archs whose per-agent replica fits a device slice).
+
+    ``sweep_runs=R`` lowers the batched sweep engine (repro.core.sweep) on
+    the flat layout: the carried state is one (R, n_agents, D) lattice
+    buffer, batches gain a run axis after the fused-step dim, and the keys
+    argument becomes a (R,) per-run key array.  ``sweep_axis`` picks the
+    lattice (seed | h | topology, see :func:`sweep_lattice_configs`).
+    Requires ``state_layout='flat'`` and ``fused_steps``.
 
     ``state_layout='sharded'`` lowers the shard_map engine
     (repro.core.sharded) over the same flat buffer: the agent dim is
@@ -336,10 +384,47 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
                                    is_leaf=lambda x: isinstance(x, P))
         name += f":fused{fused_steps}"
 
+    key_struct = _key_struct()
+    key_specs = P()
+    if sweep_runs:
+        if state_layout != "flat":
+            raise ValueError("sweep_runs lowers the batched sweep engine "
+                             "(repro.core.sweep); it requires "
+                             "state_layout='flat'")
+        if fused_steps is None:
+            raise ValueError("sweep_runs requires the fused executor "
+                             "(fused_steps=H)")
+        if gossip_fn is not None:
+            raise ValueError("the sweep engine resolves gossip from "
+                             "fed.gossip_impl; 'permute' gossip_fn "
+                             "overrides are a single-run feature")
+        plan = sweep_lib.make_sweep_plan(
+            sweep_lattice_configs(fcfg, fed, sweep_runs, sweep_axis))
+        state_struct = jax.eval_shape(
+            lambda p: sweep_lib.init_sweep_state(plan, spec, p),
+            params_struct)
+        state_specs = sweep_lib.SweepFedState(
+            flat=P(None, *flat_spec_p), step=P(None), opt_state=(),
+            residual=() if compress == "none" else P(None, *flat_spec_p))
+        step = sweep_lib.make_sweep_feddec_round(plan, spec, grad_fn,
+                                                 lr_fn, jit=False)
+        # batches gain a run axis after the fused-step dim; keys become
+        # the (R,) per-run key array
+        batch_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (s.shape[0], sweep_runs) + s.shape[1:], s.dtype),
+            batch_struct)
+        batch_specs = jax.tree.map(lambda s: P(None, *s), batch_specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+        key_struct = jax.eval_shape(
+            lambda: jax.random.split(jax.random.key(0), sweep_runs))
+        key_specs = P(None)
+        name += f":sweep{sweep_runs}-{sweep_axis}"
+
     return Lowerable(
         fn=step,
-        args_struct=(state_struct, batch_struct, _key_struct()),
-        in_specs=(state_specs, batch_specs, P()),
+        args_struct=(state_struct, batch_struct, key_struct),
+        in_specs=(state_specs, batch_specs, key_specs),
         out_specs=(state_specs, {"loss": P(), "eta": P()}),
         donate_argnums=(0,),
         name=name,
@@ -432,6 +517,7 @@ def build_lowerable(cfg: ArchConfig, shape: ShapeConfig,
         return build_train_lowerable(cfg, shape, axes, **kw)
     kw.pop("fed", None), kw.pop("mesh", None), kw.pop("fused_steps", None)
     kw.pop("state_layout", None)
+    kw.pop("sweep_runs", None), kw.pop("sweep_axis", None)
     if shape.kind == "prefill":
         return build_prefill_lowerable(cfg, shape, axes)
     return build_decode_lowerable(cfg, shape, axes)

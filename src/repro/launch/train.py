@@ -27,10 +27,11 @@ from repro.configs.base import ArchConfig, FedConfig
 from repro.core import feddec
 from repro.core import flat as flat_lib
 from repro.core import sharded as sharded_lib
+from repro.core import sweep as sweep_lib
 from repro.core.fedavg import FedAvgConfig
 from repro.data.federated_lm import make_federated_lm
 from repro.launch.mesh import make_agent_mesh
-from repro.launch.steps import build_fed_setup
+from repro.launch.steps import build_fed_setup, sweep_lattice_configs
 from repro.models import build_model
 from repro.sharding import MeshAxes
 
@@ -53,6 +54,7 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                optimizer: str = "sgd", fedavg_control: bool = False,
                fused: bool = True, state_layout: str | None = None,
                mesh_agents: int | None = None,
+               sweep_runs: int | None = None, sweep_axis: str = "seed",
                ckpt_dir: str | None = None, ckpt_every: int = 0,
                log_every: int = 10, seed: int = 0,
                data_alpha: float = 0.3):
@@ -81,6 +83,14 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     server rounds execute as psum_scatter / ppermute-halo / psum
     collectives.  Implies the flat layout.  On CPU force host devices with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+    ``sweep_runs=R`` runs R independent FedDec replicas batched into one
+    (R, n_agents, D) program (repro.core.sweep), varying ``sweep_axis``
+    per run: 'seed' (per-run PRNG keys), 'h' (doubling server periods), or
+    'topology' (independent graph draws).  All runs share the data stream;
+    losses are averaged over the lattice per step and per-run finals are
+    printed.  Implies the flat layout and the fused executor; the returned
+    FedState is run 0's.  Checkpointing a lattice is not supported.
     """
     model = build_model(cfg)
     axes = MeshAxes(("data",), "model", {"data": fed.n_agents, "model": 1})
@@ -95,6 +105,18 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     if mesh_agents is not None and state_layout != "flat":
         raise ValueError("--mesh-agents shards the flat (n_agents, D) "
                          "buffer; it requires --state-layout flat")
+    if sweep_runs is not None:
+        if mesh_agents is not None:
+            raise ValueError("--sweep-runs and --mesh-agents are mutually "
+                             "exclusive (batch runs or shard agents)")
+        if not fused:
+            raise ValueError("--sweep-runs requires the fused executor")
+        if state_layout != "flat":
+            raise ValueError("--sweep-runs batches the flat (n_agents, D) "
+                             "buffer; it requires --state-layout flat")
+        if ckpt_dir:
+            raise ValueError("checkpointing a sweep lattice is not "
+                             "supported; run without --ckpt-dir")
 
     opt = {"sgd": None, "momentum": optim.momentum_sgd(),
            "adamw": optim.adamw()}[optimizer]
@@ -108,30 +130,40 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     spec = None
     if state_layout == "flat":
         spec = flat_lib.make_flat_spec(params0)
-        state = flat_lib.init_flat_state(spec, params0, n_agents,
-                                         optimizer=opt, compress=compress)
-        if mesh_agents is not None:
-            if n_agents % mesh_agents:
-                raise ValueError(f"--mesh-agents {mesh_agents} must divide "
-                                 f"--agents {n_agents}")
-            mesh = make_agent_mesh(mesh_agents)
-            state = sharded_lib.shard_flat_state(state, mesh)
-            if fused:
-                round_fn = sharded_lib.make_sharded_feddec_round(
-                    fcfg, spec, model.grad_fn(), lr_fn, mesh,
-                    optimizer=opt, donate=True)
-            else:
-                step = sharded_lib.make_sharded_feddec_step(
-                    fcfg, spec, model.grad_fn(), lr_fn, mesh,
-                    optimizer=opt, donate=True)
-        elif fused:
-            round_fn = flat_lib.make_flat_feddec_round(
-                fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
+        if sweep_runs is not None:
+            plan = sweep_lib.make_sweep_plan(
+                sweep_lattice_configs(fcfg, fed, sweep_runs, sweep_axis))
+            state = sweep_lib.init_sweep_state(plan, spec, params0,
+                                               optimizer=opt)
+            round_fn = sweep_lib.make_sweep_feddec_round(
+                plan, spec, model.grad_fn(), lr_fn, optimizer=opt,
                 donate=True)
         else:
-            step = flat_lib.make_flat_feddec_step(
-                fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
-                donate=True)
+            state = flat_lib.init_flat_state(spec, params0, n_agents,
+                                             optimizer=opt,
+                                             compress=compress)
+            if mesh_agents is not None:
+                if n_agents % mesh_agents:
+                    raise ValueError(f"--mesh-agents {mesh_agents} must "
+                                     f"divide --agents {n_agents}")
+                mesh = make_agent_mesh(mesh_agents)
+                state = sharded_lib.shard_flat_state(state, mesh)
+                if fused:
+                    round_fn = sharded_lib.make_sharded_feddec_round(
+                        fcfg, spec, model.grad_fn(), lr_fn, mesh,
+                        optimizer=opt, donate=True)
+                else:
+                    step = sharded_lib.make_sharded_feddec_step(
+                        fcfg, spec, model.grad_fn(), lr_fn, mesh,
+                        optimizer=opt, donate=True)
+            elif fused:
+                round_fn = flat_lib.make_flat_feddec_round(
+                    fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
+                    donate=True)
+            else:
+                step = flat_lib.make_flat_feddec_step(
+                    fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
+                    donate=True)
     else:
         state = feddec.init_state(params0, n_agents, optimizer=opt,
                                   compress=compress)
@@ -151,6 +183,8 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
           f"opt={optimizer}, executor={'fused' if fused else 'per-step'}, "
           f"layout={state_layout}"
           + (f" (sharded over {mesh_agents} devices)" if mesh_agents else "")
+          + (f" (sweep lattice R={sweep_runs} axis={sweep_axis})"
+             if sweep_runs else "")
           + f", gossip={fcfg.gossip_impl}"
           + (f", compress={compress}" if compress != "none" else ""))
 
@@ -159,6 +193,13 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
         (n_agents, per_agent_batch, seq_len))
     key = jax.random.key(seed + 1)
     step_key = jax.random.key(seed + 2)
+    if sweep_runs is not None:
+        # 'seed' lattices decorrelate per-run keys; 'h'/'topology' keep the
+        # key stream identical so the axis is the only difference
+        run_keys = jax.vmap(
+            lambda r: jax.random.fold_in(step_key, r))(
+            jnp.arange(sweep_runs)) if sweep_axis == "seed" else \
+            jnp.broadcast_to(step_key[None], (sweep_runs,))
     losses = []
     t_start = time.time()
 
@@ -185,8 +226,18 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
             batches = {"tokens": tokens,
                        "positions": jnp.broadcast_to(
                            positions[None], (chunk,) + positions.shape)}
-            state, metrics = round_fn(state, batches, step_key)
-            losses.extend(np.asarray(metrics["loss"]).tolist())
+            if sweep_runs is not None:
+                # shared data stream, one (chunk, R, ...) lattice round
+                batches = jax.tree.map(
+                    lambda b: jnp.broadcast_to(
+                        b[:, None], (b.shape[0], sweep_runs) + b.shape[1:]),
+                    batches)
+                state, metrics = round_fn(state, batches, run_keys)
+                losses.extend(
+                    np.asarray(metrics["loss"].mean(axis=1)).tolist())
+            else:
+                state, metrics = round_fn(state, batches, step_key)
+                losses.extend(np.asarray(metrics["loss"]).tolist())
             done += chunk
             log_and_ckpt(done - chunk, done)
     else:
@@ -200,6 +251,11 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     if ckpt_dir:
         save_checkpoint(ckpt_dir, steps,
                         {"params": ckpt_params(state), "step": state.step})
+    if sweep_runs is not None:
+        finals = np.asarray(metrics["loss"][-1])
+        print("[train] sweep finals (last-step loss per run): "
+              + ", ".join(f"r{r}={v:.4f}" for r, v in enumerate(finals)))
+        state = sweep_lib.slice_run(state, 0)
     if state_layout == "flat":
         state = flat_lib.unflatten_fedstate(spec, state)
     return state, losses
@@ -251,6 +307,17 @@ def main() -> None:
                         "N-device 'agents' mesh axis (repro.core.sharded); "
                         "composes with --gossip-impl and --fused.  On CPU: "
                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    p.add_argument("--sweep-runs", type=int, default=None, metavar="R",
+                   help="run R independent FedDec replicas batched into "
+                        "one (R, n_agents, D) program (repro.core.sweep); "
+                        "losses are lattice-averaged, per-run finals "
+                        "printed")
+    p.add_argument("--sweep-axis", default="seed",
+                   choices=["seed", "h", "topology"],
+                   help="what varies across the --sweep-runs lattice: "
+                        "per-run PRNG keys (seed), doubling server "
+                        "periods H·2^r (h), or independent graph draws "
+                        "(topology; geo/er families)")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--d-model", type=int, default=768)
     p.add_argument("--layers", type=int, default=12)
@@ -271,6 +338,7 @@ def main() -> None:
         seq_len=args.seq, lr=args.lr, optimizer=args.optimizer,
         fedavg_control=args.fedavg, fused=args.fused,
         state_layout=args.state_layout, mesh_agents=args.mesh_agents,
+        sweep_runs=args.sweep_runs, sweep_axis=args.sweep_axis,
         ckpt_dir=args.ckpt_dir)
     first = np.mean(losses[:5])
     last = np.mean(losses[-5:])

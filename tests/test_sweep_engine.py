@@ -1,0 +1,370 @@
+"""Batched sweep engine ≡ per-run flat-engine trajectories.
+
+Every run slice of the sweep engine (repro.core.sweep) must reproduce the
+single-run flat engine (repro.core.flat) for the same per-run config and
+key: the per-run key folding, per-run mixing matrices (fixed, stochastic,
+and identity/FedAvg members of a mixed lattice), per-run H server periods,
+and the batched gossip kernels are the single-run ops with a leading run
+axis.  Asserted at the 1e-5 acceptance tolerance — and observed bit-exact
+on linreg — across gossip impls × optimizers × server on/off × compress
+codecs, plus the masked heterogeneous-budget (t_steps) regression and the
+batched-kernel unit checks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import FedDecConfig
+from repro.core import flat as flat_lib
+from repro.core import gossip as gossip_lib
+from repro.core import sweep as sweep_lib
+from repro.core import theory, topology as topo
+from repro.core.mixing import MixingDistribution, identity_mixing
+from repro.data import linreg
+from repro.kernels import ops as kernel_ops
+
+N_AGENTS = 8
+T_RUN = 6
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return linreg.make_problem(n=N_AGENTS, seed=0, c_base=1.3)
+
+
+@pytest.fixture(scope="module")
+def spec(problem):
+    return flat_lib.make_flat_spec(jnp.zeros(problem.d))
+
+
+def _lr(problem, h=4):
+    return theory.paper_stepsize(
+        problem.mu, theory.gamma(problem.l_smooth, problem.mu, h))
+
+
+def _cfg(problem, *, h=4, p_fail=0.0, gossip_impl="dense",
+         server_enabled=True, compress="none", graph_seed=3, radius=0.6):
+    g = topo.geographic_graph(problem.n, radius, seed=graph_seed)
+    md = MixingDistribution(g, p_fail=p_fail,
+                            scheme="metropolis" if p_fail else "laplacian")
+    return FedDecConfig(mixing=md, h=h, k=2, server_enabled=server_enabled,
+                        gossip_impl=gossip_impl, gossip_compress=compress)
+
+
+def _batches(problem, t_steps, seed=11):
+    keys = jax.random.split(jax.random.key(seed), t_steps)
+    return jax.vmap(lambda k: linreg.sample_minibatch(problem, k, m=1))(keys)
+
+
+def _sweep_batches(batches, r_runs):
+    return jax.tree.map(
+        lambda b: jnp.broadcast_to(b[:, None],
+                                   (b.shape[0], r_runs) + b.shape[1:]),
+        batches)
+
+
+def _run_sweep(problem, spec, cfgs, *, t_steps=T_RUN, opt=None,
+               t_budgets=None, keys=None):
+    plan = sweep_lib.make_sweep_plan(cfgs, t_steps=t_budgets)
+    lr = _lr(problem)
+    grad_fn = linreg.make_grad_fn(problem.m_rows)
+    batches = _batches(problem, t_steps)
+    if keys is None:
+        keys = jax.random.split(jax.random.key(5), len(cfgs))
+    round_fn = sweep_lib.make_sweep_feddec_round(plan, spec, grad_fn, lr,
+                                                 optimizer=opt, donate=False)
+    state = sweep_lib.init_sweep_state(plan, spec, jnp.zeros(problem.d),
+                                       optimizer=opt)
+    out, metrics = round_fn(state, _sweep_batches(batches, len(cfgs)), keys)
+    return out, metrics, keys, batches
+
+
+def _run_flat(problem, spec, cfg, key, *, t_steps=T_RUN, opt=None):
+    lr = _lr(problem)
+    grad_fn = linreg.make_grad_fn(problem.m_rows)
+    # the leading slice of the full stream (split(key, T) has no prefix
+    # property, so a budgeted run must consume the same T-length draw)
+    batches = jax.tree.map(lambda b: b[:t_steps], _batches(problem, T_RUN))
+    round_fn = flat_lib.make_flat_feddec_round(cfg, spec, grad_fn, lr,
+                                               optimizer=opt, donate=False)
+    state = flat_lib.init_flat_state(
+        spec, jnp.zeros(problem.d), cfg.n_agents, optimizer=opt,
+        compress=cfg.gossip_compress if cfg.gossip_impl != "none"
+        else "none")
+    return round_fn(state, batches, key)
+
+
+class TestSliceEquivalence:
+    """Property: every run slice == the single-run flat engine, across a
+    heterogeneous (seed × H × topology) lattice."""
+
+    @pytest.mark.parametrize("gossip_impl",
+                             ["dense", "pallas", "sparse", "none"])
+    @pytest.mark.parametrize("server_enabled", [True, False])
+    def test_lattice_slices_match_flat(self, problem, spec, gossip_impl,
+                                       server_enabled):
+        cfgs = [
+            _cfg(problem, h=4, gossip_impl=gossip_impl,
+                 server_enabled=server_enabled),
+            _cfg(problem, h=3, gossip_impl=gossip_impl,
+                 server_enabled=server_enabled, graph_seed=7),
+            _cfg(problem, h=5, gossip_impl=gossip_impl,
+                 server_enabled=server_enabled, radius=0.8),
+        ]
+        out, metrics, keys, _ = _run_sweep(problem, spec, cfgs)
+        for r, cfg in enumerate(cfgs):
+            s_flat, m_flat = _run_flat(problem, spec, cfg, keys[r])
+            np.testing.assert_allclose(np.asarray(out.flat[r]),
+                                       np.asarray(s_flat.flat),
+                                       atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(metrics["loss"][:, r]),
+                                       np.asarray(m_flat["loss"]),
+                                       rtol=1e-6)
+        assert int(out.step[0]) == T_RUN + 1
+
+    @pytest.mark.parametrize("opt_name", ["momentum", "adamw"])
+    def test_stateful_optimizers(self, problem, spec, opt_name):
+        opt = {"momentum": optim.momentum_sgd(),
+               "adamw": optim.adamw()}[opt_name]
+        cfgs = [_cfg(problem, h=4), _cfg(problem, h=3, graph_seed=7)]
+        out, _, keys, _ = _run_sweep(problem, spec, cfgs, opt=opt)
+        for r, cfg in enumerate(cfgs):
+            s_flat, _ = _run_flat(problem, spec, cfg, keys[r], opt=opt)
+            np.testing.assert_allclose(np.asarray(out.flat[r]),
+                                       np.asarray(s_flat.flat),
+                                       atol=1e-5, rtol=1e-5)
+            sliced = sweep_lib.slice_run(out, r)
+            jax.tree.map(
+                lambda a, b: np.testing.assert_allclose(
+                    np.asarray(a, np.float32), np.asarray(b, np.float32),
+                    atol=1e-5, rtol=1e-5),
+                sliced.opt_state, s_flat.opt_state)
+
+    def test_stochastic_topology(self, problem, spec):
+        """p_fail > 0 runs resample their own W^t per scanned step."""
+        cfgs = [_cfg(problem, p_fail=0.4, gossip_impl="sparse"),
+                _cfg(problem, p_fail=0.0, gossip_impl="sparse"),
+                _cfg(problem, p_fail=0.7, gossip_impl="sparse",
+                     graph_seed=9)]
+        out, _, keys, _ = _run_sweep(problem, spec, cfgs)
+        for r, cfg in enumerate(cfgs):
+            s_flat, _ = _run_flat(problem, spec, cfg, keys[r])
+            np.testing.assert_allclose(np.asarray(out.flat[r]),
+                                       np.asarray(s_flat.flat),
+                                       atol=1e-5, rtol=1e-5)
+
+    def test_mixed_lattice_with_fedavg_member(self, problem, spec):
+        """A 'none' (FedAvg) member of a dense lattice mixes with W = I and
+        stays bit-identical to its single-run flat trajectory."""
+        fedavg = FedDecConfig(mixing=identity_mixing(problem.n), h=4, k=2,
+                              gossip_impl="none")
+        cfgs = [_cfg(problem, h=4), fedavg]
+        out, _, keys, _ = _run_sweep(problem, spec, cfgs)
+        s_flat, _ = _run_flat(problem, spec, fedavg, keys[1])
+        np.testing.assert_array_equal(np.asarray(out.flat[1]),
+                                      np.asarray(s_flat.flat))
+
+    def test_default_lattice_bit_exact(self, problem, spec):
+        """Observed exact on linreg (the doc claim): dense f32, no
+        tolerance."""
+        cfgs = [_cfg(problem, h=4), _cfg(problem, h=3, graph_seed=7)]
+        out, _, keys, _ = _run_sweep(problem, spec, cfgs)
+        for r, cfg in enumerate(cfgs):
+            s_flat, _ = _run_flat(problem, spec, cfg, keys[r])
+            np.testing.assert_array_equal(np.asarray(out.flat[r]),
+                                          np.asarray(s_flat.flat))
+
+
+class TestCompressedLattice:
+    @pytest.mark.parametrize("compress", ["identity", "bf16", "int8",
+                                          "topk:0.5"])
+    def test_compressed_slices_match_flat(self, problem, spec, compress):
+        cfgs = [_cfg(problem, h=4, compress=compress),
+                _cfg(problem, h=3, compress=compress, graph_seed=7)]
+        out, _, keys, _ = _run_sweep(problem, spec, cfgs)
+        for r, cfg in enumerate(cfgs):
+            s_flat, _ = _run_flat(problem, spec, cfg, keys[r])
+            np.testing.assert_allclose(np.asarray(out.flat[r]),
+                                       np.asarray(s_flat.flat),
+                                       atol=1e-5, rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(out.residual[r]),
+                                       np.asarray(s_flat.residual),
+                                       atol=1e-5, rtol=1e-5)
+
+    def test_identity_bit_identical_to_none(self, problem, spec):
+        """The EF plumbing with the identity codec is the uncompressed
+        trajectory, bit for bit (same key streams: key_c is folded off
+        key_w, never split)."""
+        out_id, _, keys, _ = _run_sweep(
+            problem, spec, [_cfg(problem, compress="identity")])
+        out_none, _, _, _ = _run_sweep(
+            problem, spec, [_cfg(problem, compress="none")], keys=keys)
+        np.testing.assert_array_equal(np.asarray(out_id.flat),
+                                      np.asarray(out_none.flat))
+        assert not np.asarray(out_id.residual).any()
+
+
+class TestHeterogeneousBudgets:
+    def test_masked_runs_freeze_bitwise(self, problem, spec):
+        """Runs whose t_steps budget ends early keep their state frozen
+        (bit-preserved) while the rest of the lattice continues — the
+        heterogeneous-H·K regression."""
+        budgets = (2, T_RUN, 4)
+        cfgs = [_cfg(problem, h=4), _cfg(problem, h=3, graph_seed=7),
+                _cfg(problem, h=5, radius=0.8)]
+        out, metrics, keys, _ = _run_sweep(problem, spec, cfgs,
+                                           t_budgets=budgets)
+        for r, (cfg, budget) in enumerate(zip(cfgs, budgets)):
+            s_flat, _ = _run_flat(problem, spec, cfg, keys[r],
+                                  t_steps=budget)
+            np.testing.assert_array_equal(np.asarray(out.flat[r]),
+                                          np.asarray(s_flat.flat))
+            assert int(out.step[r]) == budget + 1
+        active = np.asarray(metrics["active"])          # (T, R)
+        np.testing.assert_array_equal(
+            active, np.arange(1, T_RUN + 1)[:, None] <= np.asarray(budgets))
+
+    def test_opt_state_frozen_too(self, problem, spec):
+        opt = optim.adamw()
+        cfgs = [_cfg(problem, h=4), _cfg(problem, h=4, graph_seed=7)]
+        out, _, keys, _ = _run_sweep(problem, spec, cfgs, opt=opt,
+                                     t_budgets=(3, T_RUN))
+        s_flat, _ = _run_flat(problem, spec, cfgs[0], keys[0], t_steps=3,
+                              opt=opt)
+        sliced = sweep_lib.slice_run(out, 0)
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+            sliced.opt_state, s_flat.opt_state)
+
+
+class TestPerStepKeys:
+    def test_constant_per_step_keys_match_broadcast(self, problem, spec):
+        cfgs = [_cfg(problem, h=4), _cfg(problem, h=3, graph_seed=7)]
+        plan = sweep_lib.make_sweep_plan(cfgs)
+        lr = _lr(problem)
+        grad_fn = linreg.make_grad_fn(problem.m_rows)
+        batches = _batches(problem, T_RUN)
+        keys = jax.random.split(jax.random.key(5), len(cfgs))
+        state = sweep_lib.init_sweep_state(plan, spec,
+                                           jnp.zeros(problem.d))
+        plain = sweep_lib.make_sweep_feddec_round(plan, spec, grad_fn, lr,
+                                                  donate=False)
+        stepped = sweep_lib.make_sweep_feddec_round(plan, spec, grad_fn,
+                                                    lr, donate=False,
+                                                    per_step_keys=True)
+        out_a, _ = plain(state, _sweep_batches(batches, 2), keys)
+        keys_t = jnp.broadcast_to(keys[None], (T_RUN,) + keys.shape)
+        out_b, _ = stepped(state, _sweep_batches(batches, 2), keys_t)
+        np.testing.assert_array_equal(np.asarray(out_a.flat),
+                                      np.asarray(out_b.flat))
+
+
+class TestBatchedKernels:
+    def _setup(self, r_runs=3, n=6, d=300):
+        graphs = [topo.ring_graph(n, k=1),
+                  topo.geographic_graph(n, 0.7, seed=2),
+                  topo.ring_graph(n, k=2)][:r_runs]
+        ws = jnp.stack([
+            jnp.asarray(MixingDistribution(g, scheme="metropolis")
+                        .sample(jax.random.key(0))) for g in graphs])
+        x = jax.random.normal(jax.random.key(1), (r_runs, n, d))
+        return graphs, ws, x
+
+    def test_gossip_mix_batched_slices(self):
+        _, ws, x = self._setup()
+        y = kernel_ops.gossip_mix_batched(ws, x)
+        for r in range(x.shape[0]):
+            np.testing.assert_array_equal(
+                np.asarray(y[r]),
+                np.asarray(kernel_ops.gossip_mix(ws[r], x[r])))
+
+    def test_sparse_batched_xla_slices(self):
+        graphs, ws, x = self._setup()
+        mix = gossip_lib.make_sparse_gossip_batched(graphs)
+        y = mix(ws, x)
+        for r, g in enumerate(graphs):
+            ref = gossip_lib.make_sparse_gossip(g)(ws[r], x[r])
+            np.testing.assert_array_equal(np.asarray(y[r]),
+                                          np.asarray(ref))
+
+    def test_sparse_batched_pallas_matches_dense(self):
+        graphs, ws, x = self._setup()
+        mix = kernel_ops.make_sparse_gossip_batched_pallas(graphs)
+        ref = jnp.einsum("rij,rjd->rid", ws, x,
+                         precision=jax.lax.Precision.HIGHEST)
+        np.testing.assert_allclose(np.asarray(mix(ws, x)), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_edgeless_run_is_identity(self):
+        n = 6
+        graphs = [topo.ring_graph(n, k=1),
+                  topo.Graph(np.zeros((n, n), dtype=bool))]
+        ws = jnp.stack([jnp.asarray(
+            MixingDistribution(graphs[0], scheme="metropolis")
+            .sample(jax.random.key(0))), jnp.eye(n)])
+        x = jax.random.normal(jax.random.key(1), (2, n, 40))
+        for mix in (kernel_ops.gossip_mix_batched,
+                    gossip_lib.make_sparse_gossip_batched(graphs),
+                    kernel_ops.make_sparse_gossip_batched_pallas(graphs)):
+            np.testing.assert_array_equal(np.asarray(mix(ws, x)[1]),
+                                          np.asarray(x[1]))
+
+
+class TestPlanAndHelpers:
+    def test_plan_validation(self, problem):
+        base = _cfg(problem)
+        with pytest.raises(ValueError, match="at most one other"):
+            sweep_lib.make_sweep_plan(
+                [base, _cfg(problem, gossip_impl="sparse")])
+        other_n = linreg.make_problem(n=4, seed=1, c_base=1.3)
+        with pytest.raises(ValueError, match="n_agents"):
+            sweep_lib.make_sweep_plan([base, _cfg(other_n)])
+        with pytest.raises(ValueError, match="one budget per run"):
+            sweep_lib.make_sweep_plan([base, base], t_steps=(3,))
+        plan = sweep_lib.make_sweep_plan(
+            [base, FedDecConfig(mixing=identity_mixing(problem.n), h=4,
+                                k=2, gossip_impl="none")])
+        assert plan.gossip_impl == "dense"
+        assert list(plan.none_mask) == [False, True]
+
+    def test_stack_and_slice_roundtrip(self, problem, spec):
+        states = [flat_lib.init_flat_state(spec, jnp.zeros(problem.d),
+                                           problem.n) for _ in range(3)]
+        stacked = sweep_lib.stack_flat_states(states)
+        assert stacked.flat.shape == (3, problem.n, spec.d)
+        back = sweep_lib.slice_run(stacked, 1)
+        np.testing.assert_array_equal(np.asarray(back.flat),
+                                      np.asarray(states[1].flat))
+
+    def test_lambda2_batched_matches_loop(self):
+        graphs = [topo.geographic_graph(10, 0.5, seed=s) for s in range(4)]
+        ws = np.stack([topo.laplacian_weights(g) for g in graphs])
+        batched = topo.lambda2_hat_fixed_batched(ws)
+        for r, g in enumerate(graphs):
+            assert batched[r] == topo.lambda2_hat_fixed(
+                topo.laplacian_weights(g))
+
+    def test_sweep_cost_model_columns(self):
+        from repro.launch import analysis
+        m = analysis.sweep_cost_model(r_runs=10, n_agents=20, d=25,
+                                      t_steps=200, h=10, param_bytes=4)
+        assert m["dispatches_loop"] == 10 * 20
+        assert m["dispatches_sweep"] == 1
+        assert m["state_bytes"] == 10 * 20 * 25 * 4
+        assert m["step_stream_bytes"] == 2 * 10 * 20 * 25 * 4
+
+    def test_lattice_configs(self, problem):
+        from repro.configs.base import FedConfig
+        from repro.launch.steps import sweep_lattice_configs
+        base = _cfg(problem, h=2)
+        cfgs = sweep_lattice_configs(base, None, 3, "h")
+        assert [c.h for c in cfgs] == [2, 4, 8]
+        cfgs = sweep_lattice_configs(base, FedConfig(graph="geo0.8"),
+                                     3, "topology")
+        assert len({id(c.mixing.graph) for c in cfgs}) == 3
+        with pytest.raises(ValueError, match="random graph family"):
+            sweep_lattice_configs(base, FedConfig(graph="ring2"), 2,
+                                  "topology")
