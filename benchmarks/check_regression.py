@@ -35,7 +35,11 @@ evidence instead:
     (generous 1.5× floor so CPU-runner noise cannot flake the smoke job),
     every timed config passed its slice-equivalence check against the
     single-run flat engine, and the committed (non-smoke) baseline shows
-    the ≥5× acceptance speedup at the fig4 seed count.
+    the ≥5× acceptance speedup at the fig4 seed count.  The composed
+    sharded-sweep rows (R runs × s agent shards as one shard_map program)
+    are exact against analysis.sharded_sweep_cost_model, every row passed
+    its per-run slice check at 1e-5, and the per-device state/stream
+    bytes stay constant across the weak-scaling shard grid.
 
 Run (what ci.yml does):
   PYTHONPATH=src python -m benchmarks.check_regression \\
@@ -52,6 +56,7 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.core import sharded as sharded_lib
 from repro.core import topology as topo
 from repro.launch import analysis
 
@@ -71,6 +76,14 @@ REQUIRED_COMPRESS_KERNEL = {"impl", "n_agents", "d", "us_per_call",
 REQUIRED_SWEEP = {"r_runs", "n_agents", "d", "t_steps", "h", "us_per_call",
                   "loop_us_per_call", "speedup", "dispatches_loop",
                   "dispatches_sweep", "state_bytes", "step_stream_bytes"}
+REQUIRED_SHARDED_SWEEP = {"r_runs", "n_agents", "n_shards",
+                          "agents_per_shard", "d", "t_steps", "h",
+                          "us_per_call", "run_steps_per_s", "max_slice_err",
+                          "state_bytes_per_device",
+                          "step_stream_bytes_per_device",
+                          "dense_collective_bytes", "halo_collective_bytes",
+                          "num_halo_rounds", "dispatches_loop",
+                          "dispatches_sweep"}
 INT8_HALO_CEILING = 0.30  # acceptance: int8 halo bytes ≤ 0.30× f32 halo
 SWEEP_SMOKE_MARGIN = 1.5   # generous: committed baseline shows 6-17x
 SWEEP_ACCEPT_SPEEDUP = 5.0  # ISSUE acceptance at fig4 shapes (committed)
@@ -292,9 +305,54 @@ def check_sweep_doc(doc: dict, label: str) -> None:
         _require(acc["speedup_at_fig4_seeds"] >= SWEEP_ACCEPT_SPEEDUP,
                  f"{label}: committed baseline speedup at fig4 seeds "
                  f"{acc['speedup_at_fig4_seeds']} < {SWEEP_ACCEPT_SPEEDUP}")
+
+    # sharded-sweep composition: weak-scaling rows at a fixed agents/shard
+    # — exact cost-model columns, per-row slice equivalence, and per-device
+    # footprint that does NOT grow as agents are added with devices
+    srows = doc.get("sharded_rows", [])
+    _require(bool(srows), f"{label}: sharded-sweep rows vanished")
+    for row in srows:
+        missing = REQUIRED_SHARDED_SWEEP - set(row)
+        _require(not missing,
+                 f"{label}: sharded row missing {missing}: {row}")
+        _require(row["us_per_call"] > 0, f"{label}: non-positive time {row}")
+        _require(row["max_slice_err"] <= 1e-5,
+                 f"{label}: sharded-sweep slice error "
+                 f"{row['max_slice_err']} > 1e-5 at s={row['n_shards']}")
+        # bench_sweep contract: the weak-scaling graph is ring(n, k=1)
+        stats = sharded_lib.cut_edge_stats(
+            topo.ring_graph(row["n_agents"], k=1), row["n_shards"])
+        model = analysis.sharded_sweep_cost_model(
+            r_runs=row["r_runs"], n_agents=row["n_agents"], d=row["d"],
+            n_shards=row["n_shards"],
+            num_halo_rounds=stats["num_halo_rounds"],
+            t_steps=row["t_steps"], h=row["h"], param_bytes=4)
+        for col in ("state_bytes_per_device", "step_stream_bytes_per_device",
+                    "dense_collective_bytes", "halo_collective_bytes",
+                    "num_halo_rounds", "dispatches_loop",
+                    "dispatches_sweep"):
+            _require(row[col] == model[col],
+                     f"{label}: sharded s={row['n_shards']} {col} drifted: "
+                     f"row={row[col]} cost-model={model[col]}")
+    _require(any(r["n_shards"] > 1 for r in srows),
+             f"{label}: no multi-shard sharded-sweep rows — the composed "
+             f"lowering evidence vanished")
+    _require(len({r["agents_per_shard"] for r in srows}) == 1,
+             f"{label}: weak scaling broken — agents_per_shard varies")
+    for col in ("state_bytes_per_device", "step_stream_bytes_per_device"):
+        _require(len({r[col] for r in srows}) == 1,
+                 f"{label}: weak scaling broken — {col} varies across "
+                 f"shard counts: {[r[col] for r in srows]}")
+    sacc = acc["sharded_sweep"]
+    _require(bool(sacc["equivalence_checked_vs_flat"]),
+             f"{label}: sharded-sweep slice equivalence check vanished")
+    _require(sacc["max_slice_err"] <= 1e-5,
+             f"{label}: sharded-sweep acceptance slice error "
+             f"{sacc['max_slice_err']} > 1e-5")
     print(f"[guard] {label}: {len(rows)} rows OK, speedups "
           f"{[r['speedup'] for r in rows]}, max slice err "
-          f"{acc['max_slice_err']}")
+          f"{acc['max_slice_err']}; {len(srows)} sharded-sweep rows OK, "
+          f"max slice err {sacc['max_slice_err']:.1e}")
 
 
 def check_sweep_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:

@@ -5,6 +5,9 @@ Public surface:
   mixing     — the random mixing-matrix distribution 𝒲 (link failures)
   gossip     — the averaging step (dense / sparse CSR / ppermute schedule)
   server     — partial-participation aggregation + broadcast
+  engine     — the unified EngineSpec executor every engine lowers through
+               (one shared Algorithm-1 scan body + the sharded-sweep
+               composition: R runs × s agent shards in one program)
   feddec     — Algorithm 1 as a jitted, model-agnostic step (tree engine)
   flat       — Algorithm 1 on one contiguous (n_agents, D) buffer
                (the single-buffer hot loop: Pallas / sparse gossip)
@@ -16,8 +19,12 @@ Public surface:
   theory     — Theorem 1's constants and bound curve, executable
 """
 
-from repro.core import (fedavg, feddec, flat, gossip, mixing, server, sharded,
-                        sweep, theory, topology)
+from repro.core import (engine, fedavg, feddec, flat, gossip, mixing, server,
+                        sharded, sweep, theory, topology)
+from repro.core.engine import (EngineSpec, make_engine_round, make_engine_step,
+                               make_sharded_sweep_round,
+                               make_sharded_sweep_step, parse_engine_spec,
+                               resolve_gossip, shard_sweep_state)
 from repro.core.feddec import (FedDecConfig, FedState, init_state,
                                make_feddec_round, make_feddec_step)
 from repro.core.fedavg import FedAvgConfig, make_fedavg_round, make_fedavg_step
@@ -32,8 +39,11 @@ from repro.core.sweep import (SweepFedState, SweepPlan, init_sweep_state,
                               make_sweep_plan)
 
 __all__ = [
-    "topology", "mixing", "gossip", "server", "feddec", "flat", "sharded",
-    "sweep", "fedavg", "theory",
+    "topology", "mixing", "gossip", "server", "engine", "feddec", "flat",
+    "sharded", "sweep", "fedavg", "theory",
+    "EngineSpec", "parse_engine_spec", "make_engine_step",
+    "make_engine_round", "resolve_gossip", "make_sharded_sweep_step",
+    "make_sharded_sweep_round", "shard_sweep_state",
     "SweepPlan", "SweepFedState", "make_sweep_plan", "init_sweep_state",
     "make_sweep_feddec_step", "make_sweep_feddec_round",
     "FedDecConfig", "FedState", "init_state", "make_feddec_step",

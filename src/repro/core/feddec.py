@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compress as compress_lib
-from repro.core import gossip as gossip_lib
+from repro.core import engine
 from repro.core import server as server_lib
 from repro.core.mixing import MixingDistribution
 
@@ -94,7 +94,7 @@ class FedDecConfig:
     gossip_impl: str = "dense"
     gossip_compress: str = "none"
 
-    GOSSIP_IMPLS = ("dense", "none", "pallas", "sparse")
+    GOSSIP_IMPLS = engine.GOSSIP_IMPLS
 
     def __post_init__(self):
         if self.h < 1:
@@ -102,13 +102,8 @@ class FedDecConfig:
         if self.k < 1:
             raise ValueError(f"K must be >= 1, got {self.k}")
         compress_lib.parse_compress(self.gossip_compress)  # validate spec
-        if self.gossip_impl not in self.GOSSIP_IMPLS:
-            hint = (" (the mesh ppermute path is not a gossip_impl: build it "
-                    "with gossip.make_permute_gossip and pass gossip_fn=...)"
-                    if self.gossip_impl == "permute" else "")
-            raise ValueError(
-                f"unknown gossip_impl {self.gossip_impl!r}; choose from "
-                f"{'|'.join(self.GOSSIP_IMPLS)}{hint}")
+        # the same error every resolver raises (engine.unknown_gossip_impl)
+        engine.check_gossip_impl(self.gossip_impl)
 
     @property
     def n_agents(self) -> int:
@@ -147,33 +142,28 @@ def init_state(params_single: Any, n_agents: int,
 def resolve_tree_gossip(cfg: FedDecConfig) -> GossipFn:
     """gossip_impl → a (w, stacked-pytree) mixing fn for the tree engine.
 
-    (The flat engine resolves the same impl names to whole-buffer (n, D)
-    ops in repro.core.flat — one fused op instead of one per leaf.)
+    Compatibility shim over :func:`repro.core.engine.resolve_gossip` (the
+    flat engine resolves the same impl names to whole-buffer (n, D) ops —
+    one fused op instead of one per leaf).
     """
-    if cfg.gossip_impl == "dense":
-        return gossip_lib.gossip_mix_dense
-    if cfg.gossip_impl == "pallas":
-        from repro.kernels import ops as kernel_ops
-        return kernel_ops.gossip_mix_tree
-    if cfg.gossip_impl == "sparse":
-        return gossip_lib.make_sparse_gossip_tree(cfg.mixing.graph)
-    return lambda w, x: x  # 'none' — FedAvg fast path
+    return engine.resolve_gossip(cfg, "tree")
 
 
-def _build_step_body(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
-                     gossip_fn: GossipFn | None, optimizer):
-    """The un-jitted Algorithm-1 body shared by both executors."""
+def _tree_ops(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
+              gossip_fn: GossipFn | None, optimizer) -> engine.EngineOps:
+    """The tree engine's vtable for the shared Algorithm-1 body."""
     if gossip_fn is None:
-        gossip_fn = resolve_tree_gossip(cfg)
+        gossip_fn = engine.resolve_gossip(cfg, "tree")
     # leaf-wise compressed exchange with error feedback (repro.core.compress);
     # W = I (impl 'none') exchanges nothing, so there is nothing to compress
     compressor = compress_lib.parse_compress(cfg.gossip_compress) \
         if cfg.gossip_impl != "none" else None
+    ef_gossip = None
     if compressor is not None:
         ef_gossip = compress_lib.make_tree_ef_gossip(compressor, gossip_fn,
                                                      cfg.n_agents)
 
-    def local_update(params, grads, opt_state, eta):
+    def update_one(params, grads, opt_state, eta):
         if optimizer is None:  # Alg. 1 line 5: plain SGD
             new = jax.tree.map(
                 lambda p, g: p - eta.astype(p.dtype) * g.astype(p.dtype),
@@ -181,50 +171,65 @@ def _build_step_body(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
             return new, opt_state
         return optimizer.update(params, grads, opt_state, eta)
 
-    def step(state: FedState, batch: Any, key: jax.Array):
-        t = state.step
-        key_w, key_grad, key_server = jax.random.split(
-            jax.random.fold_in(key, t), 3)
-        if compressor is not None:
-            # derived (not split) so key_w/key_grad/key_server — and with
-            # them every uncompressed trajectory — stay bit-identical
-            key_c = jax.random.fold_in(key_w, 1)
-        eta = lr_fn(t)
-
-        # line 3: sample W^t
-        w = cfg.mixing.sample(key_w)
-
-        # lines 4–5: per-agent stochastic gradient + local update
+    def local_update(state: FedState, batch: Any, key_grad, eta):
         agent_keys = jax.random.split(key_grad, cfg.n_agents)
         losses, grads = jax.vmap(grad_fn)(state.params, batch, agent_keys)
-        x_half, new_opt = jax.vmap(local_update, in_axes=(0, 0, 0, None))(
+        x_half, new_opt = jax.vmap(update_one, in_axes=(0, 0, 0, None))(
             state.params, grads, state.opt_state, eta)
+        return losses, x_half, new_opt
 
-        # line 6: gossip averaging with neighbours (compressed payload + EF
-        # residual when gossip_compress != 'none')
-        if compressor is None:
-            x_next = gossip_fn(w, x_half)
-            new_res = state.residual
-        else:
-            x_next, new_res = ef_gossip(w, x_half, state.residual, key_c)
+    def server(key_server, x_next, t):
+        if not cfg.server_enabled:
+            return x_next
+        return jax.lax.cond(
+            (t + 1) % cfg.h == 0,
+            lambda x: server_lib.server_round(key_server, x, cfg.k),
+            lambda x: x,
+            x_next)
 
-        # lines 7–12: periodic server round (partial participation)
-        if cfg.server_enabled:
-            is_round = (t + 1) % cfg.h == 0
-            z_next = jax.lax.cond(
-                is_round,
-                lambda x: server_lib.server_round(key_server, x, cfg.k),
-                lambda x: x,
-                x_next)
-        else:
-            z_next = x_next
-
+    def finish(state, z_next, new_opt, new_res, t, losses, eta):
         new_state = FedState(params=z_next, step=t + 1, opt_state=new_opt,
                              residual=new_res)
-        metrics = {"loss": jnp.mean(losses), "eta": eta}
-        return new_state, metrics
+        return new_state, {"loss": jnp.mean(losses), "eta": eta}
 
-    return step
+    return engine.EngineOps(
+        get_step=lambda s: s.step,
+        derive_keys=lambda key, t: jax.random.split(
+            jax.random.fold_in(key, t), 3),
+        eta_fn=lr_fn,
+        sample_w=cfg.mixing.sample,
+        local_update=local_update,
+        gossip=gossip_fn,
+        get_residual=lambda s: s.residual,
+        server=server,
+        finish=finish,
+        fold_codec=None if compressor is None else (
+            lambda key_w: jax.random.fold_in(key_w, 1)),
+        ef_gossip=ef_gossip)
+
+
+def _build_step_body(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
+                     gossip_fn: GossipFn | None, optimizer):
+    """The un-jitted Algorithm-1 body shared by both executors."""
+    return engine.build_step_body(
+        _tree_ops(cfg, grad_fn, lr_fn, gossip_fn, optimizer))
+
+
+def _lower_tree_step(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn, *,
+                     gossip_fn=None, optimizer=None, donate: bool = True,
+                     jit: bool = True):
+    step = _build_step_body(cfg, grad_fn, lr_fn, gossip_fn, optimizer)
+    return engine.finalize_executor(step, donate=donate, jit=jit)
+
+
+def _lower_tree_round(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn, *,
+                      gossip_fn=None, optimizer=None, metrics_fn=None,
+                      donate: bool = True, jit: bool = True,
+                      unroll: int = 1):
+    step = _build_step_body(cfg, grad_fn, lr_fn, gossip_fn, optimizer)
+    round_fn = engine.make_scan_round(step, metrics_fn=metrics_fn,
+                                      unroll=unroll)
+    return engine.finalize_executor(round_fn, donate=donate, jit=jit)
 
 
 def make_feddec_step(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
@@ -250,11 +255,10 @@ def make_feddec_step(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
       step(state, batch, key) -> (new_state, metrics) where batch leaves have
       a leading agent dim and metrics = {'loss': mean loss, 'eta': η_t}.
     """
-    step = _build_step_body(cfg, grad_fn, lr_fn, gossip_fn, optimizer)
-    if not jit:
-        return step
-    donate_argnums = (0,) if donate else ()
-    return jax.jit(step, donate_argnums=donate_argnums)
+    espec = engine.parse_engine_spec(cfg, layout="tree")
+    return engine.make_engine_step(espec, grad_fn, lr_fn,
+                                   gossip_fn=gossip_fn, optimizer=optimizer,
+                                   donate=donate, jit=jit)
 
 
 def make_feddec_round(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
@@ -297,18 +301,8 @@ def make_feddec_round(cfg: FedDecConfig, grad_fn: GradFn, lr_fn: LrFn,
       ``batches`` has a leading fused-step dim H on top of the agent dim, and
       every metrics leaf is stacked to shape ``(H, ...)``.
     """
-    step = _build_step_body(cfg, grad_fn, lr_fn, gossip_fn, optimizer)
-
-    def round_fn(state: FedState, batches: Any, key: jax.Array):
-        def body(carry, batch):
-            new_state, metrics = step(carry, batch, key)
-            if metrics_fn is not None:
-                metrics = {**metrics, **metrics_fn(new_state)}
-            return new_state, metrics
-
-        return jax.lax.scan(body, state, batches, unroll=unroll)
-
-    if not jit:
-        return round_fn
-    donate_argnums = (0,) if donate else ()
-    return jax.jit(round_fn, donate_argnums=donate_argnums)
+    espec = engine.parse_engine_spec(cfg, layout="tree")
+    return engine.make_engine_round(espec, grad_fn, lr_fn,
+                                    gossip_fn=gossip_fn, optimizer=optimizer,
+                                    metrics_fn=metrics_fn, donate=donate,
+                                    jit=jit, unroll=unroll)

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compress as compress_lib
-from repro.core import gossip as gossip_lib
+from repro.core import engine
 from repro.core import server as server_lib
 from repro.core.feddec import FedDecConfig, FedState
 
@@ -263,35 +263,14 @@ def resolve_flat_gossip(cfg: FedDecConfig,
                         block_d: int | None = None) -> Callable:
     """gossip_impl → a whole-buffer (w, (n, D)) -> (n, D) mixing fn.
 
+    Compatibility shim over :func:`repro.core.engine.resolve_gossip`:
     'dense'  one einsum contraction;
     'pallas' one kernels.ops.gossip_mix call (W VMEM-resident, cast fused);
     'sparse' neighbour-only mix over the static edge structure — the
              edge-blocked Pallas kernel on TPU, ELL/CSR gather off it;
     'none'   identity (FedAvg).
     """
-    impl = cfg.gossip_impl
-    if impl == "none":
-        return lambda w, x: x
-    if impl == "dense":
-        def mix(w: jax.Array, x: jax.Array) -> jax.Array:
-            return jnp.einsum("ij,jd->id", w.astype(x.dtype), x,
-                              precision=jax.lax.Precision.HIGHEST)
-        return mix
-    if impl == "pallas":
-        from repro.kernels import ops as kernel_ops
-        if block_d is None:
-            return kernel_ops.gossip_mix
-        return lambda w, x: kernel_ops.gossip_mix(w, x, block_d=block_d)
-    if impl == "sparse":
-        from repro.kernels import ops as kernel_ops
-        graph = cfg.mixing.graph
-        max_deg = int(graph.degrees.max()) if graph.n else 0
-        # the kernel pads rows to max_deg (ELL), so it only makes sense in
-        # the low/even-degree regime; skewed graphs keep the CSR gather
-        if kernel_ops.on_tpu() and 0 < max_deg <= gossip_lib.ELL_MAX_DEG:
-            return kernel_ops.make_sparse_gossip_pallas(graph)
-        return gossip_lib.make_sparse_gossip(graph)
-    raise ValueError(f"unknown gossip_impl {impl!r}")  # pragma: no cover
+    return engine.resolve_gossip(cfg, "flat", block_d=block_d)
 
 
 # ---------------------------------------------------------------------------
@@ -299,73 +278,92 @@ def resolve_flat_gossip(cfg: FedDecConfig,
 # ---------------------------------------------------------------------------
 
 
-def _build_flat_step_body(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
-                          lr_fn: LrFn, gossip_fn, optimizer):
-    """Algorithm-1 body on the flat carry; unflattens only around grad_fn."""
+def _flat_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+              lr_fn: LrFn, gossip_fn, optimizer) -> engine.EngineOps:
+    """The flat engine's vtable for the shared Algorithm-1 body."""
     custom_gossip = gossip_fn is not None
     if gossip_fn is None:
-        gossip_fn = resolve_flat_gossip(cfg)
+        gossip_fn = engine.resolve_gossip(cfg, "flat")
     n_agents = cfg.n_agents
     # whole-buffer compressed exchange with error feedback; the int8 ×
     # 'pallas' combination runs the fused quantize→mix→dequantize kernel
     # (kernels/compress_mix.py) instead of three whole-buffer passes
     compressor = compress_lib.parse_compress(cfg.gossip_compress) \
         if cfg.gossip_impl != "none" else None
+    ef_gossip = None
     if compressor is not None:
         ef_gossip = compress_lib.make_flat_ef_gossip(
             compressor, gossip_fn, n_agents,
             fused_int8_pallas=cfg.gossip_impl == "pallas"
             and not custom_gossip)
 
-    def step(state: FlatFedState, batch: Any, key: jax.Array):
-        t = state.step
-        key_w, key_grad, key_server = jax.random.split(
-            jax.random.fold_in(key, t), 3)
-        if compressor is not None:
-            # derived (not split) so key_w/key_grad/key_server — and with
-            # them every uncompressed trajectory — stay bit-identical
-            key_c = jax.random.fold_in(key_w, 1)
-        eta = lr_fn(t)
-
-        # line 3: sample W^t
-        w = cfg.mixing.sample(key_w)
-
+    def local_update(state: FlatFedState, batch: Any, key_grad, eta):
         # lines 4–5: tree view for the model, flat buffer for the update
         params = spec.unflatten(state.flat)
         agent_keys = jax.random.split(key_grad, n_agents)
         losses, grads = jax.vmap(grad_fn)(params, batch, agent_keys)
         g_flat = spec.flatten(grads)
         if optimizer is None:  # plain SGD: one elementwise pass over (n, D)
-            x_half = state.flat - eta.astype(spec.dtype) * g_flat
-            new_opt = state.opt_state
-        else:
-            x_half, new_opt = optimizer.update(state.flat, g_flat,
-                                               state.opt_state, eta)
+            return losses, state.flat - eta.astype(spec.dtype) * g_flat, \
+                state.opt_state
+        x_half, new_opt = optimizer.update(state.flat, g_flat,
+                                           state.opt_state, eta)
+        return losses, x_half, new_opt
 
-        # line 6: gossip — one whole-buffer mixing op
-        if compressor is None:
-            x_next = gossip_fn(w, x_half)
-            new_res = state.residual
-        else:
-            x_next, new_res = ef_gossip(w, x_half, state.residual, key_c)
+    def server(key_server, x_next, t):
+        if not cfg.server_enabled:
+            return x_next
+        return jax.lax.cond(
+            (t + 1) % cfg.h == 0,
+            lambda x: server_lib.server_round_flat(key_server, x, cfg.k),
+            lambda x: x,
+            x_next)
 
-        # lines 7–12: periodic server round on the flat buffer
-        if cfg.server_enabled:
-            is_round = (t + 1) % cfg.h == 0
-            z_next = jax.lax.cond(
-                is_round,
-                lambda x: server_lib.server_round_flat(key_server, x, cfg.k),
-                lambda x: x,
-                x_next)
-        else:
-            z_next = x_next
-
+    def finish(state, z_next, new_opt, new_res, t, losses, eta):
         new_state = FlatFedState(flat=z_next, step=t + 1, opt_state=new_opt,
                                  residual=new_res)
-        metrics = {"loss": jnp.mean(losses), "eta": eta}
-        return new_state, metrics
+        return new_state, {"loss": jnp.mean(losses), "eta": eta}
 
-    return step
+    return engine.EngineOps(
+        get_step=lambda s: s.step,
+        derive_keys=lambda key, t: jax.random.split(
+            jax.random.fold_in(key, t), 3),
+        eta_fn=lr_fn,
+        sample_w=cfg.mixing.sample,
+        local_update=local_update,
+        gossip=gossip_fn,
+        get_residual=lambda s: s.residual,
+        server=server,
+        finish=finish,
+        fold_codec=None if compressor is None else (
+            lambda key_w: jax.random.fold_in(key_w, 1)),
+        ef_gossip=ef_gossip)
+
+
+def _build_flat_step_body(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+                          lr_fn: LrFn, gossip_fn, optimizer):
+    """Algorithm-1 body on the flat carry; unflattens only around grad_fn."""
+    return engine.build_step_body(
+        _flat_ops(cfg, spec, grad_fn, lr_fn, gossip_fn, optimizer))
+
+
+def _lower_flat_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+                     lr_fn: LrFn, *, gossip_fn=None, optimizer=None,
+                     donate: bool = True, jit: bool = True):
+    step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
+                                 optimizer)
+    return engine.finalize_executor(step, donate=donate, jit=jit)
+
+
+def _lower_flat_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+                      lr_fn: LrFn, *, gossip_fn=None, optimizer=None,
+                      metrics_fn=None, donate: bool = True, jit: bool = True,
+                      unroll: int = 1):
+    step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
+                                 optimizer)
+    round_fn = engine.make_scan_round(step, metrics_fn=metrics_fn,
+                                      unroll=unroll)
+    return engine.finalize_executor(round_fn, donate=donate, jit=jit)
 
 
 def make_flat_feddec_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
@@ -373,12 +371,10 @@ def make_flat_feddec_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                           donate: bool = True, jit: bool = True):
     """One-iteration flat executor: step(state, batch, key) like the tree
     engine's make_feddec_step, carrying FlatFedState."""
-    step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
-                                 optimizer)
-    if not jit:
-        return step
-    donate_argnums = (0,) if donate else ()
-    return jax.jit(step, donate_argnums=donate_argnums)
+    espec = engine.parse_engine_spec(cfg, layout="flat")
+    return engine.make_engine_step(espec, grad_fn, lr_fn, flat_spec=spec,
+                                   gossip_fn=gossip_fn, optimizer=optimizer,
+                                   donate=donate, jit=jit)
 
 
 def make_flat_feddec_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
@@ -397,19 +393,8 @@ def make_flat_feddec_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
     FlatFedState; use ``spec.unflatten(state.flat)`` inside it for
     tree-shaped diagnostics.
     """
-    step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
-                                 optimizer)
-
-    def round_fn(state: FlatFedState, batches: Any, key: jax.Array):
-        def body(carry, batch):
-            new_state, metrics = step(carry, batch, key)
-            if metrics_fn is not None:
-                metrics = {**metrics, **metrics_fn(new_state)}
-            return new_state, metrics
-
-        return jax.lax.scan(body, state, batches, unroll=unroll)
-
-    if not jit:
-        return round_fn
-    donate_argnums = (0,) if donate else ()
-    return jax.jit(round_fn, donate_argnums=donate_argnums)
+    espec = engine.parse_engine_spec(cfg, layout="flat")
+    return engine.make_engine_round(espec, grad_fn, lr_fn, flat_spec=spec,
+                                    gossip_fn=gossip_fn, optimizer=optimizer,
+                                    metrics_fn=metrics_fn, donate=donate,
+                                    jit=jit, unroll=unroll)

@@ -52,6 +52,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import compress as compress_lib
+from repro.core import engine
 from repro.core import server as server_lib
 from repro.core import topology as topo
 from repro.core.feddec import FedDecConfig
@@ -224,7 +225,7 @@ def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
             return y
         return mix
 
-    raise ValueError(f"unknown gossip_impl {impl!r}")  # pragma: no cover
+    raise engine.unknown_gossip_impl(impl)
 
 
 def _make_compressed_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
@@ -285,7 +286,7 @@ def _make_compressed_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
             return y
         return mix
 
-    raise ValueError(f"unknown gossip_impl {impl!r}")  # pragma: no cover
+    raise engine.unknown_gossip_impl(impl)
 
 
 def make_sharded_gossip(cfg: FedDecConfig, mesh: jax.sharding.Mesh,
@@ -441,11 +442,15 @@ def _encode_shard_block(compressor, key_c, n_agents: int, n_local: int,
     return payload, s_blk, u - s_blk
 
 
-def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
-                          lr_fn: LrFn, axis_name, n_shards: int,
-                          optimizer, block_d: int | None):
-    """Algorithm-1 body on one shard's row block; replicated scalars stay
-    bit-identical to repro.core.flat's step so trajectories match."""
+def _shard_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+               lr_fn: LrFn, axis_name, n_shards: int, optimizer,
+               block_d: int | None) -> engine.EngineOps:
+    """The sharded engine's vtable for the shared Algorithm-1 body.
+
+    The carry is the per-shard tuple ``(x_blk, res_blk, opt_blk, t)``;
+    replicated scalars stay bit-identical to repro.core.flat's step so
+    trajectories match.
+    """
     n_agents = cfg.n_agents
     n_local = n_agents // n_shards
     compressor = compress_lib.parse_compress(cfg.gossip_compress) \
@@ -468,59 +473,78 @@ def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
             z = jax.lax.psum(z, axis_name)
         return jnp.broadcast_to(z[None], x_blk.shape)
 
-    def step(x_blk, res_blk, opt_blk, t, batch_blk, key):
-        me = jax.lax.axis_index(axis_name)
-        key_w, key_grad, key_server = jax.random.split(
-            jax.random.fold_in(key, t), 3)
-        if compressor is not None:
-            # same derivation as the flat/tree engines: key_c is folded off
-            # key_w, never split, so uncompressed streams are untouched
-            key_c = jax.random.fold_in(key_w, 1)
-        eta = lr_fn(t)
-
-        # line 3: sample W^t (replicated compute — identical on every shard)
-        w = cfg.mixing.sample(key_w)
-
+    def local_update(state, batch_blk, key_grad, eta):
         # lines 4–5: this shard's agents only; the full per-agent key array
         # is derived replicated and row-sliced so agent i's key matches the
         # single-device engine exactly
+        x_blk, _, opt_blk, _ = state
+        me = jax.lax.axis_index(axis_name)
         params = spec.unflatten(x_blk)
         agent_keys = _slice_agent_keys(
             jax.random.split(key_grad, n_agents), me * n_local, n_local)
         losses, grads = jax.vmap(grad_fn)(params, batch_blk, agent_keys)
         g_blk = spec.flatten(grads)
         if optimizer is None:
-            x_half = x_blk - eta.astype(spec.dtype) * g_blk
-            new_opt = opt_blk
-        else:
-            x_half, new_opt = optimizer.update(x_blk, g_blk, opt_blk, eta)
+            return losses, x_blk - eta.astype(spec.dtype) * g_blk, opt_blk
+        x_half, new_opt = optimizer.update(x_blk, g_blk, opt_blk, eta)
+        return losses, x_half, new_opt
 
-        # line 6: gossip — per-shard contraction + the impl's collective;
-        # compressed, the halo moves the encoded payload
-        if compressor is None:
-            x_next = mixer(w, x_half, me)
-            new_res = res_blk
-        else:
-            payload, s_blk, new_res = _encode_shard_block(
-                compressor, key_c, n_agents, n_local, me, x_half, res_blk)
-            x_next = cmixer(w, x_half, s_blk, payload, me)
+    def gossip(w, x_half):
+        return mixer(w, x_half, jax.lax.axis_index(axis_name))
 
-        # lines 7–12: periodic server round
-        if cfg.server_enabled:
-            is_round = (t + 1) % cfg.h == 0
-            z_next = jax.lax.cond(
-                is_round,
-                lambda x: shard_server_round(key_server, x, me),
-                lambda x: x,
-                x_next)
-        else:
-            z_next = x_next
+    def ef_gossip(w, x_half, res_blk, key_c):
+        # the halo moves the encoded payload
+        me = jax.lax.axis_index(axis_name)
+        payload, s_blk, new_res = _encode_shard_block(
+            compressor, key_c, n_agents, n_local, me, x_half, res_blk)
+        return cmixer(w, x_half, s_blk, payload, me), new_res
 
+    def server(key_server, x_next, t):
+        if not cfg.server_enabled:
+            return x_next
+        me = jax.lax.axis_index(axis_name)
+        return jax.lax.cond(
+            (t + 1) % cfg.h == 0,
+            lambda x: shard_server_round(key_server, x, me),
+            lambda x: x,
+            x_next)
+
+    def finish(state, z_next, new_opt, new_res, t, losses, eta):
         loss = jnp.sum(losses)
         if n_shards > 1:
             loss = jax.lax.psum(loss, axis_name)
         metrics = {"loss": loss / n_agents, "eta": eta}
-        return z_next, new_res, new_opt, metrics
+        return (z_next, new_res, new_opt, t + 1), metrics
+
+    return engine.EngineOps(
+        get_step=lambda s: s[3],
+        derive_keys=lambda key, t: jax.random.split(
+            jax.random.fold_in(key, t), 3),
+        eta_fn=lr_fn,
+        sample_w=cfg.mixing.sample,
+        local_update=local_update,
+        gossip=(lambda w, x: x) if compressor is not None else gossip,
+        get_residual=lambda s: s[1],
+        server=server,
+        finish=finish,
+        fold_codec=None if compressor is None else (
+            lambda key_w: jax.random.fold_in(key_w, 1)),
+        ef_gossip=None if compressor is None else ef_gossip)
+
+
+def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
+                          lr_fn: LrFn, axis_name, n_shards: int,
+                          optimizer, block_d: int | None):
+    """step(x_blk, res_blk, opt_blk, t, batch_blk, key) over the shared
+    body (t advances in the carry; callers thread it)."""
+    body = engine.build_step_body(
+        _shard_ops(cfg, spec, grad_fn, lr_fn, axis_name, n_shards,
+                   optimizer, block_d))
+
+    def step(x_blk, res_blk, opt_blk, t, batch_blk, key):
+        (z, new_res, new_opt, _), metrics = body(
+            (x_blk, res_blk, opt_blk, t), batch_blk, key)
+        return z, new_res, new_opt, metrics
 
     return step
 
@@ -542,18 +566,12 @@ def _validate(cfg, mesh, axis_name):
     return n_shards
 
 
-def make_sharded_feddec_step(cfg: FedDecConfig, spec: FlatSpec,
-                             grad_fn: GradFn, lr_fn: LrFn,
-                             mesh: jax.sharding.Mesh, *,
-                             axis_name: str | tuple[str, ...] = "agents",
-                             optimizer=None, block_d: int | None = None,
-                             donate: bool = True, jit: bool = True):
-    """One-iteration sharded executor: step(state, batch, key) carrying a
-    FlatFedState whose buffer rows are block-sharded over ``axis_name``.
-
-    Same contract as repro.core.flat.make_flat_feddec_step; batch leaves
-    keep the leading agent dim and are consumed sharded ``P(axis_name)``.
-    """
+def _lower_sharded_step(cfg: FedDecConfig, spec: FlatSpec,
+                        grad_fn: GradFn, lr_fn: LrFn,
+                        mesh: jax.sharding.Mesh, *,
+                        axis_name: str | tuple[str, ...] = "agents",
+                        optimizer=None, block_d: int | None = None,
+                        donate: bool = True, jit: bool = True):
     ax = _resolve_axis(mesh, axis_name)
     n_shards = _validate(cfg, mesh, ax)
     per_shard = _build_per_shard_step(cfg, spec, grad_fn, lr_fn, ax,
@@ -574,27 +592,36 @@ def make_sharded_feddec_step(cfg: FedDecConfig, spec: FlatSpec,
         return FlatFedState(flat=flat, step=state.step + 1,
                             opt_state=opt, residual=res), metrics
 
-    if not jit:
-        return step
-    return jax.jit(step, donate_argnums=(0,) if donate else ())
+    return engine.finalize_executor(step, donate=donate, jit=jit)
 
 
-def make_sharded_feddec_round(cfg: FedDecConfig, spec: FlatSpec,
-                              grad_fn: GradFn, lr_fn: LrFn,
-                              mesh: jax.sharding.Mesh, *,
-                              axis_name: str | tuple[str, ...] = "agents",
-                              optimizer=None, block_d: int | None = None,
-                              donate: bool = True, jit: bool = True,
-                              unroll: int = 1):
-    """The fused sharded executor: H steps per compiled call, one shard_map.
+def make_sharded_feddec_step(cfg: FedDecConfig, spec: FlatSpec,
+                             grad_fn: GradFn, lr_fn: LrFn,
+                             mesh: jax.sharding.Mesh, *,
+                             axis_name: str | tuple[str, ...] = "agents",
+                             optimizer=None, block_d: int | None = None,
+                             donate: bool = True, jit: bool = True):
+    """One-iteration sharded executor: step(state, batch, key) carrying a
+    FlatFedState whose buffer rows are block-sharded over ``axis_name``.
 
-    Same contract as repro.core.flat.make_flat_feddec_round — batches carry
-    a leading fused-step dim (consumed ``P(None, axis_name)``), W^t resamples
-    per scanned step, metrics stack to (H,) — but the whole ``lax.scan`` runs
-    *inside* a single ``shard_map``, so each device scans its own row block
-    and the per-step collectives (psum_scatter / ppermute halo / server psum)
-    are the only cross-device traffic in the round.
+    Same contract as repro.core.flat.make_flat_feddec_step; batch leaves
+    keep the leading agent dim and are consumed sharded ``P(axis_name)``.
     """
+    espec = engine.parse_engine_spec(
+        cfg, layout="flat", n_shards=agent_axis_size(mesh, axis_name),
+        axis_name=axis_name)
+    return engine.make_engine_step(espec, grad_fn, lr_fn, flat_spec=spec,
+                                   mesh=mesh, optimizer=optimizer,
+                                   block_d=block_d, donate=donate, jit=jit)
+
+
+def _lower_sharded_round(cfg: FedDecConfig, spec: FlatSpec,
+                         grad_fn: GradFn, lr_fn: LrFn,
+                         mesh: jax.sharding.Mesh, *,
+                         axis_name: str | tuple[str, ...] = "agents",
+                         optimizer=None, block_d: int | None = None,
+                         donate: bool = True, jit: bool = True,
+                         unroll: int = 1):
     ax = _resolve_axis(mesh, axis_name)
     n_shards = _validate(cfg, mesh, ax)
     per_shard = _build_per_shard_step(cfg, spec, grad_fn, lr_fn, ax,
@@ -627,6 +654,29 @@ def make_sharded_feddec_round(cfg: FedDecConfig, spec: FlatSpec,
         return FlatFedState(flat=flat, step=t, opt_state=opt,
                             residual=res), metrics
 
-    if not jit:
-        return round_fn
-    return jax.jit(round_fn, donate_argnums=(0,) if donate else ())
+    return engine.finalize_executor(round_fn, donate=donate, jit=jit)
+
+
+def make_sharded_feddec_round(cfg: FedDecConfig, spec: FlatSpec,
+                              grad_fn: GradFn, lr_fn: LrFn,
+                              mesh: jax.sharding.Mesh, *,
+                              axis_name: str | tuple[str, ...] = "agents",
+                              optimizer=None, block_d: int | None = None,
+                              donate: bool = True, jit: bool = True,
+                              unroll: int = 1):
+    """The fused sharded executor: H steps per compiled call, one shard_map.
+
+    Same contract as repro.core.flat.make_flat_feddec_round — batches carry
+    a leading fused-step dim (consumed ``P(None, axis_name)``), W^t resamples
+    per scanned step, metrics stack to (H,) — but the whole ``lax.scan`` runs
+    *inside* a single ``shard_map``, so each device scans its own row block
+    and the per-step collectives (psum_scatter / ppermute halo / server psum)
+    are the only cross-device traffic in the round.
+    """
+    espec = engine.parse_engine_spec(
+        cfg, layout="flat", n_shards=agent_axis_size(mesh, axis_name),
+        axis_name=axis_name)
+    return engine.make_engine_round(espec, grad_fn, lr_fn, flat_spec=spec,
+                                    mesh=mesh, optimizer=optimizer,
+                                    block_d=block_d, donate=donate, jit=jit,
+                                    unroll=unroll)

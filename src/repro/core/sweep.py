@@ -56,7 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compress as compress_lib
-from repro.core import gossip as gossip_lib
+from repro.core import engine
 from repro.core import mixing as mixing_lib
 from repro.core import server as server_lib
 from repro.core.feddec import FedDecConfig
@@ -148,7 +148,10 @@ def make_sweep_plan(configs, t_steps=None) -> SweepPlan:
     if len(impls) > 1:
         raise ValueError(f"a lattice may mix 'none' (FedAvg) with at most "
                          f"one other gossip_impl, got {sorted(impls)}")
-    impl = impls.pop() if impls else "none"
+    # membership too, not just uniqueness: a config forged around the
+    # FedDecConfig constructor must fail here with the SAME canonical
+    # error every other entry point raises
+    impl = engine.check_gossip_impl(impls.pop()) if impls else "none"
 
     r = len(configs)
     h = np.asarray([c.h for c in configs], dtype=np.int32)
@@ -263,6 +266,7 @@ def resolve_sweep_gossip(plan: SweepPlan,
     The batched mirror of ``flat.resolve_flat_gossip`` — same impl names,
     one launch for all R runs:
 
+    Compatibility shim over :func:`repro.core.engine.resolve_gossip`:
     'dense'  one batched einsum contraction;
     'pallas' one kernels.ops.gossip_mix_batched call (run axis = leading
              grid dim, per-run W VMEM-resident, cast fused);
@@ -270,29 +274,7 @@ def resolve_sweep_gossip(plan: SweepPlan,
              (edge-blocked batched Pallas kernel on TPU, XLA gather off it);
     'none'   identity (an all-FedAvg lattice).
     """
-    impl = plan.gossip_impl
-    if impl == "none":
-        return lambda w, x: x
-    if impl == "dense":
-        def mix(w: jax.Array, x: jax.Array) -> jax.Array:
-            return jnp.einsum("rij,rjd->rid", w.astype(x.dtype), x,
-                              precision=jax.lax.Precision.HIGHEST)
-        return mix
-    if impl == "pallas":
-        from repro.kernels import ops as kernel_ops
-        if block_d is None:
-            return kernel_ops.gossip_mix_batched
-        return lambda w, x: kernel_ops.gossip_mix_batched(w, x,
-                                                          block_d=block_d)
-    if impl == "sparse":
-        from repro.kernels import ops as kernel_ops
-        graphs = plan.graphs
-        max_deg = gossip_lib.lattice_max_degree(graphs)
-        if kernel_ops.on_tpu() and 0 < max_deg <= gossip_lib.ELL_MAX_DEG:
-            kw = {} if block_d is None else {"block_d": block_d}
-            return kernel_ops.make_sparse_gossip_batched_pallas(graphs, **kw)
-        return gossip_lib.make_sparse_gossip_batched(graphs)
-    raise ValueError(f"unknown gossip_impl {impl!r}")  # pragma: no cover
+    return engine.resolve_gossip(plan, "sweep", block_d=block_d)
 
 
 # ---------------------------------------------------------------------------
@@ -300,9 +282,10 @@ def resolve_sweep_gossip(plan: SweepPlan,
 # ---------------------------------------------------------------------------
 
 
-def _build_sweep_step_body(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
-                           lr_fn: LrFn, optimizer, block_d=None):
-    """One batched step: every Algorithm-1 line as one whole-lattice op.
+def _sweep_ops(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn, lr_fn: LrFn,
+               optimizer, block_d=None) -> engine.EngineOps:
+    """The lattice engine's vtable: every Algorithm-1 line as one
+    whole-lattice op.
 
     The run axis composes with the flat engine's whole-buffer layout: local
     updates treat (R, n) as one flattened agent axis of R·n rows; gossip /
@@ -312,7 +295,7 @@ def _build_sweep_step_body(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
     """
     r_runs, n = plan.r_runs, plan.n_agents
     sample_w = make_sweep_w_sampler(plan)
-    gossip_fn = resolve_sweep_gossip(plan, block_d=block_d)
+    gossip_fn = engine.resolve_gossip(plan, "sweep", block_d=block_d)
     h_arr = jnp.asarray(plan.h)
     t_max = None if plan.t_steps is None else jnp.asarray(plan.t_steps)
     compressor = compress_lib.parse_compress(plan.gossip_compress) \
@@ -323,16 +306,12 @@ def _build_sweep_step_body(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
     none3 = jnp.asarray(plan.none_mask)[:, None, None] \
         if compressor is not None and plan.none_mask.any() else None
 
-    def step(state: SweepFedState, batch: Any, keys: jax.Array):
-        t = state.step                                  # (R,)
+    def derive_keys(keys, t):
         k3 = jax.vmap(lambda k, tt: jax.random.split(
             jax.random.fold_in(k, tt), 3))(keys, t)
-        key_w, key_grad, key_server = k3[:, 0], k3[:, 1], k3[:, 2]
-        eta = jnp.broadcast_to(jnp.asarray(lr_fn(t)), (r_runs,))
+        return k3[:, 0], k3[:, 1], k3[:, 2]
 
-        # line 3: sample every run's W^t
-        w = sample_w(key_w)
-
+    def local_update(state: SweepFedState, batch: Any, key_grad, eta):
         # lines 4–5: tree view over the flattened (R·n) agent axis
         flat3 = state.flat
         params = spec.unflatten(flat3.reshape(r_runs * n, spec.d))
@@ -349,43 +328,41 @@ def _build_sweep_step_body(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
         else:
             x_half, new_opt = jax.vmap(optimizer.update)(
                 flat3, g3, state.opt_state, eta)
+        return losses, x_half, new_opt
 
-        # line 6: gossip — one whole-lattice mixing op
-        if compressor is None:
-            x_next = gossip_fn(w, x_half)
-            new_res = state.residual
+    def ef_gossip(w, x_half, residual, key_c):
+        u = x_half + residual
+        if compressor.needs_key:
+            enc_keys = jax.vmap(lambda k: jax.random.split(k, n))(key_c)
+            payload = jax.vmap(compressor.encode)(enc_keys, u)
         else:
-            key_c = jax.vmap(lambda k: jax.random.fold_in(k, 1))(key_w)
-            u = x_half + state.residual
-            if compressor.needs_key:
-                enc_keys = jax.vmap(lambda k: jax.random.split(k, n))(key_c)
-                payload = jax.vmap(compressor.encode)(enc_keys, u)
-            else:
-                payload = jax.vmap(
-                    lambda uu: compressor.encode(None, uu))(u)
-            s = jax.vmap(lambda p_: compressor.decode(p_, x_half.dtype,
-                                                      spec.d))(payload)
-            diag = jnp.diagonal(w, axis1=1, axis2=2) \
-                .astype(x_half.dtype)[:, :, None]
-            x_next = gossip_fn(w, s) + diag * (x_half - s)
-            new_res = u - s
-            if none3 is not None:
-                x_next = jnp.where(none3, x_half, x_next)
-                new_res = jnp.where(none3, state.residual, new_res)
+            payload = jax.vmap(
+                lambda uu: compressor.encode(None, uu))(u)
+        s = jax.vmap(lambda p_: compressor.decode(p_, x_half.dtype,
+                                                  spec.d))(payload)
+        diag = jnp.diagonal(w, axis1=1, axis2=2) \
+            .astype(x_half.dtype)[:, :, None]
+        x_next = gossip_fn(w, s) + diag * (x_half - s)
+        new_res = u - s
+        if none3 is not None:
+            x_next = jnp.where(none3, x_half, x_next)
+            new_res = jnp.where(none3, residual, new_res)
+        return x_next, new_res
 
+    def server(key_server, x_next, t):
         # lines 7–12: per-run periodic server round ((t+1) % h_r == 0)
-        if plan.server_enabled:
-            counts = jax.vmap(
-                lambda k: server_lib.sample_participants(k, n, plan.k))(
-                key_server)
-            weights = server_lib.participant_weights(counts, plan.k)
-            z_all = jax.vmap(server_lib.aggregate_and_broadcast_flat)(
-                weights, x_next)
-            is_round = ((t + 1) % h_arr == 0)[:, None, None]
-            z_next = jnp.where(is_round, z_all, x_next)
-        else:
-            z_next = x_next
+        if not plan.server_enabled:
+            return x_next
+        counts = jax.vmap(
+            lambda k: server_lib.sample_participants(k, n, plan.k))(
+            key_server)
+        weights = server_lib.participant_weights(counts, plan.k)
+        z_all = jax.vmap(server_lib.aggregate_and_broadcast_flat)(
+            weights, x_next)
+        is_round = ((t + 1) % h_arr == 0)[:, None, None]
+        return jnp.where(is_round, z_all, x_next)
 
+    def finish(state, z_next, new_opt, new_res, t, losses, eta):
         new_state = SweepFedState(flat=z_next, step=t + 1,
                                   opt_state=new_opt, residual=new_res)
         metrics = {"loss": jnp.mean(losses, axis=1), "eta": eta}
@@ -393,6 +370,7 @@ def _build_sweep_step_body(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
             # heterogeneous budgets: finished runs freeze (state preserved
             # bitwise — every carried leaf has a leading run axis)
             active = t <= t_max
+
             def keep(new, old):
                 m = active.reshape((r_runs,) + (1,) * (new.ndim - 1))
                 return jnp.where(m, new, old)
@@ -400,7 +378,47 @@ def _build_sweep_step_body(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
             metrics["active"] = active
         return new_state, metrics
 
-    return step
+    return engine.EngineOps(
+        get_step=lambda s: s.step,
+        derive_keys=derive_keys,
+        eta_fn=lambda t: jnp.broadcast_to(jnp.asarray(lr_fn(t)), (r_runs,)),
+        sample_w=sample_w,
+        local_update=local_update,
+        gossip=gossip_fn,
+        get_residual=lambda s: s.residual,
+        server=server,
+        finish=finish,
+        fold_codec=None if compressor is None else (
+            lambda key_w: jax.vmap(
+                lambda k: jax.random.fold_in(k, 1))(key_w)),
+        ef_gossip=None if compressor is None else ef_gossip)
+
+
+def _build_sweep_step_body(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
+                           lr_fn: LrFn, optimizer, block_d=None):
+    """One batched step: the shared Algorithm-1 body over the lattice ops."""
+    return engine.build_step_body(
+        _sweep_ops(plan, spec, grad_fn, lr_fn, optimizer, block_d=block_d))
+
+
+def _lower_sweep_step(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
+                      lr_fn: LrFn, *, optimizer=None, block_d=None,
+                      donate: bool = True, jit: bool = True):
+    step = _build_sweep_step_body(plan, spec, grad_fn, lr_fn, optimizer,
+                                  block_d=block_d)
+    return engine.finalize_executor(step, donate=donate, jit=jit)
+
+
+def _lower_sweep_round(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
+                       lr_fn: LrFn, *, optimizer=None, metrics_fn=None,
+                       block_d=None, donate: bool = True, jit: bool = True,
+                       unroll: int = 1, per_step_keys: bool = False):
+    step = _build_sweep_step_body(plan, spec, grad_fn, lr_fn, optimizer,
+                                  block_d=block_d)
+    round_fn = engine.make_scan_round(step, metrics_fn=metrics_fn,
+                                      per_step_keys=per_step_keys,
+                                      unroll=unroll)
+    return engine.finalize_executor(round_fn, donate=donate, jit=jit)
 
 
 def make_sweep_feddec_step(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
@@ -409,12 +427,12 @@ def make_sweep_feddec_step(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
     """One-iteration batched executor: step(state, batch, keys) advances all
     R runs by one Algorithm-1 step.  ``batch`` leaves are (R, n, ...);
     ``keys`` is a (R,) key array (run r's key = the single-run engine's)."""
-    step = _build_sweep_step_body(plan, spec, grad_fn, lr_fn, optimizer,
-                                  block_d=block_d)
-    if not jit:
-        return step
-    donate_argnums = (0,) if donate else ()
-    return jax.jit(step, donate_argnums=donate_argnums)
+    espec = engine.parse_engine_spec(
+        plan.configs, layout="flat", force_run_axis=True,
+        t_steps=None if plan.t_steps is None else tuple(plan.t_steps))
+    return engine.make_engine_step(espec, grad_fn, lr_fn, flat_spec=spec,
+                                   optimizer=optimizer, block_d=block_d,
+                                   donate=donate, jit=jit)
 
 
 def make_sweep_feddec_round(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
@@ -436,21 +454,11 @@ def make_sweep_feddec_round(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
     With ``plan.t_steps`` set, runs past their budget are masked: their
     carried state is bit-preserved while longer runs continue.
     """
-    step = _build_sweep_step_body(plan, spec, grad_fn, lr_fn, optimizer,
-                                  block_d=block_d)
-
-    def round_fn(state: SweepFedState, batches: Any, keys: jax.Array):
-        def body(carry, xs):
-            batch, kk = xs if per_step_keys else (xs, keys)
-            new_state, metrics = step(carry, batch, kk)
-            if metrics_fn is not None:
-                metrics = {**metrics, **metrics_fn(new_state)}
-            return new_state, metrics
-
-        xs = (batches, keys) if per_step_keys else batches
-        return jax.lax.scan(body, state, xs, unroll=unroll)
-
-    if not jit:
-        return round_fn
-    donate_argnums = (0,) if donate else ()
-    return jax.jit(round_fn, donate_argnums=donate_argnums)
+    espec = engine.parse_engine_spec(
+        plan.configs, layout="flat", force_run_axis=True,
+        t_steps=None if plan.t_steps is None else tuple(plan.t_steps))
+    return engine.make_engine_round(espec, grad_fn, lr_fn, flat_spec=spec,
+                                    optimizer=optimizer,
+                                    metrics_fn=metrics_fn, block_d=block_d,
+                                    donate=donate, jit=jit, unroll=unroll,
+                                    per_step_keys=per_step_keys)

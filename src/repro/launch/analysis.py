@@ -24,7 +24,8 @@ from repro.launch import hlo_analysis
 __all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "CollectiveStats",
            "parse_collectives", "roofline_terms", "RooflineReport",
            "dtype_bytes", "gossip_cost_model", "sharded_gossip_cost_model",
-           "sweep_cost_model", "compress_row_bytes",
+           "sweep_cost_model", "sharded_sweep_cost_model",
+           "compress_row_bytes",
            "compressed_halo_cost_model", "COMPRESS_SCHEMES", "hlo_analysis"]
 
 PEAK_FLOPS = 197e12   # bf16 per chip
@@ -274,6 +275,68 @@ def sweep_cost_model(*, r_runs: int, n_agents: int, d: int,
         "r_runs": r_runs,
         "state_bytes": state_bytes,
         "step_stream_bytes": step_stream,
+        "dispatches_loop": disp_loop,
+        "dispatches_sweep": 1,
+        "dispatch_overhead_us_saved": (disp_loop - 1) * dispatch_us,
+    }
+    if t_steps is not None:
+        out["t_steps"] = int(t_steps)
+    return out
+
+
+def sharded_sweep_cost_model(*, r_runs: int, n_agents: int, d: int,
+                             n_shards: int, num_halo_rounds: int,
+                             t_steps: int | None = None, h: int | None = None,
+                             param_bytes: int = 4, opt_slots: int = 0,
+                             residual: bool = False,
+                             dispatch_us: float = 5.0) -> dict:
+    """Analytic cost of the composed sharded-sweep engine (R runs × s shards).
+
+    The composition (repro.core.engine.make_sharded_sweep_round) lowers the
+    whole (R, n_agents, D) lattice with the agent dim block-sharded over
+    ``n_shards`` devices: each device carries an (R, n_local, D) block and
+    the entire T-step scan runs inside one shard_map — one program for the
+    full figure lattice.  Relative to the unsharded sweep engine
+    (``sweep_cost_model``) every per-device term shrinks by n_shards and a
+    collective term appears, which splits by gossip impl exactly as in
+    ``sharded_gossip_cost_model`` but with every payload R× wider (the run
+    axis rides along in each psum_scatter / ppermute block):
+
+      * ``state_bytes_per_device``        — R·n_local·D·b·slots, the
+        resident lattice block (slots = 1 + opt_slots + residual);
+      * ``step_stream_bytes_per_device``  — 2·R·n_local·D·b, one
+        read+write pass over the block per step (the local-update floor);
+      * ``dense_collective_bytes``        — (s−1)/s·R·n·D·b per device per
+        gossip step (the ring psum_scatter over the R-wide partials);
+      * ``halo_collective_bytes``         — rounds·R·n_local·D·b per device
+        per gossip step (the union-quotient ppermute schedule: the halo
+        count comes from the OR of the R run graphs, so it is the max over
+        runs, not the sum);
+      * ``dispatches_loop``               — R·(T/H) engine calls for the
+        per-run loop vs ``dispatches_sweep`` = 1 (the whole lattice is one
+        dispatch even sharded).
+    """
+    n, dd, b, s = n_agents, float(d), param_bytes, n_shards
+    if n % s:
+        raise ValueError(f"n_agents={n} must be divisible by "
+                         f"n_shards={s}")
+    n_local = n // s
+    slots = 1 + opt_slots + (1 if residual else 0)
+    state_blk = float(r_runs * n_local * dd * b * slots)
+    step_stream = 2.0 * r_runs * n_local * dd * b
+    dense_coll = (s - 1) / s * r_runs * n * dd * b if s > 1 else 0.0
+    halo_coll = num_halo_rounds * r_runs * n_local * dd * b if s > 1 else 0.0
+    n_windows = max(1, t_steps // h) if t_steps and h else 1
+    disp_loop = r_runs * n_windows
+    out = {
+        "r_runs": r_runs,
+        "n_shards": s,
+        "n_local": n_local,
+        "state_bytes_per_device": state_blk,
+        "step_stream_bytes_per_device": step_stream,
+        "dense_collective_bytes": dense_coll,
+        "halo_collective_bytes": halo_coll,
+        "num_halo_rounds": int(num_halo_rounds),
         "dispatches_loop": disp_loop,
         "dispatches_sweep": 1,
         "dispatch_overhead_us_saved": (disp_loop - 1) * dispatch_us,

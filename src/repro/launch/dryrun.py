@@ -193,6 +193,16 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                     r_runs=sweep_runs, n_agents=gm["n_agents"], d=gm["d"],
                     param_bytes=gm["param_bytes"],
                     residual=gossip_compress != "none")
+                sh = gm.get("sharded", {})
+                if mesh_agents and "num_halo_rounds" in sh:
+                    # the composed R runs × s shards lowering
+                    rec["sharded_sweep_cost_model"] = \
+                        analysis.sharded_sweep_cost_model(
+                            r_runs=sweep_runs, n_agents=gm["n_agents"],
+                            d=gm["d"], n_shards=mesh_agents,
+                            num_halo_rounds=sh["num_halo_rounds"],
+                            param_bytes=gm["param_bytes"],
+                            residual=gossip_compress != "none")
         print(f"[ok]   {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s")
         print(f"       memory_analysis: {mem}")
         print(f"       hlo(loop-aware): {hlo.summary()}")
@@ -214,6 +224,15 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                   f"{sm['step_stream_bytes'] / 1e9:.2f} GB, "
                   f"1 dispatch/round vs {sm['dispatches_loop']} "
                   f"in the per-run loop")
+            ssm = rec.get("sharded_sweep_cost_model")
+            if ssm:
+                print(f"       sharded sweep R={ssm['r_runs']} × "
+                      f"s={ssm['n_shards']}: "
+                      f"{ssm['state_bytes_per_device'] / 1e6:.2f} MB/device, "
+                      f"dense coll "
+                      f"{ssm['dense_collective_bytes'] / 1e6:.2f} MB, halo "
+                      f"{ssm['halo_collective_bytes'] / 1e6:.2f} MB "
+                      f"({ssm['num_halo_rounds']} rounds)")
         if shape.kind == "train" and mesh_agents \
                 and "sharded" in rec.get("gossip_cost_model", {}):
             sh = rec["gossip_cost_model"]["sharded"]
@@ -278,7 +297,9 @@ def main() -> None:
                         "(R, n_agents, D) lattice buffer and the record "
                         "gains the sweep memory/bytes prediction "
                         "(analysis.sweep_cost_model).  Needs --state-layout "
-                        "flat and --fused H")
+                        "flat (or sharded for the composed R×s lowering, "
+                        "which with --mesh-agents N also records "
+                        "analysis.sharded_sweep_cost_model) and --fused H")
     p.add_argument("--sweep-axis", default="seed",
                    choices=["seed", "h", "topology"],
                    help="lattice axis for --sweep-runs (see "

@@ -27,8 +27,9 @@ from jax.sharding import PartitionSpec as P
 from repro import sharding as shd
 from repro.configs.base import ArchConfig, FedConfig
 from repro.configs.shapes import ShapeConfig
-from repro.core import (feddec, flat as flat_lib, sharded as sharded_lib,
-                        sweep as sweep_lib, topology as topo)
+from repro.core import (engine as engine_lib, feddec, flat as flat_lib,
+                        sharded as sharded_lib, sweep as sweep_lib,
+                        topology as topo)
 from repro.core.mixing import MixingDistribution
 from repro.launch import specs as specs_lib
 from repro.models import build_model
@@ -237,7 +238,12 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     buffer, batches gain a run axis after the fused-step dim, and the keys
     argument becomes a (R,) per-run key array.  ``sweep_axis`` picks the
     lattice (seed | h | topology, see :func:`sweep_lattice_configs`).
-    Requires ``state_layout='flat'`` and ``fused_steps``.
+    Requires ``state_layout='flat'`` or ``'sharded'`` and ``fused_steps``.
+    With ``state_layout='sharded'`` the composition lowers: the whole
+    (R, n_agents, D) lattice runs with the agent dim block-sharded over
+    the mesh's data axes — an (R, n_agents/s, D) block per device, the
+    full T-step scan inside one shard_map
+    (repro.core.engine.make_sharded_sweep_round).
 
     ``state_layout='sharded'`` lowers the shard_map engine
     (repro.core.sharded) over the same flat buffer: the agent dim is
@@ -387,10 +393,10 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     key_struct = _key_struct()
     key_specs = P()
     if sweep_runs:
-        if state_layout != "flat":
+        if state_layout not in ("flat", "sharded"):
             raise ValueError("sweep_runs lowers the batched sweep engine "
                              "(repro.core.sweep); it requires "
-                             "state_layout='flat'")
+                             "state_layout='flat' or 'sharded'")
         if fused_steps is None:
             raise ValueError("sweep_runs requires the fused executor "
                              "(fused_steps=H)")
@@ -403,11 +409,20 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
         state_struct = jax.eval_shape(
             lambda p: sweep_lib.init_sweep_state(plan, spec, p),
             params_struct)
-        state_specs = sweep_lib.SweepFedState(
-            flat=P(None, *flat_spec_p), step=P(None), opt_state=(),
-            residual=() if compress == "none" else P(None, *flat_spec_p))
-        step = sweep_lib.make_sweep_feddec_round(plan, spec, grad_fn,
-                                                 lr_fn, jit=False)
+        if state_layout == "sharded":
+            # the composed lowering: R runs × s agent shards, the whole
+            # lattice scan inside one shard_map
+            state_specs = engine_lib.sweep_state_specs(plan, spec,
+                                                       axis_name=agent_ax)
+            step = engine_lib.make_sharded_sweep_round(
+                plan, spec, grad_fn, lr_fn, mesh, axis_name=agent_ax,
+                jit=False)
+        else:
+            state_specs = sweep_lib.SweepFedState(
+                flat=P(None, *flat_spec_p), step=P(None), opt_state=(),
+                residual=() if compress == "none" else P(None, *flat_spec_p))
+            step = sweep_lib.make_sweep_feddec_round(plan, spec, grad_fn,
+                                                     lr_fn, jit=False)
         # batches gain a run axis after the fused-step dim; keys become
         # the (R,) per-run key array
         batch_struct = jax.tree.map(

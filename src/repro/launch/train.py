@@ -24,6 +24,7 @@ from repro import optim
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.configs.base import ArchConfig, FedConfig
+from repro.core import engine as engine_lib
 from repro.core import feddec
 from repro.core import flat as flat_lib
 from repro.core import sharded as sharded_lib
@@ -91,6 +92,14 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     losses are averaged over the lattice per step and per-run finals are
     printed.  Implies the flat layout and the fused executor; the returned
     FedState is run 0's.  Checkpointing a lattice is not supported.
+
+    ``sweep_runs=R`` composes with ``mesh_agents=s``: the whole lattice
+    lowers as one (R, n_agents/s, D)-per-device program
+    (repro.core.engine.make_sharded_sweep_round) — the agent dim of every
+    run is block-sharded over the ``agents`` mesh axis and the full T-step
+    scan runs inside one shard_map, so the per-step collectives are the
+    only cross-device traffic of the entire figure lattice.  Every run
+    slice matches the single-run flat engine to ≤ 1e-5.
     """
     model = build_model(cfg)
     axes = MeshAxes(("data",), "model", {"data": fed.n_agents, "model": 1})
@@ -106,9 +115,6 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
         raise ValueError("--mesh-agents shards the flat (n_agents, D) "
                          "buffer; it requires --state-layout flat")
     if sweep_runs is not None:
-        if mesh_agents is not None:
-            raise ValueError("--sweep-runs and --mesh-agents are mutually "
-                             "exclusive (batch runs or shard agents)")
         if not fused:
             raise ValueError("--sweep-runs requires the fused executor")
         if state_layout != "flat":
@@ -135,9 +141,20 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                 sweep_lattice_configs(fcfg, fed, sweep_runs, sweep_axis))
             state = sweep_lib.init_sweep_state(plan, spec, params0,
                                                optimizer=opt)
-            round_fn = sweep_lib.make_sweep_feddec_round(
-                plan, spec, model.grad_fn(), lr_fn, optimizer=opt,
-                donate=True)
+            if mesh_agents is not None:
+                # composed lowering: R runs × s agent shards, one program
+                if n_agents % mesh_agents:
+                    raise ValueError(f"--mesh-agents {mesh_agents} must "
+                                     f"divide --agents {n_agents}")
+                mesh = make_agent_mesh(mesh_agents)
+                state = engine_lib.shard_sweep_state(state, mesh)
+                round_fn = engine_lib.make_sharded_sweep_round(
+                    plan, spec, model.grad_fn(), lr_fn, mesh,
+                    optimizer=opt, donate=True)
+            else:
+                round_fn = sweep_lib.make_sweep_feddec_round(
+                    plan, spec, model.grad_fn(), lr_fn, optimizer=opt,
+                    donate=True)
         else:
             state = flat_lib.init_flat_state(spec, params0, n_agents,
                                              optimizer=opt,
@@ -311,7 +328,10 @@ def main() -> None:
                    help="run R independent FedDec replicas batched into "
                         "one (R, n_agents, D) program (repro.core.sweep); "
                         "losses are lattice-averaged, per-run finals "
-                        "printed")
+                        "printed.  Composes with --mesh-agents s: the "
+                        "lattice lowers as one (R, n_agents/s, D)-per-"
+                        "device shard_map program "
+                        "(repro.core.engine.make_sharded_sweep_round)")
     p.add_argument("--sweep-axis", default="seed",
                    choices=["seed", "h", "topology"],
                    help="what varies across the --sweep-runs lattice: "

@@ -1,0 +1,287 @@
+"""Shared machinery of the cross-engine conformance harness.
+
+Every differential test in tests/conformance compares ONE engine lowering
+against THE reference trajectory — the single-device flat engine
+(repro.core.flat) on the paper's §4 linreg workload — through the single
+:func:`assert_trajectory_equiv` helper.  This replaces the four
+near-duplicate equivalence suites that used to live in test_flat_engine /
+test_sharded_engine / test_sweep_engine / test_compress with one shared
+vocabulary:
+
+  * ``run_reference``   — the flat-engine trajectory every layout must match;
+  * ``run_layout``      — the same (config × codec × optimizer) cell lowered
+    through 'tree' / 'flat' / 'sharded' / 'sweep' (sweep runs a 2-run
+    lattice and returns the requested slice);
+  * ``assert_trajectory_equiv`` — params + EF residual + per-step losses
+    within the documented 1e-5 acceptance tolerance (bit-identity is
+    asserted where the engines guarantee it: same-layout codec-off vs
+    identity-codec runs).
+
+Golden fixtures (tests/golden/*.npz) freeze reference trajectories across
+PRs: they are regenerated only under ``pytest --update-golden`` so every
+refactor is diffed against pre-refactor numerics, not just against itself.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import (FedDecConfig, feddec, flat as flat_lib, init_state,
+                        sharded, sweep as sweep_lib)
+from repro.core import theory, topology as topo
+from repro.core.mixing import MixingDistribution
+from repro.data import linreg
+
+N_AGENTS = 8
+H_CFG = 4          # server period; T_RUN crosses one server boundary
+T_RUN = 6
+KEY_SEED = 5
+BATCH_SEED = 11
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "golden")
+
+#: the documented acceptance tolerance of every cross-engine equivalence
+ATOL = 1e-5
+
+LAYOUTS = ("tree", "flat", "sharded", "sweep")
+GOSSIP_IMPLS = ("dense", "none", "pallas", "sparse")
+CODECS = ("none", "identity", "bf16", "int8", "topk:0.25")
+
+_PROBLEM = None
+
+
+def problem():
+    global _PROBLEM
+    if _PROBLEM is None:
+        _PROBLEM = linreg.make_problem(n=N_AGENTS, seed=0, c_base=1.3)
+    return _PROBLEM
+
+
+def make_cfg(gossip_impl="dense", codec="none", p_fail=0.0, h=H_CFG,
+             server_enabled=True, k=2) -> FedDecConfig:
+    g = topo.geographic_graph(N_AGENTS, 0.6, seed=3)
+    md = MixingDistribution(g, p_fail=p_fail,
+                            scheme="metropolis" if p_fail else "laplacian")
+    return FedDecConfig(mixing=md, h=h, k=k, server_enabled=server_enabled,
+                        gossip_impl=gossip_impl, gossip_compress=codec)
+
+
+def lr_fn(prob=None):
+    prob = prob or problem()
+    return theory.paper_stepsize(
+        prob.mu, theory.gamma(prob.l_smooth, prob.mu, H_CFG))
+
+
+def grad_fn(prob=None):
+    prob = prob or problem()
+    return linreg.make_grad_fn(prob.m_rows)
+
+
+def stacked_batches(t_steps=T_RUN, seed=BATCH_SEED, prob=None):
+    prob = prob or problem()
+    keys = jax.random.split(jax.random.key(seed), t_steps)
+    return jax.vmap(lambda k: linreg.sample_minibatch(prob, k, m=1))(keys)
+
+
+def make_optimizer(name):
+    if name in (None, "sgd"):
+        return None
+    if name == "momentum":
+        return optim.momentum_sgd()
+    if name == "adamw":
+        return optim.adamw(weight_decay=0.0)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def flat_spec(prob=None):
+    prob = prob or problem()
+    return flat_lib.make_flat_spec(jnp.zeros(prob.d))
+
+
+def init_compress(cfg):
+    """gossip_impl 'none' exchanges nothing: no EF residual is carried."""
+    return cfg.gossip_compress if cfg.gossip_impl != "none" else "none"
+
+
+# ---------------------------------------------------------------------------
+# Reference + per-layout runners (same cell, different lowering)
+# ---------------------------------------------------------------------------
+
+
+def run_reference(cfg: FedDecConfig, optimizer_name=None, t_steps=T_RUN,
+                  key_seed=KEY_SEED):
+    """THE reference: the single-device flat engine on the linreg cell."""
+    prob = problem()
+    spec = flat_spec(prob)
+    opt = make_optimizer(optimizer_name)
+    round_fn = flat_lib.make_flat_feddec_round(
+        cfg, spec, grad_fn(prob), lr_fn(prob), optimizer=opt, donate=False)
+    state = flat_lib.init_flat_state(spec, jnp.zeros(prob.d), N_AGENTS,
+                                     optimizer=opt,
+                                     compress=init_compress(cfg))
+    batches = stacked_batches(t_steps, prob=prob)
+    return round_fn(state, batches, jax.random.key(key_seed))
+
+
+def _as_trajectory(flat_state, metrics):
+    res = None if isinstance(flat_state.residual, tuple) \
+        else np.asarray(flat_state.residual)
+    return {
+        "flat": np.asarray(flat_state.flat, np.float32),
+        "loss": np.asarray(metrics["loss"], np.float32),
+        "residual": res,
+        "step": int(np.asarray(flat_state.step).reshape(-1)[0]),
+    }
+
+
+def run_layout(layout: str, cfg: FedDecConfig, optimizer_name=None,
+               t_steps=T_RUN, key_seed=KEY_SEED, n_shards=None,
+               sweep_partner=None):
+    """Run one conformance cell through ``layout`` and normalise the result.
+
+    Returns {'flat': (n, D), 'loss': (T,), 'residual': (n, D)|None, 'step'}.
+    ``layout='sharded'`` uses ``n_shards`` devices (callers skip when the
+    host has fewer); ``layout='sweep'`` runs a 2-run lattice (run 1 is
+    ``sweep_partner`` or an h-doubled variant) and returns run 0's slice.
+    """
+    prob = problem()
+    spec = flat_spec(prob)
+    opt = make_optimizer(optimizer_name)
+    gfn, lfn = grad_fn(prob), lr_fn(prob)
+    batches = stacked_batches(t_steps, prob=prob)
+    key = jax.random.key(key_seed)
+
+    if layout == "flat":
+        state, m = run_reference(cfg, optimizer_name, t_steps, key_seed)
+        return _as_trajectory(state, m)
+
+    if layout == "tree":
+        round_fn = feddec.make_feddec_round(cfg, gfn, lfn, optimizer=opt,
+                                            donate=False)
+        state = init_state(jnp.zeros(prob.d), N_AGENTS, optimizer=opt,
+                           compress=init_compress(cfg))
+        state, m = round_fn(state, batches, key)
+        return _as_trajectory(flat_lib.flatten_fedstate(spec, state), m)
+
+    if layout == "sharded":
+        n_shards = n_shards or min(len(jax.devices()), N_AGENTS)
+        mesh = jax.make_mesh((n_shards,), ("agents",),
+                             devices=jax.devices()[:n_shards])
+        round_fn = sharded.make_sharded_feddec_round(
+            cfg, spec, gfn, lfn, mesh, optimizer=opt, donate=False)
+        state = sharded.shard_flat_state(
+            flat_lib.init_flat_state(spec, jnp.zeros(prob.d), N_AGENTS,
+                                     optimizer=opt,
+                                     compress=init_compress(cfg)), mesh)
+        state, m = round_fn(state, batches, key)
+        return _as_trajectory(state, m)
+
+    if layout == "sweep":
+        partner = sweep_partner or FedDecConfig(
+            mixing=cfg.mixing, h=2 * cfg.h, k=cfg.k,
+            server_enabled=cfg.server_enabled, gossip_impl=cfg.gossip_impl,
+            gossip_compress=cfg.gossip_compress)
+        plan = sweep_lib.make_sweep_plan([cfg, partner])
+        round_fn = sweep_lib.make_sweep_feddec_round(
+            plan, spec, gfn, lfn, optimizer=opt, donate=False)
+        state = sweep_lib.init_sweep_state(plan, spec, jnp.zeros(prob.d),
+                                           optimizer=opt)
+        batches_r = jax.tree.map(
+            lambda b: jnp.broadcast_to(b[:, None],
+                                       (b.shape[0], 2) + b.shape[1:]),
+            batches)
+        # both runs reuse the reference key so run 0 is directly comparable
+        # to run_reference(cfg) with the same key_seed
+        keys = jax.random.wrap_key_data(
+            jnp.stack([jax.random.key_data(key)] * 2))
+        state, m = round_fn(state, batches_r, keys)
+        run0 = sweep_lib.slice_run(state, 0)
+        m0 = {"loss": m["loss"][:, 0]}
+        return _as_trajectory(run0, m0)
+
+    raise ValueError(f"unknown layout {layout!r}")
+
+
+# ---------------------------------------------------------------------------
+# THE equivalence assertion
+# ---------------------------------------------------------------------------
+
+
+def assert_trajectory_equiv(got, ref, atol=ATOL, rtol=ATOL, bit_exact=False,
+                            label=""):
+    """Assert two normalised trajectories agree.
+
+    ``bit_exact=True`` uses exact array equality (the engines' guarantee for
+    same-layout codec-off vs identity-codec runs); the default is the
+    documented 1e-5 acceptance tolerance of every cross-lowering comparison
+    (observed exact on linreg for most cells).
+    """
+    if bit_exact:
+        np.testing.assert_array_equal(got["flat"], ref["flat"],
+                                      err_msg=f"params {label}")
+        np.testing.assert_array_equal(got["loss"], ref["loss"],
+                                      err_msg=f"loss {label}")
+    else:
+        np.testing.assert_allclose(got["flat"], ref["flat"], atol=atol,
+                                   rtol=rtol, err_msg=f"params {label}")
+        np.testing.assert_allclose(got["loss"], ref["loss"], atol=atol,
+                                   rtol=rtol, err_msg=f"loss {label}")
+    if ref.get("residual") is None:
+        assert got.get("residual") is None, \
+            f"{label}: residual carried where reference has none"
+    else:
+        assert got.get("residual") is not None, \
+            f"{label}: reference carries an EF residual, got none"
+        np.testing.assert_allclose(got["residual"], ref["residual"],
+                                   atol=atol, rtol=rtol,
+                                   err_msg=f"residual {label}")
+    if "step" in ref and "step" in got:
+        assert got["step"] == ref["step"], \
+            f"{label}: step counter {got['step']} != {ref['step']}"
+
+
+# ---------------------------------------------------------------------------
+# Golden fixtures
+# ---------------------------------------------------------------------------
+
+#: (layout, codec) cells frozen under tests/golden/ — layouts that run on a
+#: single device, so the tier-1 job always checks them
+GOLDEN_CELLS = (
+    ("flat", "none"), ("flat", "identity"), ("flat", "bf16"),
+    ("flat", "int8"), ("flat", "topk:0.25"),
+    ("tree", "none"), ("tree", "int8"),
+    ("sweep", "none"), ("sweep", "int8"),
+)
+
+
+def golden_path(layout: str, codec: str) -> str:
+    slug = codec.replace(":", "").replace(".", "")
+    return os.path.join(GOLDEN_DIR, f"{layout}_{slug}.npz")
+
+
+def compute_golden(layout: str, codec: str) -> dict:
+    cfg = make_cfg(codec=codec)
+    out = run_layout(layout, cfg)
+    arrs = {"flat": out["flat"], "loss": out["loss"],
+            "step": np.asarray(out["step"], np.int32),
+            "meta": np.asarray([N_AGENTS, T_RUN, H_CFG, KEY_SEED], np.int32)}
+    if out["residual"] is not None:
+        arrs["residual"] = out["residual"]
+    return arrs
+
+
+def write_golden(layout: str, codec: str) -> str:
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    path = golden_path(layout, codec)
+    np.savez_compressed(path, **compute_golden(layout, codec))
+    return path
+
+
+def load_golden(layout: str, codec: str) -> dict:
+    with np.load(golden_path(layout, codec)) as z:
+        return {k: z[k].copy() for k in z.files}

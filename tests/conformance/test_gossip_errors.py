@@ -1,0 +1,127 @@
+"""One resolver, one error: unknown ``gossip_impl`` regression suite.
+
+The four per-engine gossip resolvers collapsed into
+``engine.resolve_gossip``; this suite pins the contract that EVERY entry
+point — config construction, spec parsing, and all four round makers —
+surfaces the SAME canonical ValueError text for an unknown impl, so a
+future engine can't quietly grow its own variant wording again.
+
+Configs with a bogus impl cannot be built normally (FedDecConfig itself
+validates), so the entry-point cells forge one via ``object.__new__`` —
+exactly the hostile input a deserialised or hand-rolled config would be.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from _equiv import flat_spec, grad_fn, lr_fn, make_cfg, problem
+
+from repro.core import (FedDecConfig, engine, feddec, flat as flat_lib,
+                        sharded, sweep as sweep_lib)
+
+BOGUS = "broadcast"
+
+
+def _forged_cfg(h=None) -> FedDecConfig:
+    """A FedDecConfig carrying an impl its constructor would reject."""
+    good = make_cfg(h=h) if h else make_cfg()
+    cfg = object.__new__(FedDecConfig)
+    for field in dataclasses.fields(FedDecConfig):
+        object.__setattr__(cfg, field.name, getattr(good, field.name))
+    object.__setattr__(cfg, "gossip_impl", BOGUS)
+    return cfg
+
+
+def _forged_plan():
+    """A SweepPlan carrying an impl make_sweep_plan would reject — with
+    forged configs too, so entry points that re-derive the plan from
+    ``plan.configs`` still see the bogus impl."""
+    plan = sweep_lib.make_sweep_plan([make_cfg(), make_cfg(h=8)])
+    return dataclasses.replace(plan, gossip_impl=BOGUS,
+                               configs=(_forged_cfg(), _forged_cfg(h=8)))
+
+
+@pytest.fixture(scope="module")
+def canonical() -> str:
+    return str(engine.unknown_gossip_impl(BOGUS))
+
+
+def test_canonical_error_names_every_impl(canonical):
+    for impl in engine.GOSSIP_IMPLS:
+        assert impl in canonical
+    assert repr(BOGUS) in canonical
+
+
+def test_config_constructor_uses_canonical_error(canonical):
+    good = make_cfg()
+    with pytest.raises(ValueError) as e:
+        FedDecConfig(mixing=good.mixing, h=good.h, k=good.k,
+                     server_enabled=good.server_enabled, gossip_impl=BOGUS,
+                     gossip_compress=good.gossip_compress)
+    assert str(e.value) == canonical
+
+
+def test_check_gossip_impl_uses_canonical_error(canonical):
+    with pytest.raises(ValueError) as e:
+        engine.check_gossip_impl(BOGUS)
+    assert str(e.value) == canonical
+
+
+@pytest.mark.parametrize("layout", ["tree", "flat", "sweep", "sharded"])
+def test_resolve_gossip_uses_canonical_error(layout, canonical):
+    source = _forged_plan() if layout == "sweep" else _forged_cfg()
+    kwargs = {}
+    if layout == "sharded":
+        kwargs = dict(axis_name="agents", n_shards=2)
+    with pytest.raises(ValueError) as e:
+        engine.resolve_gossip(source, layout=layout, **kwargs)
+    assert str(e.value) == canonical
+
+
+def test_sweep_plan_builder_uses_canonical_error(canonical):
+    cfg = _forged_cfg()
+    with pytest.raises(ValueError) as e:
+        sweep_lib.make_sweep_plan([cfg, cfg])
+    assert str(e.value) == canonical
+
+
+@pytest.mark.parametrize("entry", ["tree_round", "tree_step", "flat_round",
+                                   "flat_step", "sweep_round",
+                                   "sharded_round", "engine_round"])
+def test_round_makers_use_canonical_error(entry, canonical):
+    prob = problem()
+    spec = flat_spec(prob)
+    gfn, lfn = grad_fn(prob), lr_fn(prob)
+    cfg = _forged_cfg()
+    with pytest.raises(ValueError) as e:
+        if entry == "tree_round":
+            feddec.make_feddec_round(cfg, gfn, lfn)
+        elif entry == "tree_step":
+            feddec.make_feddec_step(cfg, gfn, lfn)
+        elif entry == "flat_round":
+            flat_lib.make_flat_feddec_round(cfg, spec, gfn, lfn)
+        elif entry == "flat_step":
+            flat_lib.make_flat_feddec_step(cfg, spec, gfn, lfn)
+        elif entry == "sweep_round":
+            sweep_lib.make_sweep_feddec_round(_forged_plan(), spec, gfn, lfn)
+        elif entry == "sharded_round":
+            mesh = jax.make_mesh((1,), ("agents",),
+                                 devices=jax.devices()[:1])
+            sharded.make_sharded_feddec_round(cfg, spec, gfn, lfn, mesh)
+        elif entry == "engine_round":
+            espec = dataclasses.replace(engine.parse_engine_spec(make_cfg()),
+                                        configs=(cfg,))
+            engine.make_engine_round(espec, gfn, lfn, flat_spec=spec)
+    assert str(e.value) == canonical
+
+
+def test_permute_hint_points_at_make_permute_gossip(canonical):
+    """'permute' is deliberately NOT a gossip_impl — the error redirects to
+    the gossip_fn override that builds it."""
+    msg = str(engine.unknown_gossip_impl("permute"))
+    assert "make_permute_gossip" in msg
+    assert "gossip_fn=" in msg
+    # the hint is reserved for 'permute'; other unknowns get the plain form
+    assert "make_permute_gossip" not in canonical

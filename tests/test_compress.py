@@ -14,16 +14,14 @@ Four tiers:
   * Pallas kernel equivalence (interpret mode off-TPU): fused
     dequantize→mix == the XLA codec composition, fused quantize→mix within
     one stochastic-rounding step;
-  * sharded engine: compressed sharded rounds == single-device flat rounds
-    to 1e-5 across codecs × impls (in-process, skips below 2 devices — the
-    CI multi-device job provides 8), the ppermute halo payload is really
-    int8 in the compiled HLO, plus one subprocess test that forces 8 host
-    devices so tier-1 always exercises the compressed halo.
-"""
+  * sharded EF contract: the ppermute halo payload is really int8 in the
+    compiled HLO and make_sharded_ef_gossip matches the flat EF gossip
+    (skips below 2 devices — the CI multi-device job provides 8).
 
-import os
-import subprocess
-import sys
+The compressed trajectory-equivalence grids (identity-bit-identical runs,
+sharded-vs-flat codec cells and their 8-device subprocess twin) moved to
+tests/conformance/test_grid.py.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +33,7 @@ try:
 except ImportError:  # property tests skip; the rest of the module runs
     from _hypothesis_stub import given, settings, st
 
-from repro.core import FedDecConfig, feddec, flat as flat_lib, init_state
+from repro.core import FedDecConfig, flat as flat_lib, init_state
 from repro.core import compress as compress_lib
 from repro.core import sharded, theory, topology as topo
 from repro.core.mixing import MixingDistribution
@@ -218,40 +216,6 @@ class TestOtherCodecs:
 
 
 class TestErrorFeedback:
-    def test_identity_bit_identical_flat(self):
-        """The EF machinery with the identity codec (residual carried,
-        correction term applied) reproduces the uncompressed flat engine
-        bit for bit — residual stays exactly zero."""
-        s_none, m_none = _run_flat("none")
-        s_id, m_id = _run_flat("identity")
-        np.testing.assert_array_equal(np.asarray(s_id.flat),
-                                      np.asarray(s_none.flat))
-        np.testing.assert_array_equal(np.asarray(m_id["loss"]),
-                                      np.asarray(m_none["loss"]))
-        np.testing.assert_array_equal(np.asarray(s_id.residual), 0.0)
-        assert s_none.residual == ()
-
-    @given(st.integers(0, 2**31 - 1))
-    @settings(max_examples=5, deadline=None)
-    def test_identity_bit_identical_property(self, seed):
-        s_none, _ = _run_flat("none", key_seed=seed)
-        s_id, _ = _run_flat("identity", key_seed=seed)
-        np.testing.assert_array_equal(np.asarray(s_id.flat),
-                                      np.asarray(s_none.flat))
-
-    def test_identity_bit_identical_tree(self):
-        cfg0 = _setup()
-        cfg1 = _setup(gossip_compress="identity")
-        batches = jax.random.normal(jax.random.key(11), (T_RUN, N_AGENTS, D))
-        r0 = feddec.make_feddec_round(cfg0, _grad_fn, _lr, donate=False)
-        r1 = feddec.make_feddec_round(cfg1, _grad_fn, _lr, donate=False)
-        s0, _ = r0(init_state(jnp.zeros(D), N_AGENTS), batches,
-                   jax.random.key(5))
-        s1, _ = r1(init_state(jnp.zeros(D), N_AGENTS, compress="identity"),
-                   batches, jax.random.key(5))
-        np.testing.assert_array_equal(np.asarray(s1.params),
-                                      np.asarray(s0.params))
-
     @pytest.mark.parametrize("compress", ["bf16", "int8", "topk:0.25"])
     def test_lossy_codecs_stay_close_and_carry_residual(self, compress):
         s_none, _ = _run_flat("none")
@@ -436,40 +400,7 @@ def _n_shards_for(agents_per_device: int) -> int:
 
 
 @multi_device
-class TestShardedCompressed:
-    @pytest.mark.parametrize("agents_per_device", [1, 4])
-    @pytest.mark.parametrize("compress,gossip_impl", [
-        ("identity", "sparse"), ("bf16", "dense"), ("int8", "sparse"),
-        ("int8", "pallas"), ("topk:0.25", "sparse")])
-    def test_matches_flat(self, agents_per_device, compress, gossip_impl):
-        n_shards = _n_shards_for(agents_per_device)
-        cfg = _setup(gossip_impl=gossip_impl, gossip_compress=compress,
-                     p_fail=0.3)
-        spec = flat_lib.make_flat_spec(jnp.zeros(D))
-        batches = jax.random.normal(jax.random.key(11), (T_RUN, N_AGENTS, D))
-        key = jax.random.key(5)
-        flat_round = flat_lib.make_flat_feddec_round(cfg, spec, _grad_fn,
-                                                     _lr, donate=False)
-        s_flat, m_flat = flat_round(
-            flat_lib.init_flat_state(spec, jnp.zeros(D), N_AGENTS,
-                                     compress=compress), batches, key)
-        mesh = jax.make_mesh((n_shards,), ("agents",),
-                             devices=jax.devices()[:n_shards])
-        sh_round = sharded.make_sharded_feddec_round(cfg, spec, _grad_fn,
-                                                     _lr, mesh, donate=False)
-        s0 = sharded.shard_flat_state(
-            flat_lib.init_flat_state(spec, jnp.zeros(D), N_AGENTS,
-                                     compress=compress), mesh)
-        s_sh, m_sh = sh_round(s0, batches, key)
-        np.testing.assert_allclose(np.asarray(s_sh.flat),
-                                   np.asarray(s_flat.flat),
-                                   atol=1e-5, rtol=1e-5)
-        np.testing.assert_allclose(np.asarray(s_sh.residual),
-                                   np.asarray(s_flat.residual),
-                                   atol=1e-5, rtol=1e-5)
-        np.testing.assert_allclose(np.asarray(m_sh["loss"]),
-                                   np.asarray(m_flat["loss"]), rtol=1e-5)
-
+class TestShardedCompressedContract:
     def test_halo_payload_is_int8_in_hlo(self):
         """The wire win is real: every ppermute the sparse halo emits for
         the int8 codec carries s8 element type, not f32."""
@@ -512,66 +443,3 @@ class TestShardedCompressed:
                                    atol=1e-5, rtol=1e-5)
         np.testing.assert_allclose(np.asarray(r), np.asarray(r_ref),
                                    atol=1e-6, rtol=1e-6)
-
-
-# ---------------------------------------------------------------------------
-# Subprocess smoke (always runs, even on the 1-device tier-1 session)
-# ---------------------------------------------------------------------------
-
-
-_COMPRESS_EQUIV = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, numpy as np, jax.numpy as jnp
-from repro.core import FedDecConfig, flat as flat_lib, sharded
-from repro.core import topology as topo
-from repro.core.mixing import MixingDistribution
-
-n, d, t_run = 8, 23, 5
-g = topo.geographic_graph(n, 0.6, seed=3)
-md = MixingDistribution(g, p_fail=0.3, scheme="metropolis")
-spec = flat_lib.make_flat_spec(jnp.zeros(d))
-def grad_fn(p, b, k):
-    return 0.5 * jnp.sum((p - b) ** 2), (p - b) \
-        + jax.random.normal(k, p.shape) * 0.01
-lr = lambda t: jnp.asarray(0.05, jnp.float32)
-batches = jax.random.normal(jax.random.key(1), (t_run, n, d))
-key = jax.random.key(5)
-for compress, impl in (("int8", "sparse"), ("topk:0.25", "dense")):
-    cfg = FedDecConfig(mixing=md, h=4, k=2, gossip_impl=impl,
-                       gossip_compress=compress)
-    ref_round = flat_lib.make_flat_feddec_round(cfg, spec, grad_fn, lr,
-                                                donate=False)
-    s_ref, _ = ref_round(
-        flat_lib.init_flat_state(spec, jnp.zeros(d), n, compress=compress),
-        batches, key)
-    for n_shards in (2, 8):
-        mesh = jax.make_mesh((n_shards,), ("agents",))
-        sh_round = sharded.make_sharded_feddec_round(
-            cfg, spec, grad_fn, lr, mesh, donate=False)
-        s0 = sharded.shard_flat_state(
-            flat_lib.init_flat_state(spec, jnp.zeros(d), n,
-                                     compress=compress), mesh)
-        s_sh, _ = sh_round(s0, batches, key)
-        np.testing.assert_allclose(
-            np.asarray(s_sh.flat), np.asarray(s_ref.flat),
-            atol=1e-5, rtol=1e-5, err_msg=f"{compress}/{impl}, {n_shards}")
-        np.testing.assert_allclose(
-            np.asarray(s_sh.residual), np.asarray(s_ref.residual),
-            atol=1e-5, rtol=1e-5, err_msg=f"{compress}/{impl}, {n_shards}")
-print("COMPRESS_EQUIV_OK")
-"""
-
-
-def test_compressed_sharded_matches_flat_subprocess():
-    """int8/top-k compressed sharded rounds == single-device flat rounds at
-    agents-per-device ∈ {1, 4}, residual included.  Runs under 8 forced
-    host devices in a subprocess so the override never leaks."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.abspath(
-        os.path.join(os.path.dirname(__file__), "..", "src"))
-    res = subprocess.run([sys.executable, "-c", _COMPRESS_EQUIV],
-                         capture_output=True, text=True, env=env,
-                         timeout=600)
-    assert res.returncode == 0, res.stderr
-    assert "COMPRESS_EQUIV_OK" in res.stdout

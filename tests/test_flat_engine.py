@@ -1,13 +1,10 @@
-"""Flat-engine (single (n, D) buffer) ≡ tree-engine trajectories.
+"""Flat-engine contract tests: FlatSpec ravel, state conversion, and the
+flat executor's own behavioural guarantees (server consensus inside the
+scan, donation, metrics_fn).
 
-The flat engine (repro.core.flat) must reproduce the tree engine
-(repro.core.feddec) step for step: the whole-buffer SGD update, gossip mix
-(every impl), and flat server round are the leaf-wise ops with the leaf loop
-removed, and both engines share the fold_in(key, t) randomness.  Asserted
-within the 1e-5 acceptance tolerance (observed exact on linreg) across
-gossip impls × server on/off × stateful optimizers, for both the fused
-round and per-step executors.  Also covers the FlatSpec ravel contract and
-FedState ⇄ FlatFedState conversion.
+The tree ≡ flat trajectory-equivalence grid that used to live here moved
+to tests/conformance/test_grid.py — one differential harness covering all
+four engine lowerings against the single flat reference.
 """
 
 import jax
@@ -16,17 +13,14 @@ import numpy as np
 import pytest
 
 from repro import optim
-from repro.core import (FedDecConfig, init_state, make_feddec_round,
-                        make_feddec_step)
+from repro.core import FedDecConfig, init_state
 from repro.core import flat as flat_lib
 from repro.core import server, theory, topology as topo
-from repro.core.fedavg import make_fedavg_flat_round, make_fedavg_round
 from repro.core.mixing import MixingDistribution
 from repro.data import linreg
 
 N_AGENTS = 8
 H_CFG = 4        # server period — windows below deliberately cross it
-T_RUN = 6
 
 
 @pytest.fixture(scope="module")
@@ -55,106 +49,6 @@ def _setup(problem, *, p_fail=0.0, gossip_impl="dense", server_enabled=True):
 def _stacked_batches(problem, t_steps, seed=11):
     keys = jax.random.split(jax.random.key(seed), t_steps)
     return jax.vmap(lambda k: linreg.sample_minibatch(problem, k, m=1))(keys)
-
-
-def _run_both_rounds(problem, spec, cfg, lr, grad_fn, opt=None, key_seed=5):
-    batches = _stacked_batches(problem, T_RUN)
-    key = jax.random.key(key_seed)
-    tree_round = make_feddec_round(cfg, grad_fn, lr, optimizer=opt,
-                                   donate=False)
-    flat_round = flat_lib.make_flat_feddec_round(cfg, spec, grad_fn, lr,
-                                                 optimizer=opt, donate=False)
-    s_tree, m_tree = tree_round(
-        init_state(jnp.zeros(problem.d), problem.n, optimizer=opt),
-        batches, key)
-    s_flat, m_flat = flat_round(
-        flat_lib.init_flat_state(spec, jnp.zeros(problem.d), problem.n,
-                                 optimizer=opt),
-        batches, key)
-    return s_tree, m_tree, s_flat, m_flat
-
-
-class TestRoundEquivalence:
-    @pytest.mark.parametrize("gossip_impl",
-                             ["dense", "pallas", "sparse", "none"])
-    @pytest.mark.parametrize("server_enabled", [True, False])
-    def test_flat_matches_tree(self, problem, spec, gossip_impl,
-                               server_enabled):
-        cfg, lr, grad_fn = _setup(problem, gossip_impl=gossip_impl,
-                                  server_enabled=server_enabled)
-        s_tree, m_tree, s_flat, m_flat = _run_both_rounds(
-            problem, spec, cfg, lr, grad_fn)
-        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
-                                   np.asarray(s_tree.params),
-                                   atol=1e-5, rtol=1e-5)
-        np.testing.assert_allclose(np.asarray(m_flat["loss"]),
-                                   np.asarray(m_tree["loss"]), rtol=1e-6)
-        assert int(s_flat.step) == int(s_tree.step) == T_RUN + 1
-
-    @pytest.mark.parametrize("opt_name", ["momentum", "adamw"])
-    def test_stateful_optimizers(self, problem, spec, opt_name):
-        """Momentum/Adam buffers live as flat (n, D) arrays and evolve
-        identically to the tree engine's per-leaf stacked buffers."""
-        opt = {"momentum": optim.momentum_sgd(),
-               "adamw": optim.adamw()}[opt_name]
-        cfg, lr, grad_fn = _setup(problem)
-        s_tree, _, s_flat, _ = _run_both_rounds(problem, spec, cfg, lr,
-                                                grad_fn, opt=opt)
-        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
-                                   np.asarray(s_tree.params),
-                                   atol=1e-5, rtol=1e-5)
-        tree_from_flat = flat_lib.unflatten_fedstate(spec, s_flat)
-        jax.tree.map(
-            lambda a, b: np.testing.assert_allclose(
-                np.asarray(a, np.float32), np.asarray(b, np.float32),
-                atol=1e-5, rtol=1e-5),
-            tree_from_flat.opt_state, s_tree.opt_state)
-
-    def test_time_varying_topology(self, problem, spec):
-        """p_fail > 0: both engines resample the same W^t inside the scan."""
-        cfg, lr, grad_fn = _setup(problem, p_fail=0.4, gossip_impl="sparse")
-        s_tree, _, s_flat, _ = _run_both_rounds(problem, spec, cfg, lr,
-                                                grad_fn, key_seed=9)
-        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
-                                   np.asarray(s_tree.params),
-                                   atol=1e-5, rtol=1e-5)
-
-    def test_per_step_executor_matches(self, problem, spec):
-        cfg, lr, grad_fn = _setup(problem)
-        tree_step = make_feddec_step(cfg, grad_fn, lr, donate=False)
-        flat_step = flat_lib.make_flat_feddec_step(cfg, spec, grad_fn, lr,
-                                                   donate=False)
-        batches = _stacked_batches(problem, T_RUN)
-        key = jax.random.key(21)
-        s_tree = init_state(jnp.zeros(problem.d), problem.n)
-        s_flat = flat_lib.init_flat_state(spec, jnp.zeros(problem.d),
-                                          problem.n)
-        for t in range(T_RUN):
-            b = jax.tree.map(lambda x: x[t], batches)
-            s_tree, _ = tree_step(s_tree, b, key)
-            s_flat, _ = flat_step(s_flat, b, key)
-        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
-                                   np.asarray(s_tree.params),
-                                   atol=1e-5, rtol=1e-5)
-
-    def test_fedavg_flat_round(self, problem, spec):
-        _, lr, grad_fn = _setup(problem)
-        batches = _stacked_batches(problem, T_RUN)
-        key = jax.random.key(13)
-        tree_round = make_fedavg_round(problem.n, grad_fn, lr, h=H_CFG, k=2,
-                                       donate=False)
-        flat_round = make_fedavg_flat_round(problem.n, spec, grad_fn, lr,
-                                            h=H_CFG, k=2, donate=False)
-        s_tree, m_tree = tree_round(init_state(jnp.zeros(problem.d),
-                                               problem.n), batches, key)
-        s_flat, m_flat = flat_round(
-            flat_lib.init_flat_state(spec, jnp.zeros(problem.d), problem.n),
-            batches, key)
-        np.testing.assert_allclose(np.asarray(spec.unflatten(s_flat.flat)),
-                                   np.asarray(s_tree.params),
-                                   atol=1e-5, rtol=1e-5)
-        np.testing.assert_allclose(np.asarray(m_flat["loss"]),
-                                   np.asarray(m_tree["loss"]), rtol=1e-6)
 
 
 class TestFlatContract:

@@ -1,36 +1,26 @@
-"""Sharded flat engine ≡ single-device flat engine trajectories.
+"""Sharded-engine contract tests: quotient-graph metadata, the sharded
+gossip collective, launch lowering, and sharding persistence.
 
-The agent-sharded engine (repro.core.sharded) block-shards the flat
-(n_agents, D) buffer over an ``agents`` mesh axis with shard_map; it must
-reproduce the single-device flat engine (repro.core.flat) step for step to
-1e-5 — the per-step randomness is derived identically (full per-agent key
-array replicated, row-sliced per shard), and every collective (psum_scatter
-dense gossip, ppermute halo exchange, server psum) is the single-device
-contraction with the j-sum reordered across devices.
+The sharded ≡ flat trajectory-equivalence grid (and its 8-device
+subprocess twin) that used to live here moved to
+tests/conformance/test_grid.py — one differential harness covering all
+four engine lowerings against the single flat reference.
 
-Three tiers:
+Two tiers remain:
 
   * host-side unit tests of the quotient-graph / cut-edge metadata and the
     sharded cost model — always run, no devices needed;
-  * in-process equivalence tests over agents-per-device ∈ {1, 4} ×
-    gossip_impl ∈ {dense, sparse} × server on/off × stateful optimizers —
-    these need a multi-device backend and **skip cleanly when fewer than 2
-    host devices are visible** (the CI ``multi-device`` job provides 8 via
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
-  * one subprocess test that forces 8 host devices itself, so the default
-    single-device tier-1 run still exercises the shard_map/ppermute paths.
+  * in-process contract tests that need a multi-device backend and **skip
+    cleanly when fewer than 2 host devices are visible** (the CI
+    ``multi-device`` job provides 8 via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
 """
-
-import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import optim
 from repro.core import FedDecConfig
 from repro.core import flat as flat_lib
 from repro.core import sharded, topology as topo
@@ -39,7 +29,6 @@ from repro.launch import analysis
 
 N_AGENTS = 8
 H_CFG = 4
-T_RUN = 6
 D = 37
 
 multi_device = pytest.mark.skipif(
@@ -112,7 +101,7 @@ class TestQuotientGraph:
 
 
 # ---------------------------------------------------------------------------
-# In-process equivalence (multi-device job)
+# In-process contract tests (multi-device job)
 # ---------------------------------------------------------------------------
 
 
@@ -140,93 +129,8 @@ def _n_shards_for(agents_per_device: int) -> int:
     return n_shards
 
 
-def _run_flat_vs_sharded(cfg, n_shards, opt=None, key_seed=5):
-    spec = flat_lib.make_flat_spec(jnp.zeros(D))
-    batches = jax.random.normal(jax.random.key(11), (T_RUN, N_AGENTS, D))
-    key = jax.random.key(key_seed)
-    flat_round = flat_lib.make_flat_feddec_round(cfg, spec, _grad_fn, _lr,
-                                                 optimizer=opt, donate=False)
-    s_flat, m_flat = flat_round(
-        flat_lib.init_flat_state(spec, jnp.zeros(D), N_AGENTS, optimizer=opt),
-        batches, key)
-    mesh = jax.make_mesh((n_shards,), ("agents",),
-                         devices=jax.devices()[:n_shards])
-    sh_round = sharded.make_sharded_feddec_round(cfg, spec, _grad_fn, _lr,
-                                                 mesh, optimizer=opt,
-                                                 donate=False)
-    s0 = sharded.shard_flat_state(
-        flat_lib.init_flat_state(spec, jnp.zeros(D), N_AGENTS, optimizer=opt),
-        mesh)
-    s_sh, m_sh = sh_round(s0, batches, key)
-    return s_flat, m_flat, s_sh, m_sh
-
-
 @multi_device
-class TestShardedEquivalence:
-    @pytest.mark.parametrize("agents_per_device", [1, 4])
-    @pytest.mark.parametrize("gossip_impl", ["dense", "sparse"])
-    @pytest.mark.parametrize("server_enabled", [True, False])
-    def test_matches_flat(self, agents_per_device, gossip_impl,
-                          server_enabled):
-        n_shards = _n_shards_for(agents_per_device)
-        cfg = _setup(gossip_impl=gossip_impl, server_enabled=server_enabled)
-        s_flat, m_flat, s_sh, m_sh = _run_flat_vs_sharded(cfg, n_shards)
-        np.testing.assert_allclose(np.asarray(s_sh.flat),
-                                   np.asarray(s_flat.flat),
-                                   atol=1e-5, rtol=1e-5)
-        np.testing.assert_allclose(np.asarray(m_sh["loss"]),
-                                   np.asarray(m_flat["loss"]), rtol=1e-5)
-        assert int(s_sh.step) == int(s_flat.step) == T_RUN + 1
-
-    @pytest.mark.parametrize("opt_name", ["momentum", "adamw"])
-    @pytest.mark.parametrize("agents_per_device", [1, 4])
-    def test_stateful_optimizers(self, opt_name, agents_per_device):
-        """Sharded moment buffers live as (n_local, D) blocks and evolve
-        identically to the single-device flat buffers."""
-        n_shards = _n_shards_for(agents_per_device)
-        opt = {"momentum": optim.momentum_sgd(),
-               "adamw": optim.adamw()}[opt_name]
-        cfg = _setup()
-        s_flat, _, s_sh, _ = _run_flat_vs_sharded(cfg, n_shards, opt=opt)
-        np.testing.assert_allclose(np.asarray(s_sh.flat),
-                                   np.asarray(s_flat.flat),
-                                   atol=1e-5, rtol=1e-5)
-        jax.tree.map(
-            lambda a, b: np.testing.assert_allclose(
-                np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5),
-            s_sh.opt_state, s_flat.opt_state)
-
-    def test_time_varying_topology(self):
-        """p_fail > 0: both engines resample the same W^t inside the scan."""
-        cfg = _setup(p_fail=0.4, gossip_impl="sparse")
-        s_flat, _, s_sh, _ = _run_flat_vs_sharded(cfg, _n_shards_for(4),
-                                                  key_seed=9)
-        np.testing.assert_allclose(np.asarray(s_sh.flat),
-                                   np.asarray(s_flat.flat),
-                                   atol=1e-5, rtol=1e-5)
-
-    def test_per_step_executor_matches(self):
-        n_shards = _n_shards_for(4)
-        cfg = _setup()
-        spec = flat_lib.make_flat_spec(jnp.zeros(D))
-        batches = jax.random.normal(jax.random.key(11), (T_RUN, N_AGENTS, D))
-        key = jax.random.key(21)
-        mesh = jax.make_mesh((n_shards,), ("agents",),
-                             devices=jax.devices()[:n_shards])
-        flat_step = flat_lib.make_flat_feddec_step(cfg, spec, _grad_fn, _lr,
-                                                   donate=False)
-        sh_step = sharded.make_sharded_feddec_step(cfg, spec, _grad_fn, _lr,
-                                                   mesh, donate=False)
-        s_flat = flat_lib.init_flat_state(spec, jnp.zeros(D), N_AGENTS)
-        s_sh = sharded.shard_flat_state(
-            flat_lib.init_flat_state(spec, jnp.zeros(D), N_AGENTS), mesh)
-        for t in range(T_RUN):
-            s_flat, _ = flat_step(s_flat, batches[t], key)
-            s_sh, _ = sh_step(s_sh, batches[t], key)
-        np.testing.assert_allclose(np.asarray(s_sh.flat),
-                                   np.asarray(s_flat.flat),
-                                   atol=1e-5, rtol=1e-5)
-
+class TestShardedContract:
     def test_sharded_gossip_matches_dense(self):
         """make_sharded_gossip == unsharded einsum on a random failed-link
         W, for both halo and psum_scatter paths."""
@@ -265,6 +169,24 @@ class TestShardedEquivalence:
         with pytest.raises(ValueError, match="mesh"):
             build_train_lowerable(cfg, shape, axes, state_layout="sharded")
 
+    def test_build_train_lowerable_sharded_sweep(self):
+        """The composed lowering: sweep_runs × state_layout='sharded' lowers
+        the whole (R, n_local, D) lattice as ONE shard_map program."""
+        from repro import sharding as shd
+        from repro.configs import ARCH_NAMES, SHAPES, get_config
+        from repro.launch.steps import build_train_lowerable
+        cfg = next(get_config(a) for a in ARCH_NAMES
+                   if get_config(a).fed_agent_layout == "sharded").smoke()
+        n_dev = len(jax.devices())
+        mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+        axes = shd.axes_for_mesh(mesh)
+        shape = next(s for s in SHAPES.values() if s.kind == "train")
+        low = build_train_lowerable(cfg, shape, axes, mesh=mesh,
+                                    fused_steps=2, state_layout="sharded",
+                                    sweep_runs=2, sweep_axis="seed")
+        assert low.name.endswith(":sharded:fused2:sweep2-seed")
+        low.lower(mesh).compile()
+
     def test_state_stays_sharded(self):
         """The carried buffer remains block-sharded across round calls —
         no silent gather back to one device."""
@@ -282,60 +204,3 @@ class TestShardedEquivalence:
         sharding = state.flat.sharding
         assert getattr(sharding, "spec", None) is not None
         assert sharding.spec[0] == "agents"
-
-
-# ---------------------------------------------------------------------------
-# Subprocess smoke (always runs, even on the 1-device tier-1 session)
-# ---------------------------------------------------------------------------
-
-
-_SHARDED_EQUIV = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, numpy as np, jax.numpy as jnp
-from repro.core import FedDecConfig, flat as flat_lib, sharded
-from repro.core import topology as topo
-from repro.core.mixing import MixingDistribution
-
-n, d, t_run = 8, 23, 5
-g = topo.geographic_graph(n, 0.6, seed=3)
-md = MixingDistribution(g, p_fail=0.3, scheme="metropolis")
-spec = flat_lib.make_flat_spec(jnp.zeros(d))
-def grad_fn(p, b, k):
-    return 0.5 * jnp.sum((p - b) ** 2), (p - b) \
-        + jax.random.normal(k, p.shape) * 0.01
-lr = lambda t: jnp.asarray(0.05, jnp.float32)
-batches = jax.random.normal(jax.random.key(1), (t_run, n, d))
-key = jax.random.key(5)
-for impl in ("dense", "sparse", "pallas"):
-    cfg = FedDecConfig(mixing=md, h=4, k=2, gossip_impl=impl)
-    ref_round = flat_lib.make_flat_feddec_round(cfg, spec, grad_fn, lr,
-                                                donate=False)
-    s_ref, _ = ref_round(
-        flat_lib.init_flat_state(spec, jnp.zeros(d), n), batches, key)
-    for n_shards in (2, 8):
-        mesh = jax.make_mesh((n_shards,), ("agents",))
-        sh_round = sharded.make_sharded_feddec_round(
-            cfg, spec, grad_fn, lr, mesh, donate=False)
-        s0 = sharded.shard_flat_state(
-            flat_lib.init_flat_state(spec, jnp.zeros(d), n), mesh)
-        s_sh, _ = sh_round(s0, batches, key)
-        np.testing.assert_allclose(
-            np.asarray(s_sh.flat), np.asarray(s_ref.flat),
-            atol=1e-5, rtol=1e-5, err_msg=f"{impl}, shards={n_shards}")
-print("SHARDED_EQUIV_OK")
-"""
-
-
-def test_sharded_matches_flat_subprocess():
-    """dense/sparse/pallas sharded rounds == single-device flat rounds at
-    agents-per-device ∈ {1, 4}.  Runs under 8 forced host devices in a
-    subprocess so the override never leaks into this session."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.abspath(
-        os.path.join(os.path.dirname(__file__), "..", "src"))
-    res = subprocess.run([sys.executable, "-c", _SHARDED_EQUIV],
-                         capture_output=True, text=True, env=env,
-                         timeout=600)
-    assert res.returncode == 0, res.stderr
-    assert "SHARDED_EQUIV_OK" in res.stdout

@@ -1,14 +1,10 @@
-"""Batched sweep engine ≡ per-run flat-engine trajectories.
+"""Sweep-engine contract tests: heterogeneous t_steps budgets, per-step
+keys, the batched gossip kernels, and plan/helper validation.
 
-Every run slice of the sweep engine (repro.core.sweep) must reproduce the
-single-run flat engine (repro.core.flat) for the same per-run config and
-key: the per-run key folding, per-run mixing matrices (fixed, stochastic,
-and identity/FedAvg members of a mixed lattice), per-run H server periods,
-and the batched gossip kernels are the single-run ops with a leading run
-axis.  Asserted at the 1e-5 acceptance tolerance — and observed bit-exact
-on linreg — across gossip impls × optimizers × server on/off × compress
-codecs, plus the masked heterogeneous-budget (t_steps) regression and the
-batched-kernel unit checks.
+The run-slice ≡ flat trajectory-equivalence grid (impls × codecs ×
+optimizers × server on/off) that used to live here moved to
+tests/conformance/test_grid.py — one differential harness covering all
+four engine lowerings against the single flat reference.
 """
 
 import jax
@@ -95,116 +91,6 @@ def _run_flat(problem, spec, cfg, key, *, t_steps=T_RUN, opt=None):
         compress=cfg.gossip_compress if cfg.gossip_impl != "none"
         else "none")
     return round_fn(state, batches, key)
-
-
-class TestSliceEquivalence:
-    """Property: every run slice == the single-run flat engine, across a
-    heterogeneous (seed × H × topology) lattice."""
-
-    @pytest.mark.parametrize("gossip_impl",
-                             ["dense", "pallas", "sparse", "none"])
-    @pytest.mark.parametrize("server_enabled", [True, False])
-    def test_lattice_slices_match_flat(self, problem, spec, gossip_impl,
-                                       server_enabled):
-        cfgs = [
-            _cfg(problem, h=4, gossip_impl=gossip_impl,
-                 server_enabled=server_enabled),
-            _cfg(problem, h=3, gossip_impl=gossip_impl,
-                 server_enabled=server_enabled, graph_seed=7),
-            _cfg(problem, h=5, gossip_impl=gossip_impl,
-                 server_enabled=server_enabled, radius=0.8),
-        ]
-        out, metrics, keys, _ = _run_sweep(problem, spec, cfgs)
-        for r, cfg in enumerate(cfgs):
-            s_flat, m_flat = _run_flat(problem, spec, cfg, keys[r])
-            np.testing.assert_allclose(np.asarray(out.flat[r]),
-                                       np.asarray(s_flat.flat),
-                                       atol=1e-5, rtol=1e-5)
-            np.testing.assert_allclose(np.asarray(metrics["loss"][:, r]),
-                                       np.asarray(m_flat["loss"]),
-                                       rtol=1e-6)
-        assert int(out.step[0]) == T_RUN + 1
-
-    @pytest.mark.parametrize("opt_name", ["momentum", "adamw"])
-    def test_stateful_optimizers(self, problem, spec, opt_name):
-        opt = {"momentum": optim.momentum_sgd(),
-               "adamw": optim.adamw()}[opt_name]
-        cfgs = [_cfg(problem, h=4), _cfg(problem, h=3, graph_seed=7)]
-        out, _, keys, _ = _run_sweep(problem, spec, cfgs, opt=opt)
-        for r, cfg in enumerate(cfgs):
-            s_flat, _ = _run_flat(problem, spec, cfg, keys[r], opt=opt)
-            np.testing.assert_allclose(np.asarray(out.flat[r]),
-                                       np.asarray(s_flat.flat),
-                                       atol=1e-5, rtol=1e-5)
-            sliced = sweep_lib.slice_run(out, r)
-            jax.tree.map(
-                lambda a, b: np.testing.assert_allclose(
-                    np.asarray(a, np.float32), np.asarray(b, np.float32),
-                    atol=1e-5, rtol=1e-5),
-                sliced.opt_state, s_flat.opt_state)
-
-    def test_stochastic_topology(self, problem, spec):
-        """p_fail > 0 runs resample their own W^t per scanned step."""
-        cfgs = [_cfg(problem, p_fail=0.4, gossip_impl="sparse"),
-                _cfg(problem, p_fail=0.0, gossip_impl="sparse"),
-                _cfg(problem, p_fail=0.7, gossip_impl="sparse",
-                     graph_seed=9)]
-        out, _, keys, _ = _run_sweep(problem, spec, cfgs)
-        for r, cfg in enumerate(cfgs):
-            s_flat, _ = _run_flat(problem, spec, cfg, keys[r])
-            np.testing.assert_allclose(np.asarray(out.flat[r]),
-                                       np.asarray(s_flat.flat),
-                                       atol=1e-5, rtol=1e-5)
-
-    def test_mixed_lattice_with_fedavg_member(self, problem, spec):
-        """A 'none' (FedAvg) member of a dense lattice mixes with W = I and
-        stays bit-identical to its single-run flat trajectory."""
-        fedavg = FedDecConfig(mixing=identity_mixing(problem.n), h=4, k=2,
-                              gossip_impl="none")
-        cfgs = [_cfg(problem, h=4), fedavg]
-        out, _, keys, _ = _run_sweep(problem, spec, cfgs)
-        s_flat, _ = _run_flat(problem, spec, fedavg, keys[1])
-        np.testing.assert_array_equal(np.asarray(out.flat[1]),
-                                      np.asarray(s_flat.flat))
-
-    def test_default_lattice_bit_exact(self, problem, spec):
-        """Observed exact on linreg (the doc claim): dense f32, no
-        tolerance."""
-        cfgs = [_cfg(problem, h=4), _cfg(problem, h=3, graph_seed=7)]
-        out, _, keys, _ = _run_sweep(problem, spec, cfgs)
-        for r, cfg in enumerate(cfgs):
-            s_flat, _ = _run_flat(problem, spec, cfg, keys[r])
-            np.testing.assert_array_equal(np.asarray(out.flat[r]),
-                                          np.asarray(s_flat.flat))
-
-
-class TestCompressedLattice:
-    @pytest.mark.parametrize("compress", ["identity", "bf16", "int8",
-                                          "topk:0.5"])
-    def test_compressed_slices_match_flat(self, problem, spec, compress):
-        cfgs = [_cfg(problem, h=4, compress=compress),
-                _cfg(problem, h=3, compress=compress, graph_seed=7)]
-        out, _, keys, _ = _run_sweep(problem, spec, cfgs)
-        for r, cfg in enumerate(cfgs):
-            s_flat, _ = _run_flat(problem, spec, cfg, keys[r])
-            np.testing.assert_allclose(np.asarray(out.flat[r]),
-                                       np.asarray(s_flat.flat),
-                                       atol=1e-5, rtol=1e-5)
-            np.testing.assert_allclose(np.asarray(out.residual[r]),
-                                       np.asarray(s_flat.residual),
-                                       atol=1e-5, rtol=1e-5)
-
-    def test_identity_bit_identical_to_none(self, problem, spec):
-        """The EF plumbing with the identity codec is the uncompressed
-        trajectory, bit for bit (same key streams: key_c is folded off
-        key_w, never split)."""
-        out_id, _, keys, _ = _run_sweep(
-            problem, spec, [_cfg(problem, compress="identity")])
-        out_none, _, _, _ = _run_sweep(
-            problem, spec, [_cfg(problem, compress="none")], keys=keys)
-        np.testing.assert_array_equal(np.asarray(out_id.flat),
-                                      np.asarray(out_none.flat))
-        assert not np.asarray(out_id.residual).any()
 
 
 class TestHeterogeneousBudgets:
