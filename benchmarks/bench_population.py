@@ -1,0 +1,275 @@
+"""Population engine at scale — streaming cost, overlap, and bit-identity.
+
+Three sections, all against repro.core.population (cohort-sampled FedDec
+with a host-resident memmap store and double-buffered h2d/d2h streaming):
+
+* **scale rows** — n_total ∈ {1e4, 1e5, 1e6} at a fixed cohort (256) and
+  the paper's linreg D=25: µs/round of the overlapped pipeline plus every
+  column of ``launch.analysis.population_cost_model``.  The acceptance
+  invariant is that ``peak_device_bytes`` is IDENTICAL across all rows —
+  device residency is two (cohort, D) buffers + two cohort ELL tables,
+  with **no n_total term** (the whole point of the engine; uniform
+  sampling is Floyd's O(cohort), so the host side is n_total-free too).
+* **overlap** — the double-buffered schedule vs the synchronous baseline
+  (``overlap=False``: block after every round) at a host/device-balanced
+  shape, with the measured per-stage decomposition.  Three numbers:
+  ``speedup_measured`` (wall-clock sync/overlap), ``device_stage_ms``
+  (the blocked round on prepared inputs), ``host_stage_ms`` (sync minus
+  device — gather, subgraph Metropolis + ELL build, upload, write-back).
+  ``speedup_pipeline_bound = sync / max(host, device)`` is what the
+  pipeline delivers when host and device are distinct execution resources
+  (any accelerator, or a multi-core host); it is computed from measured
+  stage times, not a model.  On a single-CPU runner (``host_cpus == 1``,
+  recorded) XLA "device" compute and numpy host work share one core, so
+  wall-clock overlap is physically bounded at ~1.0× there — the guard
+  (benchmarks.check_regression.check_population_doc) therefore enforces
+  the ≥1.2× floor on the bound always and on the measured ratio only
+  when the recording machine had host_cpus > 1.
+* **equivalence** — with ``n_total == cohort_size`` the uniform cohort is
+  the identity slice, the induced subgraph is the full graph, and the ELL
+  tables match ``gossip.make_sparse_gossip`` entry-for-entry: the
+  population trajectory must be **bit-identical** to the flat engine with
+  ``gossip_impl='sparse'`` (``max_abs_err == 0.0``, pinned).
+
+Emits the standard ``name,us_per_call,derived`` CSV lines plus
+results/benchmarks/BENCH_population.json (smoke runs write
+BENCH_population.smoke.json so the committed baseline is never clobbered).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_population [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import feddec, flat as flat_lib
+from repro.core import population as pop
+from repro.core import topology as topo
+from repro.core.flat import FlatFedState
+from repro.core.mixing import MixingDistribution
+from repro.data import linreg
+from repro.launch import analysis
+
+M_ROWS = 10
+RING_K = 2                  # ring-lattice graph → max degree 4 at any n
+SCALE_COHORT, SCALE_D, SCALE_H, K = 256, 25, 10, 2
+# host/device-balanced overlap shape (n_total ≫ cohort² keeps the
+# conflict-drain rate ~cohort²/n_total low so the pipeline stays full)
+OVERLAP = {"n_total": 262144, "cohort": 128, "d": 2048, "h": 8, "m": 4}
+OVERLAP_SMOKE = {"n_total": 65536, "cohort": 64, "d": 512, "h": 8, "m": 2}
+
+
+def _host_cpus() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:  # pragma: no cover - non-Linux
+        return os.cpu_count() or 1
+
+
+def _device_batch_fn(c: int, d: int, h: int, m: int):
+    """(round_idx, ids) → (xb, yb) sampled ON DEVICE from a fixed dataset.
+
+    Batch leading dims (H, c, ...) as the engine requires.  jnp sampling
+    dispatches asynchronously, so the host cost of the data stage is just
+    the dispatch — the benchmark's host stage is the streaming work itself
+    (gather / subgraph / ELL build / upload / write-back).
+    """
+    kx, ky, kd = jax.random.split(jax.random.key(5), 3)
+    x = jax.random.normal(kx, (c, M_ROWS, d)) * 0.25
+    y = jax.random.normal(ky, (c, M_ROWS))
+
+    def samp_one(k):
+        idx = jax.random.randint(k, (c, m), 0, M_ROWS)
+        return (jnp.take_along_axis(x, idx[..., None], axis=1),
+                jnp.take_along_axis(y, idx, axis=1))
+
+    samp = jax.jit(lambda k: jax.vmap(samp_one)(jax.random.split(k, h)))
+
+    def batch_fn(round_idx, ids):
+        return samp(jax.random.fold_in(kd, round_idx))
+
+    return batch_fn
+
+
+def _make_engine(n_total: int, c: int, d: int, h: int,
+                 seed: int = 0) -> pop.PopulationEngine:
+    graph = topo.ring_graph_csr(n_total, RING_K)
+    spec = pop.PopulationSpec(n_total, c, max_degree=2 * RING_K, seed=seed)
+    fspec = flat_lib.make_flat_spec(jnp.zeros(d))
+    lr = lambda t: jnp.float32(1e-3)  # noqa: E731
+    return pop.PopulationEngine(spec, fspec, linreg.make_grad_fn(M_ROWS),
+                                lr, graph, h=h, k=K,
+                                row_init=np.zeros(d, np.float32))
+
+
+def bench_scale(n_total: int, *, rounds: int) -> dict:
+    """One n_total row: µs/round (overlapped) + the exact cost model."""
+    eng = _make_engine(n_total, SCALE_COHORT, SCALE_D, SCALE_H)
+    batch_fn = _device_batch_fn(SCALE_COHORT, SCALE_D, SCALE_H, m=1)
+    eng.run(2, batch_fn, jax.random.key(0))        # compile + warm
+    t0 = time.perf_counter()
+    out = eng.run(rounds, batch_fn, jax.random.key(0))
+    us = (time.perf_counter() - t0) / rounds * 1e6
+    model = analysis.population_cost_model(
+        n_total=n_total, cohort_size=SCALE_COHORT, d=SCALE_D,
+        max_degree=2 * RING_K, h=SCALE_H, param_bytes=4)
+    row = {"us_per_round": round(us, 1), "drains": int(out["drains"]),
+           "rounds": rounds, **model}
+    common.emit(f"population_n{n_total}", us,
+                f"peak_device_bytes={model['peak_device_bytes']};"
+                f"drains={out['drains']}")
+    return row
+
+
+def bench_overlap(shape: dict, *, rounds: int) -> dict:
+    """Sync vs overlapped wall time + the measured stage decomposition."""
+    n_total, c, d, h, m = (shape["n_total"], shape["cohort"], shape["d"],
+                           shape["h"], shape["m"])
+    eng = _make_engine(n_total, c, d, h)
+    batch_fn = _device_batch_fn(c, d, h, m)
+    key = jax.random.key(0)
+    eng.run(2, batch_fn, key)                      # compile + warm
+    eng.run(2, batch_fn, key, overlap=False)
+
+    # device stage alone: the blocked fused round on prepared inputs
+    # (state re-uploaded per call — the round donates its input buffer)
+    ids, flat, mix, _ = eng._prepare(eng._sample(), batch_fn, 0)
+    host_rows = np.asarray(jax.device_get(flat))
+    dev_ts = []
+    for _ in range(rounds):
+        st = FlatFedState(flat=jax.device_put(host_rows),
+                          step=jnp.asarray(1, jnp.int32))
+        batches = batch_fn(0, ids)
+        jax.block_until_ready((st.flat, batches))
+        t0 = time.perf_counter()
+        new_state, _ = eng._round(st, batches, key, mix)
+        jax.block_until_ready(new_state.flat)
+        dev_ts.append(time.perf_counter() - t0)
+    dev_ms = sorted(dev_ts)[len(dev_ts) // 2] * 1e3
+
+    t0 = time.perf_counter()
+    eng.run(rounds, batch_fn, key, overlap=False)
+    sync_ms = (time.perf_counter() - t0) / rounds * 1e3
+    t0 = time.perf_counter()
+    out = eng.run(rounds, batch_fn, key, overlap=True)
+    ov_ms = (time.perf_counter() - t0) / rounds * 1e3
+
+    host_ms = max(sync_ms - dev_ms, 1e-9)
+    measured = sync_ms / ov_ms
+    bound = sync_ms / max(dev_ms, host_ms)
+    rec = {**shape, "rounds": rounds, "drains": int(out["drains"]),
+           "host_cpus": _host_cpus(),
+           "sync_ms_per_round": round(sync_ms, 2),
+           "overlap_ms_per_round": round(ov_ms, 2),
+           "device_stage_ms": round(dev_ms, 2),
+           "host_stage_ms": round(host_ms, 2),
+           "speedup_measured": round(measured, 3),
+           "speedup_pipeline_bound": round(bound, 3)}
+    common.emit(f"population_overlap_c{c}_d{d}", ov_ms * 1e3,
+                f"sync_ms={sync_ms:.2f};measured={measured:.2f}x;"
+                f"bound={bound:.2f}x")
+    return rec
+
+
+def bench_equivalence(*, rounds: int = 3) -> dict:
+    """n_total == cohort: population trajectory ≡ flat sparse, bitwise."""
+    n, d, h = 12, 25, 4
+    problem = linreg.make_problem(n=n, m_rows=M_ROWS, d=d, seed=0)
+    graph = topo.geographic_graph(n, 0.5, seed=1)
+    grad_fn = linreg.make_grad_fn(problem.m_rows)
+    lr = lambda t: jnp.float32(1e-3)  # noqa: E731
+    fspec = flat_lib.make_flat_spec(jnp.zeros(d))
+    key = jax.random.key(7)
+    per_round = [
+        jax.block_until_ready(jax.vmap(
+            lambda k: linreg.sample_minibatch(problem, k, m=2))(
+            jax.random.split(jax.random.fold_in(jax.random.key(3), r), h)))
+        for r in range(rounds)]
+
+    # flat engine, ELL sparse gossip on the full graph
+    fcfg = feddec.FedDecConfig(
+        mixing=MixingDistribution(graph, p_fail=0.0, scheme="metropolis"),
+        h=h, k=3, gossip_impl="sparse")
+    flat_round = flat_lib.make_flat_feddec_round(fcfg, fspec, grad_fn, lr,
+                                                 donate=False)
+    st = flat_lib.init_flat_state(fspec, jnp.zeros(d), n)
+    for r in range(rounds):
+        st, _ = flat_round(st, per_round[r], key)
+    ref = np.asarray(st.flat)
+
+    # population engine over the same graph, cohort == population
+    spec = pop.PopulationSpec(n, n, max_degree=int(graph.degrees.max()))
+    eng = pop.PopulationEngine(spec, fspec, grad_fn, lr,
+                               topo.csr_from_graph(graph), h=h, k=3,
+                               row_init=np.zeros(d, np.float32))
+    eng.run(rounds, lambda r, ids: per_round[r], key)
+    got = eng.store.gather(np.arange(n))
+
+    max_err = float(np.abs(got - ref).max())
+    bit = bool(np.array_equal(got, ref))
+    common.emit("population_equivalence", 0.0,
+                f"max_abs_err={max_err:.1e};bit_identical={bit}")
+    return {"n_total": n, "cohort_size": n, "d": d, "h": h,
+            "rounds": rounds, "max_abs_err": max_err, "bit_identical": bit}
+
+
+def main(smoke: bool = False) -> None:
+    if smoke:
+        grid, rounds, ov_shape, ov_rounds = ((10**4, 10**5), 4,
+                                             OVERLAP_SMOKE, 6)
+    else:
+        grid, rounds, ov_shape, ov_rounds = ((10**4, 10**5, 10**6), 12,
+                                             OVERLAP, 16)
+
+    rows = [bench_scale(n, rounds=rounds) for n in grid]
+    overlap = bench_overlap(ov_shape, rounds=ov_rounds)
+    equivalence = bench_equivalence()
+
+    peaks = {r["peak_device_bytes"] for r in rows}
+    acceptance = {
+        "peak_device_bytes_flat": len(peaks) == 1,
+        "peak_device_bytes": rows[0]["peak_device_bytes"],
+        "max_n_total": max(grid),
+        "overlap_speedup_measured": overlap["speedup_measured"],
+        "overlap_speedup_pipeline_bound": overlap["speedup_pipeline_bound"],
+        "host_cpus": overlap["host_cpus"],
+        "cohort_bit_identical": equivalence["bit_identical"],
+        "note": ("peak_device_bytes has no n_total term (two (cohort, D) "
+                 "buffers + two ELL tables — the streaming invariant); the "
+                 "overlap floor applies to speedup_pipeline_bound (measured "
+                 "stage times, host and device as distinct resources) and "
+                 "additionally to speedup_measured when host_cpus > 1 — a "
+                 "single-CPU runner time-slices XLA compute and numpy host "
+                 "work, capping measured wall-clock overlap at ~1.0x; "
+                 "bit-identity: n_total == cohort makes the uniform cohort "
+                 "the identity slice and the subgraph ELL tables equal to "
+                 "gossip.make_sparse_gossip's, so the trajectory matches "
+                 "the flat sparse engine exactly")}
+    out = {"workload": "cohort-sampled FedDec population engine (linreg)",
+           "backend": jax.default_backend(), "smoke": smoke,
+           "rows": rows, "overlap": overlap, "equivalence": equivalence,
+           "acceptance": acceptance}
+    name = "BENCH_population.smoke.json" if smoke else "BENCH_population.json"
+    path = os.path.join(common.ensure_results_dir(), name)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+    common.write_csv("bench_population.csv", list(rows[0].keys()),
+                     [tuple(r.values()) for r in rows])
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="smaller n_total grid / fewer rounds for CI")
+    args = p.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

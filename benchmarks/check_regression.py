@@ -40,6 +40,15 @@ evidence instead:
     are exact against analysis.sharded_sweep_cost_model, every row passed
     its per-run slice check at 1e-5, and the per-device state/stream
     bytes stay constant across the weak-scaling shard grid.
+  * population — BENCH_population.json rows' byte columns are exact
+    against analysis.population_cost_model, ``peak_device_bytes`` is
+    IDENTICAL across the whole n_total grid (the cohort-streaming
+    invariant: device residency has no n_total term; the committed
+    baseline must reach n_total = 1e6), the streaming-overlap pipeline
+    bound stays ≥ 1.2× (the measured wall-clock ratio additionally ≥ 1.2×
+    when the recording host had > 1 CPU — single-core runners time-slice
+    XLA and host work), and the n_total == cohort trajectory stayed
+    bit-identical to the flat sparse engine.
 
 Run (what ci.yml does):
   PYTHONPATH=src python -m benchmarks.check_regression \\
@@ -84,9 +93,22 @@ REQUIRED_SHARDED_SWEEP = {"r_runs", "n_agents", "n_shards",
                           "dense_collective_bytes", "halo_collective_bytes",
                           "num_halo_rounds", "dispatches_loop",
                           "dispatches_sweep"}
+REQUIRED_POPULATION = {"n_total", "cohort_size", "d", "max_degree",
+                       "steps_per_round", "us_per_round", "drains", "rounds",
+                       "host_store_bytes", "upload_bytes_round",
+                       "writeback_bytes_round", "hostdev_bytes_round",
+                       "subgraph_edge_bytes_round", "peak_device_bytes",
+                       "transfer_us_round"}
+REQUIRED_POPULATION_OVERLAP = {"host_cpus", "sync_ms_per_round",
+                               "overlap_ms_per_round", "device_stage_ms",
+                               "host_stage_ms", "speedup_measured",
+                               "speedup_pipeline_bound", "drains"}
 INT8_HALO_CEILING = 0.30  # acceptance: int8 halo bytes ≤ 0.30× f32 halo
 SWEEP_SMOKE_MARGIN = 1.5   # generous: committed baseline shows 6-17x
 SWEEP_ACCEPT_SPEEDUP = 5.0  # ISSUE acceptance at fig4 shapes (committed)
+POPULATION_OVERLAP_FLOOR = 1.2    # acceptance: streaming overlap ≥ 1.2×
+POPULATION_OVERLAP_SMOKE_FLOOR = 1.0  # relaxed: tiny smoke shapes
+POPULATION_MAX_N = 1_000_000      # acceptance: committed run reaches 1e6
 
 
 class RegressionError(AssertionError):
@@ -355,6 +377,91 @@ def check_sweep_doc(doc: dict, label: str) -> None:
           f"max slice err {sacc['max_slice_err']:.1e}")
 
 
+def check_population_doc(doc: dict, label: str) -> None:
+    """Population-engine evidence: exact cost-model columns, the flat
+    peak-device-memory invariant across n_total, the streaming-overlap
+    floor, and the cohort bit-identity acceptance."""
+    rows = doc.get("rows", [])
+    _require(bool(rows), f"{label}: no benchmark rows")
+    for row in rows:
+        missing = REQUIRED_POPULATION - set(row)
+        _require(not missing, f"{label}: row missing {missing}: {row}")
+        _require(row["us_per_round"] > 0, f"{label}: non-positive time {row}")
+        # exact: every cost-model column recomputed at the row's own shape
+        model = analysis.population_cost_model(
+            n_total=row["n_total"], cohort_size=row["cohort_size"],
+            d=row["d"], max_degree=row["max_degree"],
+            h=row["steps_per_round"], param_bytes=4)
+        for col, want in model.items():
+            _require(row[col] == want,
+                     f"{label}: n_total={row['n_total']} {col} drifted: "
+                     f"row={row[col]} cost-model={want}")
+
+    # the flat invariant: peak device bytes must be IDENTICAL across all
+    # n_total rows (cohort-bounded residency, no n_total term) — with a
+    # vacuity proof that the grid actually spans multiple n_total
+    n_totals = sorted({r["n_total"] for r in rows})
+    _require(len(n_totals) >= 2,
+             f"{label}: n_total grid shrank to {n_totals} — the flat "
+             f"peak-memory evidence needs at least two scales")
+    peaks = {r["peak_device_bytes"] for r in rows}
+    _require(len(peaks) == 1,
+             f"{label}: peak_device_bytes varies across n_total: "
+             f"{sorted(peaks)} — the streaming invariant broke")
+    stores = [r["host_store_bytes"]
+              for r in sorted(rows, key=lambda r: r["n_total"])]
+    _require(stores == sorted(stores) and len(set(stores)) == len(stores),
+             f"{label}: host_store_bytes not increasing with n_total: "
+             f"{stores}")
+
+    # streaming overlap: the pipeline bound (measured stage times) carries
+    # the floor everywhere; the wall-clock ratio additionally when the
+    # recording machine had >1 CPU (a single-core runner time-slices XLA
+    # compute and host numpy, capping measured overlap at ~1.0×)
+    ov = doc.get("overlap", {})
+    missing = REQUIRED_POPULATION_OVERLAP - set(ov)
+    _require(not missing, f"{label}: overlap record missing {missing}")
+    floor = POPULATION_OVERLAP_SMOKE_FLOOR if doc.get("smoke") \
+        else POPULATION_OVERLAP_FLOOR
+    _require(ov["speedup_pipeline_bound"] >= floor,
+             f"{label}: overlap pipeline bound "
+             f"{ov['speedup_pipeline_bound']} < {floor}")
+    if not doc.get("smoke") and ov["host_cpus"] > 1:
+        _require(ov["speedup_measured"] >= POPULATION_OVERLAP_FLOOR,
+                 f"{label}: measured overlap speedup "
+                 f"{ov['speedup_measured']} < {POPULATION_OVERLAP_FLOOR} "
+                 f"on a {ov['host_cpus']}-CPU host")
+
+    eq = doc.get("equivalence", {})
+    _require(bool(eq.get("bit_identical")) and eq.get("max_abs_err") == 0.0,
+             f"{label}: cohort bit-identity vs the flat sparse engine "
+             f"broke: {eq}")
+    _require(eq.get("n_total") == eq.get("cohort_size"),
+             f"{label}: equivalence section no longer runs the "
+             f"n_total == cohort_size anchor: {eq}")
+    if not doc.get("smoke"):
+        _require(max(n_totals) >= POPULATION_MAX_N,
+                 f"{label}: committed baseline tops out at "
+                 f"n_total={max(n_totals)} < {POPULATION_MAX_N}")
+    print(f"[guard] {label}: {len(rows)} rows OK "
+          f"(n_total {n_totals}, peak_device_bytes {peaks.pop():.0f} flat), "
+          f"overlap bound {ov['speedup_pipeline_bound']}x "
+          f"(measured {ov['speedup_measured']}x on {ov['host_cpus']} cpu), "
+          f"bit-identity max_abs_err {eq['max_abs_err']}")
+
+
+def check_population_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
+    """Smoke runs shrink the n_total grid by design; the fixed-cohort
+    contract and the equivalence anchor must survive."""
+    base_cohorts = {r["cohort_size"] for r in baseline["rows"]}
+    new_cohorts = {r["cohort_size"] for r in fresh["rows"]}
+    _require(base_cohorts == new_cohorts,
+             f"fresh population run changed the fixed cohort: "
+             f"{base_cohorts} -> {new_cohorts}")
+    _require(bool(fresh.get("equivalence", {}).get("bit_identical")),
+             "fresh population run lost the bit-identity anchor")
+
+
 def check_sweep_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
     """The fig4-seed-count row (the acceptance shape) must survive."""
     fig4_r = baseline["acceptance"]["fig4_shape"]["seeds"]
@@ -394,6 +501,10 @@ def main() -> None:
                    help="optional: committed BENCH_sweep.json baseline")
     p.add_argument("--fresh-sweep", default=None,
                    help="fresh BENCH_sweep[.smoke].json to check")
+    p.add_argument("--baseline-population", default=None,
+                   help="optional: committed BENCH_population.json baseline")
+    p.add_argument("--fresh-population", default=None,
+                   help="fresh BENCH_population[.smoke].json to check")
     args = p.parse_args()
 
     with open(args.baseline_gossip) as f:
@@ -429,6 +540,17 @@ def main() -> None:
                 baseline_sweep = json.load(f)
             check_sweep_doc(baseline_sweep, "baseline BENCH_sweep")
             check_sweep_baseline_vs_fresh(baseline_sweep, fresh_sweep)
+    if args.fresh_population:
+        with open(args.fresh_population) as f:
+            fresh_population = json.load(f)
+        check_population_doc(fresh_population, "fresh BENCH_population")
+        if args.baseline_population:
+            with open(args.baseline_population) as f:
+                baseline_population = json.load(f)
+            check_population_doc(baseline_population,
+                                 "baseline BENCH_population")
+            check_population_baseline_vs_fresh(baseline_population,
+                                               fresh_population)
     print("[guard] all perf-regression checks passed")
 
 

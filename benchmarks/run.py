@@ -16,6 +16,9 @@ commentary) and writes full curves/tables under results/benchmarks/.
                      fused quant/dequant-mix kernels, linreg convergence)
   bench_sweep      — batched sweep engine vs the per-seed Python loop
                      (one-compile lattice execution at fig4 shapes)
+  bench_population — cohort-sampled population engine (n_total up to 1e6:
+                     flat peak-device bytes, streaming overlap, cohort
+                     bit-identity vs the flat sparse engine)
   ablation_server  — beyond-paper: §5 conjecture (server vs pure gossip)
   roofline         — aggregates results/dryrun into the §Roofline table
 """
@@ -31,9 +34,10 @@ def main() -> None:
     args = p.parse_args()
 
     from benchmarks import (ablation_server, bench_compress, bench_fused,
-                            bench_gossip, bench_kernels, bench_sharded,
-                            bench_sweep, fig2_alpha, fig4_convergence,
-                            roofline, table1_lambda2, theory_check)
+                            bench_gossip, bench_kernels, bench_population,
+                            bench_sharded, bench_sweep, fig2_alpha,
+                            fig4_convergence, roofline, table1_lambda2,
+                            theory_check)
     jobs = {
         "table1_lambda2": lambda: table1_lambda2.main(
             seeds=3 if args.quick else 10),
@@ -48,6 +52,7 @@ def main() -> None:
         "bench_sharded": lambda: bench_sharded.main(smoke=args.quick),
         "bench_compress": lambda: bench_compress.main(smoke=args.quick),
         "bench_sweep": lambda: bench_sweep.main(smoke=args.quick),
+        "bench_population": lambda: bench_population.main(smoke=args.quick),
         "ablation_server": lambda: ablation_server.main(
             t_steps=1500 if args.quick else 3000,
             seeds=3 if args.quick else 6),

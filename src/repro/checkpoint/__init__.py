@@ -1,6 +1,9 @@
-"""Checkpointing: msgpack + zstd pytree save/restore."""
+"""Checkpointing: msgpack + zstd pytree save/restore + chunked
+population-store snapshots (raw .bin, streamed in row chunks)."""
 
-from repro.checkpoint.checkpoint import (load_checkpoint, save_checkpoint,
-                                         latest_step)
+from repro.checkpoint.checkpoint import (latest_population_step, latest_step,
+                                         load_checkpoint, load_population,
+                                         save_checkpoint, save_population)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "save_population", "load_population", "latest_population_step"]

@@ -29,7 +29,8 @@ try:
 except ImportError:  # pragma: no cover - environment-dependent
     zstandard = None
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "save_population", "load_population", "latest_population_step"]
 
 
 def _require_codecs() -> None:
@@ -129,4 +130,102 @@ def latest_step(directory: str) -> int | None:
         return None
     steps = [int(m.group(1)) for name in os.listdir(directory)
              if (m := _STEP_RE.match(name))]
+    return max(steps) if steps else None
+
+
+# ---------------------------------------------------------------------------
+# Population-store checkpoints (repro.core.population)
+#
+# A population store is (n_total, D) — at n_total = 1e6 that is ~100 MB of
+# rows that must never be serialised through one giant buffer.  These
+# helpers stream the memmap in row chunks to a raw little-endian .bin file
+# (+ a JSON sidecar with dtype/shape/step and the per-agent staleness
+# counters' dtype), inside a tmp directory that is atomically renamed into
+# place.  No msgpack/zstd needed: raw rows barely compress and the chunked
+# path must work even without the optional codecs.
+# ---------------------------------------------------------------------------
+
+_POP_RE = re.compile(r"^pop_(\d+)$")
+_POP_CHUNK_ROWS = 65536
+
+
+def save_population(directory: str, step: int, rows: np.ndarray,
+                    last_round: np.ndarray,
+                    chunk_rows: int = _POP_CHUNK_ROWS) -> str:
+    """Chunk-stream the population store to ``<directory>/pop_<step>/``.
+
+    ``rows`` is the (n_total, D) host store (ndarray or np.memmap);
+    ``last_round`` the (n_total,) staleness counters.  Writes are sliced to
+    ``chunk_rows`` rows so peak extra memory is one chunk, never the store.
+    """
+    import json
+    import shutil
+
+    rows = np.asarray(rows) if not isinstance(rows, np.memmap) else rows
+    last_round = np.asarray(last_round)
+    if rows.ndim != 2 or last_round.shape != (rows.shape[0],):
+        raise ValueError(
+            f"rows must be (n_total, D) with last_round (n_total,), got "
+            f"{rows.shape} / {last_round.shape}")
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"pop_{step}")
+    tmp = path + ".tmp"
+    if os.path.isdir(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    meta = {"n_total": int(rows.shape[0]), "d": int(rows.shape[1]),
+            "dtype": rows.dtype.name, "step": int(step),
+            "last_round_dtype": last_round.dtype.name}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(tmp, "rows.bin"), "wb") as f:
+        for lo in range(0, rows.shape[0], chunk_rows):
+            f.write(np.ascontiguousarray(
+                rows[lo:lo + chunk_rows]).tobytes())
+    with open(os.path.join(tmp, "last_round.bin"), "wb") as f:
+        for lo in range(0, last_round.shape[0], chunk_rows):
+            f.write(np.ascontiguousarray(
+                last_round[lo:lo + chunk_rows]).tobytes())
+    if os.path.isdir(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+    return path
+
+
+def load_population(directory: str, step: int | None = None, *,
+                    mmap: bool = True
+                    ) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Load ``(rows, last_round, meta)``; ``step=None`` loads the latest.
+
+    ``mmap=True`` (default) maps rows.bin read-only — restoring a 1e6-row
+    store costs no bulk read; pass ``mmap=False`` for an in-memory copy
+    (small stores, or when the checkpoint will be deleted).
+    """
+    import json
+
+    if step is None:
+        step = latest_population_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no population checkpoints in {directory}")
+    path = os.path.join(directory, f"pop_{step}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    shape = (meta["n_total"], meta["d"])
+    dtype = np.dtype(meta["dtype"])
+    rows_path = os.path.join(path, "rows.bin")
+    if mmap:
+        rows = np.memmap(rows_path, dtype=dtype, mode="r", shape=shape)
+    else:
+        rows = np.fromfile(rows_path, dtype=dtype).reshape(shape)
+    last_round = np.fromfile(os.path.join(path, "last_round.bin"),
+                             dtype=np.dtype(meta["last_round_dtype"]))
+    return rows, last_round, meta
+
+
+def latest_population_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for name in os.listdir(directory)
+             if (m := _POP_RE.match(name))]
     return max(steps) if steps else None

@@ -15,12 +15,15 @@ Public surface:
                (shard_map: psum_scatter dense gossip, ppermute halo)
   sweep      — R independent runs batched into one (R, n_agents, D)
                program (the seed × H × topology lattice executor)
+  population — cohort-sampled FedDec over an n_total ≫ cohort host-resident
+               population (memmap store, double-buffered h2d/d2h streaming,
+               sparse-only subgraph mixing, optional staleness tilt)
   fedavg     — the FedAvg baseline (degenerate 𝒲 = {I})
   theory     — Theorem 1's constants and bound curve, executable
 """
 
-from repro.core import (engine, fedavg, feddec, flat, gossip, mixing, server,
-                        sharded, sweep, theory, topology)
+from repro.core import (engine, fedavg, feddec, flat, gossip, mixing,
+                        population, server, sharded, sweep, theory, topology)
 from repro.core.engine import (EngineSpec, make_engine_round, make_engine_step,
                                make_sharded_sweep_round,
                                make_sharded_sweep_step, parse_engine_spec,
@@ -32,6 +35,8 @@ from repro.core.flat import (FlatFedState, FlatSpec, init_flat_state,
                              make_flat_feddec_round, make_flat_feddec_step,
                              make_flat_spec)
 from repro.core.mixing import MixingDistribution, identity_mixing
+from repro.core.population import (PopulationEngine, PopulationSpec,
+                                   PopulationStore)
 from repro.core.sharded import (make_sharded_feddec_round,
                                 make_sharded_feddec_step, shard_flat_state)
 from repro.core.sweep import (SweepFedState, SweepPlan, init_sweep_state,
@@ -40,7 +45,8 @@ from repro.core.sweep import (SweepFedState, SweepPlan, init_sweep_state,
 
 __all__ = [
     "topology", "mixing", "gossip", "server", "engine", "feddec", "flat",
-    "sharded", "sweep", "fedavg", "theory",
+    "sharded", "sweep", "population", "fedavg", "theory",
+    "PopulationSpec", "PopulationStore", "PopulationEngine",
     "EngineSpec", "parse_engine_spec", "make_engine_step",
     "make_engine_round", "resolve_gossip", "make_sharded_sweep_step",
     "make_sharded_sweep_round", "shard_sweep_state",

@@ -71,7 +71,8 @@ __all__ = ["GOSSIP_IMPLS", "LAYOUTS", "EngineSpec", "EngineOps",
            "finalize_executor", "resolve_gossip", "check_gossip_impl",
            "unknown_gossip_impl", "make_engine_step", "make_engine_round",
            "make_sharded_sweep_step", "make_sharded_sweep_round",
-           "shard_sweep_state", "sweep_state_specs"]
+           "shard_sweep_state", "sweep_state_specs",
+           "make_population_round"]
 
 GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
 LrFn = Callable[[jax.Array], jax.Array]
@@ -319,6 +320,22 @@ def finalize_executor(fn, donate: bool = True, jit: bool = True):
     if not jit:
         return fn
     return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def make_population_round(spec, flat_spec, grad_fn: GradFn, lr_fn: LrFn,
+                          **kwargs):
+    """The population engine's cohort round, through the executor surface.
+
+    ``spec`` is a :class:`repro.core.population.PopulationSpec`; the result
+    is ``round_fn(state, batches, key, mix)`` — the same fused Algorithm-1
+    scan body every layout runs (:func:`build_step_body`), with the mixing
+    op swapped for the per-round traced cohort-subgraph tables.  The
+    host↔device streaming driver lives in
+    :class:`repro.core.population.PopulationEngine`.
+    """
+    from repro.core import population as population_lib
+    return population_lib.make_cohort_round(spec, flat_spec, grad_fn, lr_fn,
+                                            **kwargs)
 
 
 # ---------------------------------------------------------------------------

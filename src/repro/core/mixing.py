@@ -25,7 +25,7 @@ import numpy as np
 from repro.core import topology as topo
 
 __all__ = ["MixingDistribution", "identity_mixing",
-           "sample_metropolis_traced"]
+           "sample_metropolis_traced", "staleness_tilted_weights"]
 
 
 @jax.tree_util.register_static
@@ -123,6 +123,38 @@ def sample_metropolis_traced(key: jax.Array, adjacency: jax.Array,
     w = w.at[jnp.arange(n), jnp.arange(n)].set(0.0)
     diag = 1.0 - w.sum(axis=1)
     return w.at[jnp.arange(n), jnp.arange(n)].set(diag).astype(dtype)
+
+
+def staleness_tilted_weights(w: np.ndarray, ages: np.ndarray,
+                             beta: float) -> np.ndarray:
+    """FedPAE-style age tilt of a mixing matrix (host-side, numpy).
+
+    Each off-diagonal column j is scaled by its sender's *freshness*
+    ``s_j = 1/(1 + β·age_j)`` (``age_j`` = rounds since agent j last
+    participated), and the diagonal is rebuilt so rows still sum to 1 —
+    stale peers contribute less to the average, exactly the asynchronous
+    peer-exchange weighting of FedPAE (arxiv 2410.14075).  ``β = 0`` returns
+    ``w`` unchanged (bit-exact), so the plain-Metropolis trajectories of the
+    population engine are unaffected by the feature being wired in.
+
+    The result is row-stochastic but generally *not* doubly stochastic —
+    the documented Assumption-2 deviation of staleness-weighted mixing
+    (it degenerates back to the symmetric W as all ages → 0).
+    """
+    if beta == 0.0:
+        return w
+    if beta < 0.0:
+        raise ValueError(f"staleness β must be ≥ 0, got {beta}")
+    w = np.asarray(w, dtype=np.float64)
+    ages = np.asarray(ages, dtype=np.float64)
+    if ages.shape != (w.shape[0],):
+        raise ValueError(
+            f"ages must be ({w.shape[0]},), got {ages.shape}")
+    fresh = 1.0 / (1.0 + beta * np.maximum(ages, 0.0))
+    out = w * fresh[None, :]
+    np.fill_diagonal(out, 0.0)
+    np.fill_diagonal(out, 1.0 - out.sum(axis=1))
+    return out
 
 
 def identity_mixing(n: int) -> "MixingDistribution":

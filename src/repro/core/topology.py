@@ -27,17 +27,23 @@ import numpy as np
 
 __all__ = [
     "Graph",
+    "SparseGraph",
     "geographic_graph",
     "erdos_renyi_graph",
     "ring_graph",
+    "ring_graph_csr",
     "fully_connected_graph",
     "chain_graph",
+    "csr_from_graph",
+    "induced_subgraph",
     "laplacian_weights",
     "metropolis_weights",
+    "metropolis_weights_csr",
     "max_degree_weights",
     "build_weights",
     "lambda2",
     "lambda2_batched",
+    "lambda2_sparse",
     "lambda2_hat_fixed",
     "lambda2_hat_fixed_batched",
     "alpha_from_lambda2_hat",
@@ -45,9 +51,33 @@ __all__ = [
     "edge_list",
     "csr_edges",
     "permutation_schedule",
+    "N_DENSE_MAX",
+    "check_dense_size",
 ]
 
 WeightScheme = Literal["laplacian", "metropolis", "max_degree"]
+
+#: Largest n for which the dense-(n, n) helpers will silently allocate.
+#: Above this every dense construction raises instead of densifying — the
+#: population engine's n_total = 1e6 must stay in CSR land (a single dense
+#: f64 W at n = 1e6 would be 8 TB).  Override per call with ``n_dense_max=``.
+N_DENSE_MAX = 4096
+
+
+def check_dense_size(n: int, what: str, n_dense_max: int | None = None) -> int:
+    """Guard against latent O(n²) densification (population-engine regime).
+
+    Raises ``ValueError`` when ``n`` exceeds the configured dense ceiling
+    (``n_dense_max`` argument, else module default :data:`N_DENSE_MAX`).
+    """
+    limit = N_DENSE_MAX if n_dense_max is None else int(n_dense_max)
+    if n > limit:
+        raise ValueError(
+            f"{what} would materialize a dense ({n}, {n}) array "
+            f"(n_dense_max={limit}); use SparseGraph and the CSR variants "
+            f"(csr_from_graph / metropolis_weights_csr / lambda2_sparse / "
+            f"induced_subgraph) or pass a larger n_dense_max explicitly")
+    return n
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,11 +207,158 @@ def is_connected(graph: Graph) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Sparse (CSR) graphs — the n ≫ n_dense_max population regime
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseGraph:
+    """An undirected graph in CSR form — no (n, n) array, ever.
+
+    The population engine (repro.core.population) keeps its n_total-sized
+    topology in this form and only densifies *induced cohort subgraphs*
+    (cohort_size ≤ :data:`N_DENSE_MAX`) via :func:`induced_subgraph`.
+
+    Attributes:
+      n: number of nodes.
+      indptr: (n+1,) int64 — node i's neighbour span is
+        ``indices[indptr[i]:indptr[i+1]]``.
+      indices: (nnz,) int64, neighbour ids **sorted ascending per row**, no
+        self-loops; symmetric (j in row i ⇔ i in row j) by construction.
+      name: human-readable tag used in logs and benchmark tables.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    name: str = "sparse_graph"
+
+    def __post_init__(self):
+        indptr = np.ascontiguousarray(self.indptr, dtype=np.int64)
+        indices = np.ascontiguousarray(self.indices, dtype=np.int64)
+        if indptr.ndim != 1 or indptr.shape[0] < 1:
+            raise ValueError(f"indptr must be (n+1,), got {indptr.shape}")
+        if np.any(np.diff(indptr) < 0) or indptr[0] != 0:
+            raise ValueError("indptr must start at 0 and be non-decreasing")
+        if indices.ndim != 1 or indices.shape[0] != indptr[-1]:
+            raise ValueError(
+                f"indices length {indices.shape} != indptr[-1] {indptr[-1]}")
+        n = indptr.shape[0] - 1
+        if indices.size and (indices.min() < 0 or indices.max() >= n):
+            raise ValueError("neighbour ids out of range")
+        object.__setattr__(self, "indptr", indptr)
+        object.__setattr__(self, "indices", indices)
+
+    @property
+    def n(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.indices.shape[0]) // 2
+
+    @property
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max()) if self.n else 0
+
+    def validate(self) -> "SparseGraph":
+        """Full (O(|E| log |E|)) structural check: sorted rows, no
+        self-loops, symmetric.  Not run in __post_init__ — call from tests
+        or after hand-building a CSR."""
+        row = np.repeat(np.arange(self.n, dtype=np.int64),
+                        np.diff(self.indptr))
+        if np.any(row == self.indices):
+            raise ValueError("self-loops are not allowed")
+        for i in range(self.n):
+            js = self.indices[self.indptr[i]:self.indptr[i + 1]]
+            if np.any(np.diff(js) <= 0):
+                raise ValueError(f"row {i} neighbours not strictly ascending")
+        fwd = set(zip(row.tolist(), self.indices.tolist()))
+        if any((j, i) not in fwd for (i, j) in fwd):
+            raise ValueError("adjacency must be symmetric")
+        return self
+
+
+def ring_graph_csr(n: int, k: int = 1) -> SparseGraph:
+    """CSR ring lattice (node i ↔ i±1…i±k mod n) — any n, no dense array.
+
+    Mirrors :func:`ring_graph`; ``csr_from_graph(ring_graph(n, k))`` is
+    structurally identical for small n (tested).
+    """
+    # offsets beyond n//2 alias into duplicate edges; keep the simple regime
+    if n < 3 or k < 1 or 2 * k >= n:
+        raise ValueError(f"ring_csr(n={n}, k={k}) needs n ≥ 3 and 2k < n")
+    offsets = np.concatenate([np.arange(-k, 0), np.arange(1, k + 1)])
+    ids = np.arange(n, dtype=np.int64)
+    nbrs = (ids[:, None] + offsets[None, :]) % n          # (n, 2k)
+    nbrs = np.sort(nbrs, axis=1)
+    indptr = np.arange(n + 1, dtype=np.int64) * (2 * k)
+    return SparseGraph(indptr=indptr, indices=nbrs.reshape(-1),
+                       name=f"ring_csr(n={n},k={k})")
+
+
+def csr_from_graph(graph: Graph) -> SparseGraph:
+    """Dense Graph → SparseGraph (row-major nonzero scan ⇒ sorted rows)."""
+    recv, send = np.nonzero(graph.adjacency)
+    counts = np.bincount(recv, minlength=graph.n)
+    indptr = np.zeros(graph.n + 1, dtype=np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return SparseGraph(indptr=indptr, indices=send.astype(np.int64),
+                       name=f"csr({graph.name})")
+
+
+def induced_subgraph(graph: "SparseGraph | Graph", ids) -> Graph:
+    """Induced subgraph on ``ids`` with CSR reindex — never a dense parent W.
+
+    Row ``r`` of the result is parent node ``ids[r]`` (the given order is
+    preserved); an edge (r, s) exists iff (ids[r], ids[s]) is a parent edge.
+    Cost is O(Σ_{i∈ids} deg(i) · log |ids|) — the per-round cohort-subgraph
+    build of the population engine, independent of n_total.
+
+    The result is a small *dense* Graph (cohort-sized), so it plugs straight
+    into :func:`metropolis_weights` / the ELL gossip tables.
+    """
+    ids = np.asarray(ids, dtype=np.int64)
+    if ids.ndim != 1:
+        raise ValueError(f"ids must be 1-D, got shape {ids.shape}")
+    c = ids.shape[0]
+    check_dense_size(c, "induced_subgraph")
+    if np.unique(ids).shape[0] != c:
+        raise ValueError("ids must be unique")
+    if isinstance(graph, Graph):
+        graph = csr_from_graph(graph)
+    if ids.size and (ids.min() < 0 or ids.max() >= graph.n):
+        raise ValueError("ids out of range for the parent graph")
+
+    order = np.argsort(ids, kind="stable")
+    sorted_ids = ids[order]
+    # flatten the cohort's neighbour slices, then binary-search each
+    # neighbour against the cohort id set (CSR reindex, no dense parent)
+    deg = np.diff(graph.indptr)[ids]
+    src = np.repeat(np.arange(c, dtype=np.int64), deg)
+    starts = graph.indptr[ids]
+    flat = np.concatenate(
+        [graph.indices[s:s + d] for s, d in zip(starts, deg)]) \
+        if c else np.zeros((0,), dtype=np.int64)
+    adj = np.zeros((c, c), dtype=bool)
+    if flat.size:
+        loc = np.searchsorted(sorted_ids, flat)
+        loc = np.clip(loc, 0, c - 1)
+        hit = sorted_ids[loc] == flat
+        adj[src[hit], order[loc[hit]]] = True
+    return Graph(adj, name=f"induced({graph.name},c={c})")
+
+
+# ---------------------------------------------------------------------------
 # Mixing-weight construction (Assumption 2: symmetric, doubly stochastic)
 # ---------------------------------------------------------------------------
 
 
-def laplacian_weights(graph: Graph) -> np.ndarray:
+def laplacian_weights(graph: Graph,
+                      n_dense_max: int | None = None) -> np.ndarray:
     """Best-constant Laplacian weights W = I − εL, ε = 2/(λ₁(L)+λ_{n−1}(L)).
 
     Xiao & Boyd, "Fast linear iterations for distributed averaging" [26] —
@@ -189,6 +366,7 @@ def laplacian_weights(graph: Graph) -> np.ndarray:
     The result is symmetric and doubly stochastic with λ₂(W) minimized over
     constant-weight schemes.
     """
+    check_dense_size(graph.n, "laplacian_weights", n_dense_max)
     adj = graph.adjacency.astype(np.float64)
     deg = adj.sum(axis=1)
     lap = np.diag(deg) - adj
@@ -199,13 +377,15 @@ def laplacian_weights(graph: Graph) -> np.ndarray:
     return w
 
 
-def metropolis_weights(graph: Graph) -> np.ndarray:
+def metropolis_weights(graph: Graph,
+                       n_dense_max: int | None = None) -> np.ndarray:
     """Metropolis–Hastings weights: W_ij = 1/(1+max(d_i,d_j)) on edges.
 
     Doubly stochastic for any subgraph, which makes them the right choice for
     random link failures: deleting edges and recomputing the diagonal keeps
     Assumption 2 satisfied.  Used by :mod:`repro.core.mixing` for W^t ~ 𝒲.
     """
+    check_dense_size(graph.n, "metropolis_weights", n_dense_max)
     adj = graph.adjacency
     deg = adj.sum(axis=1)
     dmax = np.maximum(deg[:, None], deg[None, :])
@@ -215,8 +395,10 @@ def metropolis_weights(graph: Graph) -> np.ndarray:
     return w
 
 
-def max_degree_weights(graph: Graph) -> np.ndarray:
+def max_degree_weights(graph: Graph,
+                       n_dense_max: int | None = None) -> np.ndarray:
     """Uniform 1/(d_max+1) edge weights — the simplest doubly stochastic W."""
+    check_dense_size(graph.n, "max_degree_weights", n_dense_max)
     adj = graph.adjacency
     dmax = int(adj.sum(axis=1).max())
     w = np.where(adj, 1.0 / (dmax + 1.0), 0.0)
@@ -231,12 +413,72 @@ _SCHEMES = {
 }
 
 
-def build_weights(graph: Graph, scheme: WeightScheme = "laplacian") -> np.ndarray:
+def build_weights(graph: Graph, scheme: WeightScheme = "laplacian",
+                  n_dense_max: int | None = None) -> np.ndarray:
     try:
-        return _SCHEMES[scheme](graph)
+        fn = _SCHEMES[scheme]
     except KeyError:
         raise ValueError(f"unknown weight scheme {scheme!r}; "
                          f"choose from {sorted(_SCHEMES)}") from None
+    return fn(graph, n_dense_max=n_dense_max)
+
+
+def metropolis_weights_csr(graph: SparseGraph
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Metropolis weights on a CSR graph without densifying.
+
+    Returns ``(vals, diag)``: ``vals`` aligned with ``graph.indices``
+    (``vals[e] = 1/(1+max(d_i, d_j))`` for directed edge e) and the
+    row-stochastic diagonal ``diag[i] = 1 − Σ_j vals``.  Identical values to
+    :func:`metropolis_weights` on the densified graph (tested), at
+    O(|E|) memory — the n_total-scale companion of the dense helper.
+    """
+    deg = np.diff(graph.indptr).astype(np.float64)
+    row = np.repeat(np.arange(graph.n, dtype=np.int64), np.diff(graph.indptr))
+    vals = 1.0 / (1.0 + np.maximum(deg[row], deg[graph.indices]))
+    diag = 1.0 - np.bincount(row, weights=vals, minlength=graph.n)
+    return vals, diag
+
+
+def lambda2_sparse(graph: SparseGraph, vals: np.ndarray | None = None,
+                   diag: np.ndarray | None = None, *, iters: int = 2000,
+                   tol: float = 1e-12, seed: int = 0) -> float:
+    """|λ₂(W)| of a doubly stochastic CSR-supported W — no dense (n, n).
+
+    ``(vals, diag)`` as returned by :func:`metropolis_weights_csr` (the
+    default when omitted).  Power iteration on W deflated by its known top
+    eigenpair (λ₁ = 1, v₁ = 1/√n — exact for any doubly stochastic W), so
+    each iteration is one O(|E|) sparse matvec.  Agrees with the dense
+    :func:`lambda2` to ``tol``-level accuracy (tested).
+    """
+    if vals is None or diag is None:
+        vals, diag = metropolis_weights_csr(graph)
+    n = graph.n
+    row = np.repeat(np.arange(n, dtype=np.int64), np.diff(graph.indptr))
+    col = graph.indices
+
+    def matvec(x):
+        y = diag * x
+        np.add.at(y, row, vals * x[col])
+        return y
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n)
+    x -= x.mean()                       # deflate the all-ones eigenvector
+    x /= np.linalg.norm(x)
+    lam = 0.0
+    for _ in range(iters):
+        y = matvec(x)
+        y -= y.mean()
+        nrm = np.linalg.norm(y)
+        if nrm == 0.0:
+            return 0.0
+        y /= nrm
+        lam_new = float(abs(y @ matvec(y)))
+        if abs(lam_new - lam) <= tol * max(1.0, abs(lam_new)):
+            return lam_new
+        lam, x = lam_new, y
+    return lam
 
 
 # ---------------------------------------------------------------------------
@@ -244,8 +486,14 @@ def build_weights(graph: Graph, scheme: WeightScheme = "laplacian") -> np.ndarra
 # ---------------------------------------------------------------------------
 
 
-def lambda2(w: np.ndarray) -> float:
-    """|λ₂(W)| — second-largest eigenvalue magnitude of a symmetric W."""
+def lambda2(w: np.ndarray, n_dense_max: int | None = None) -> float:
+    """|λ₂(W)| — second-largest eigenvalue magnitude of a symmetric W.
+
+    Dense O(n³) eigendecomposition; above ``n_dense_max`` it raises — use
+    :func:`lambda2_sparse` on a :class:`SparseGraph` instead.
+    """
+    w = np.asarray(w)
+    check_dense_size(w.shape[-1], "lambda2", n_dense_max)
     eig = np.linalg.eigvalsh(np.asarray(w, dtype=np.float64))
     mags = np.sort(np.abs(eig))[::-1]
     return float(mags[1])

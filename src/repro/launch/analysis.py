@@ -21,16 +21,17 @@ import numpy as np
 
 from repro.launch import hlo_analysis
 
-__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "CollectiveStats",
+__all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "H2D_BW", "CollectiveStats",
            "parse_collectives", "roofline_terms", "RooflineReport",
            "dtype_bytes", "gossip_cost_model", "sharded_gossip_cost_model",
            "sweep_cost_model", "sharded_sweep_cost_model",
-           "compress_row_bytes",
+           "population_cost_model", "compress_row_bytes",
            "compressed_halo_cost_model", "COMPRESS_SCHEMES", "hlo_analysis"]
 
 PEAK_FLOPS = 197e12   # bf16 per chip
 HBM_BW = 819e9        # bytes/s per chip
 ICI_BW = 50e9         # bytes/s per link
+H2D_BW = 16e9         # bytes/s host↔device (PCIe-class; population streaming)
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
@@ -344,6 +345,52 @@ def sharded_sweep_cost_model(*, r_runs: int, n_agents: int, d: int,
     if t_steps is not None:
         out["t_steps"] = int(t_steps)
     return out
+
+
+def population_cost_model(*, n_total: int, cohort_size: int, d: int,
+                          max_degree: int, h: int, param_bytes: int = 4,
+                          idx_bytes: int = 4, counter_bytes: int = 8,
+                          h2d_bw: float = H2D_BW) -> dict:
+    """Analytic bytes/round model of the population engine.
+
+    The population engine (repro.core.population) holds the (n_total, D)
+    row store on the host (memmap) and streams one cohort per round, so
+    **every device-side term below depends only on the cohort** — the flat
+    peak-memory invariant the regression guard pins across
+    n_total ∈ {1e4, 1e5, 1e6}.
+
+    Returns the exact columns the regression guard recomputes:
+      * ``host_store_bytes``       — n_total·(D·b + counter_bytes): the
+        memmap rows + per-agent last-participation counters (host only);
+      * ``upload_bytes_round`` / ``writeback_bytes_round`` — cohort·D·b
+        each; ``hostdev_bytes_round`` their sum (the h2d/d2h stream the
+        double buffer hides under device compute);
+      * ``subgraph_edge_bytes_round`` — the per-round cohort ELL tables:
+        cohort·max_degree·(idx + param bytes) + cohort·(diag + cluster);
+      * ``peak_device_bytes``      — 2·(cohort·D·b) + 2·edge tables: two
+        in-flight cohort buffers (double buffering), **no n_total term**;
+      * ``transfer_us_round``      — hostdev_bytes_round / h2d_bw, the
+        synchronous-transfer time the overlap reclaims.
+    """
+    row_bytes = float(cohort_size * d * param_bytes)
+    edge_bytes = float(cohort_size * max_degree * (idx_bytes + param_bytes)
+                       + cohort_size * (param_bytes + idx_bytes))
+    hostdev = 2.0 * row_bytes
+    return {
+        "n_total": int(n_total),
+        "cohort_size": int(cohort_size),
+        "d": int(d),
+        "max_degree": int(max_degree),
+        "steps_per_round": int(h),
+        "host_store_bytes": float(n_total * (d * param_bytes
+                                             + counter_bytes)),
+        "upload_bytes_round": row_bytes,
+        "writeback_bytes_round": row_bytes,
+        "hostdev_bytes_round": hostdev,
+        "subgraph_edge_bytes_round": edge_bytes,
+        "peak_device_bytes": 2.0 * row_bytes + 2.0 * edge_bytes,
+        "transfer_us_round": hostdev / h2d_bw * 1e6,
+    }
 
 
 COMPRESS_SCHEMES = ("none", "bf16", "int8", "topk:0.1")

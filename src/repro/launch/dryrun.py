@@ -107,7 +107,11 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             mesh_agents: int | None = None,
             gossip_compress: str = "none",
             sweep_runs: int | None = None,
-            sweep_axis: str = "seed") -> dict:
+            sweep_axis: str = "seed",
+            n_total: int | None = None,
+            cohort_size: int = 256,
+            sampling: str = "uniform",
+            staleness: float = 0.0) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -120,6 +124,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         tag += f"__{state_layout}"
     if sweep_runs and shape.kind == "train":
         tag += f"__sweep{sweep_runs}-{sweep_axis}"
+    if n_total and shape.kind == "train":
+        tag += f"__pop{n_total}"
     rec: dict = {"arch": arch, "shape": shape_name,
                  "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
                  "fused_steps": fused_steps if shape.kind == "train" else None,
@@ -130,6 +136,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     if sweep_runs and shape.kind == "train":
         rec["sweep_runs"] = sweep_runs
         rec["sweep_axis"] = sweep_axis
+    if n_total and shape.kind == "train":
+        rec["population"] = {"n_total": n_total, "cohort_size": cohort_size,
+                             "sampling": sampling, "staleness": staleness}
     t0 = time.time()
     try:
         from repro.configs.base import FedConfig
@@ -203,6 +212,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                             num_halo_rounds=sh["num_halo_rounds"],
                             param_bytes=gm["param_bytes"],
                             residual=gossip_compress != "none")
+            if n_total:
+                gm = rec["gossip_cost_model"]
+                rec["population_cost_model"] = analysis.population_cost_model(
+                    n_total=n_total, cohort_size=cohort_size, d=gm["d"],
+                    max_degree=8, h=fused_steps or 1,
+                    param_bytes=gm["param_bytes"])
         print(f"[ok]   {tag}: lower {t_lower:.0f}s compile {t_compile:.0f}s")
         print(f"       memory_analysis: {mem}")
         print(f"       hlo(loop-aware): {hlo.summary()}")
@@ -233,6 +248,14 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                       f"{ssm['dense_collective_bytes'] / 1e6:.2f} MB, halo "
                       f"{ssm['halo_collective_bytes'] / 1e6:.2f} MB "
                       f"({ssm['num_halo_rounds']} rounds)")
+        if shape.kind == "train" and n_total:
+            pm = rec["population_cost_model"]
+            print(f"       population n_total={n_total} "
+                  f"(cohort {cohort_size}, sampling={sampling}): host store "
+                  f"{pm['host_store_bytes'] / 1e9:.2f} GB, "
+                  f"h2d+d2h {pm['hostdev_bytes_round'] / 1e6:.2f} MB/round, "
+                  f"peak device {pm['peak_device_bytes'] / 1e6:.2f} MB "
+                  f"(n_total-free)")
         if shape.kind == "train" and mesh_agents \
                 and "sharded" in rec.get("gossip_cost_model", {}):
             sh = rec["gossip_cost_model"]["sharded"]
@@ -304,6 +327,21 @@ def main() -> None:
                    choices=["seed", "h", "topology"],
                    help="lattice axis for --sweep-runs (see "
                         "launch.steps.sweep_lattice_configs)")
+    p.add_argument("--n-total", type=int, default=None, metavar="N",
+                   help="record the population-engine cost model "
+                        "(repro.core.population: cohort-sampled FedDec with "
+                        "host-resident (N, D) store and streamed cohorts — "
+                        "analysis.population_cost_model) on train-shape "
+                        "records")
+    p.add_argument("--cohort-size", type=int, default=256, metavar="C",
+                   help="active cohort size per round for --n-total")
+    p.add_argument("--sampling", default="uniform",
+                   choices=["uniform", "weighted", "stale"],
+                   help="cohort sampler recorded alongside --n-total "
+                        "(does not change the byte model)")
+    p.add_argument("--staleness", type=float, default=0.0, metavar="BETA",
+                   help="FedPAE staleness-tilt beta recorded alongside "
+                        "--n-total (does not change the byte model)")
     p.add_argument("--out", default=RESULTS_DIR)
     args = p.parse_args()
 
@@ -323,7 +361,11 @@ def main() -> None:
                               mesh_agents=args.mesh_agents,
                               gossip_compress=args.gossip_compress,
                               sweep_runs=args.sweep_runs,
-                              sweep_axis=args.sweep_axis)
+                              sweep_axis=args.sweep_axis,
+                              n_total=args.n_total,
+                              cohort_size=args.cohort_size,
+                              sampling=args.sampling,
+                              staleness=args.staleness)
                 if rec["status"] != "ok":
                     failures.append(rec)
     print(f"\n{len(failures)} failures / "

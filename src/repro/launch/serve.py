@@ -29,10 +29,24 @@ def generate(model, params, prompt_tokens: jax.Array, *,
              long_variant: bool = False,
              temperature: float = 0.0, key: jax.Array | None = None):
     """Greedy/temperature decode.  prompt_tokens: (B, S_prompt)."""
+    if prompt_tokens.ndim != 2:
+        raise ValueError(
+            f"prompt_tokens must be (B, S_prompt), got shape "
+            f"{tuple(prompt_tokens.shape)}")
+    if max_new_tokens < 1:
+        raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+    if temperature < 0:
+        raise ValueError(f"temperature must be >= 0, got {temperature}")
     b, s_prompt = prompt_tokens.shape
+    if s_prompt < 1:
+        raise ValueError("prompt must contain at least one token")
     total = s_prompt + max_new_tokens
     if cache_len is None:
         cache_len = total
+    elif cache_len < total:
+        raise ValueError(
+            f"cache_len={cache_len} cannot hold prompt ({s_prompt}) + "
+            f"max_new_tokens ({max_new_tokens}) = {total} positions")
     caches = model.init_caches(b, cache_len, long_variant=long_variant,
                                dtype=jnp.float32)
 

@@ -27,8 +27,10 @@ from repro.configs.base import ArchConfig, FedConfig
 from repro.core import engine as engine_lib
 from repro.core import feddec
 from repro.core import flat as flat_lib
+from repro.core import population as population_lib
 from repro.core import sharded as sharded_lib
 from repro.core import sweep as sweep_lib
+from repro.core import topology as topo
 from repro.core.fedavg import FedAvgConfig
 from repro.data.federated_lm import make_federated_lm
 from repro.launch.mesh import make_agent_mesh
@@ -36,7 +38,8 @@ from repro.launch.steps import build_fed_setup, sweep_lattice_configs
 from repro.models import build_model
 from repro.sharding import MeshAxes
 
-__all__ = ["train_loop", "tiny_lm_config"]
+__all__ = ["train_loop", "population_loop", "tiny_lm_config",
+           "population_graph"]
 
 
 def tiny_lm_config(d_model: int = 768, layers: int = 12,
@@ -278,6 +281,100 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     return state, losses
 
 
+def population_graph(name: str, n_total: int) -> topo.SparseGraph:
+    """Parse a population-scale graph spec — CSR only, never dense.
+
+    Only the ring family scales to n_total = 1e6 without a dense draw;
+    'ring<k>' (e.g. ring2) maps to :func:`topology.ring_graph_csr`.
+    """
+    if name.startswith("ring"):
+        k = int(name[4:]) if name[4:] else 1
+        return topo.ring_graph_csr(n_total, k)
+    raise ValueError(
+        f"population mode needs a CSR-scalable graph family; got "
+        f"{name!r} (supported: ring<k>)")
+
+
+def population_loop(cfg: ArchConfig, fed: FedConfig, *, n_total: int,
+                    cohort_size: int, sampling: str = "uniform",
+                    staleness: float = 0.0, n_clusters: int = 0,
+                    steps: int, per_agent_batch: int, seq_len: int,
+                    lr: float = 3e-3, ckpt_dir: str | None = None,
+                    overlap: bool = True, seed: int = 0,
+                    data_alpha: float = 0.3):
+    """Cohort-streamed FedDec over an n_total-agent population.
+
+    The population rows live in a host memmap (repro.core.population);
+    each fused H-step round trains one ``cohort_size`` cohort, with the
+    next cohort's rows / subgraph / data batch prepared while the current
+    round executes on device (``overlap=True``).  Returns
+    ``(store, loss_history)`` — the store holds every agent's final rows.
+
+    The per-agent LM data table is (n_total, vocab), so LM population runs
+    target n_total ≲ 1e5; the 1e6 regime is exercised with linreg-scale D
+    by benchmarks/bench_population.py, where the data stream is generated
+    per cohort.
+    """
+    if steps % fed.h:
+        raise ValueError(f"population mode runs whole H-step rounds; "
+                         f"--steps {steps} must be a multiple of --h "
+                         f"{fed.h}")
+    model = build_model(cfg)
+    graph = population_graph(fed.graph, n_total)
+    pspec = population_lib.PopulationSpec(
+        n_total=n_total, cohort_size=cohort_size, sampling=sampling,
+        staleness=staleness, max_degree=graph.max_degree,
+        n_clusters=n_clusters, seed=seed)
+    if fed.gossip_compress != "none":
+        raise ValueError("population mode streams uncompressed rows; "
+                         "--gossip-compress is not supported")
+    data = make_federated_lm(cfg.vocab_size, n_total, seq_len,
+                             alpha=data_alpha, seed=seed)
+    params0 = model.init(jax.random.key(seed))
+    spec = flat_lib.make_flat_spec(params0)
+    lr_fn = lambda t: jnp.asarray(lr, jnp.float32)  # noqa: E731
+    eng = population_lib.PopulationEngine(
+        pspec, spec, model.grad_fn(), lr_fn, graph, h=fed.h, k=fed.k,
+        row_init=np.asarray(spec.ravel(params0)))
+    print(f"[train] population: {model.param_count(params0):,} params × "
+          f"n_total={n_total} (cohort {cohort_size}, sampling={sampling}"
+          + (f", staleness={staleness}" if staleness else "")
+          + (f", clusters={n_clusters}" if n_clusters > 1 else "")
+          + f"), graph={fed.graph}, H={fed.h}, K={fed.k}, "
+          f"store={eng.store.rows.nbytes / 1e6:.1f} MB host-side")
+
+    positions = jnp.broadcast_to(
+        jnp.arange(seq_len, dtype=jnp.int32)[None, None],
+        (cohort_size, per_agent_batch, seq_len))
+    data_key = jax.random.key(seed + 1)
+
+    def batch_fn(round_idx: int, ids: np.ndarray):
+        kd = jax.random.fold_in(data_key, round_idx)
+        ids_j = jnp.asarray(ids, dtype=jnp.int32)
+
+        def per_step(k):
+            ks = jax.random.split(k, ids_j.shape[0])
+            return jax.vmap(data.sample_agent, in_axes=(0, 0, None))(
+                ks, ids_j, per_agent_batch)
+
+        tokens = jax.vmap(per_step)(jax.random.split(kd, fed.h))
+        return {"tokens": tokens,
+                "positions": jnp.broadcast_to(
+                    positions[None], (fed.h,) + positions.shape)}
+
+    t_start = time.time()
+    mets = eng.run(steps // fed.h, batch_fn, jax.random.key(seed + 2),
+                   overlap=overlap)
+    losses = np.asarray(mets["loss"]).reshape(-1).tolist()
+    rate = steps / (time.time() - t_start)
+    print(f"[train] population: {steps} steps in "
+          f"{steps // fed.h} rounds ({rate:.2f} steps/s, "
+          f"{mets['drains']} pipeline drains)")
+    if ckpt_dir:
+        eng.store.save(ckpt_dir, steps)
+    return eng.store, losses
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="tiny",
@@ -338,13 +435,43 @@ def main() -> None:
                         "per-run PRNG keys (seed), doubling server "
                         "periods H·2^r (h), or independent graph draws "
                         "(topology; geo/er families)")
+    p.add_argument("--n-total", type=int, default=None, metavar="N",
+                   help="population mode (repro.core.population): keep N "
+                        "agents in a host memmap store and train a sampled "
+                        "cohort per fused round, streaming rows h2d/d2h "
+                        "double-buffered.  Overrides --agents; requires a "
+                        "ring<k> graph and the stateless sgd optimizer")
+    p.add_argument("--cohort-size", type=int, default=64, metavar="C",
+                   help="agents sampled + streamed per round in population "
+                        "mode")
+    p.add_argument("--sampling", default="uniform",
+                   choices=list(population_lib.SAMPLINGS),
+                   help="population cohort sampler: uniform, weighted "
+                        "(per-agent weights), or stale (prioritize agents "
+                        "longest out of a cohort)")
+    p.add_argument("--staleness", type=float, default=0.0, metavar="BETA",
+                   help="FedPAE-style age tilt of the cohort mixing matrix "
+                        "(0 = plain doubly stochastic Metropolis)")
+    p.add_argument("--n-clusters", type=int, default=0, metavar="M",
+                   help="population mode: M > 1 enables the two-tier "
+                        "hierarchical server round (edge-cluster averaging "
+                        "before the K-sample aggregation)")
+    p.add_argument("--no-overlap", dest="overlap", action="store_false",
+                   default=True,
+                   help="population mode: disable the double-buffered "
+                        "h2d/d2h overlap (synchronous transfers; same "
+                        "trajectory, slower)")
+    p.add_argument("--vocab", type=int, default=32_768,
+                   help="tiny-LM vocab size (population mode keeps an "
+                        "(n_total, vocab) data table — shrink this for "
+                        "large --n-total smokes)")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--d-model", type=int, default=768)
     p.add_argument("--layers", type=int, default=12)
     args = p.parse_args()
 
     if args.arch == "tiny":
-        cfg = tiny_lm_config(args.d_model, args.layers)
+        cfg = tiny_lm_config(args.d_model, args.layers, vocab=args.vocab)
     else:
         cfg = get_config(args.arch)
         if args.smoke:
@@ -353,6 +480,26 @@ def main() -> None:
                     graph=args.graph, p_fail=args.p_fail,
                     gossip_impl=args.gossip_impl,
                     gossip_compress=args.gossip_compress)
+    if args.n_total is not None:
+        for flag, val, default in (("--mesh-agents", args.mesh_agents, None),
+                                   ("--sweep-runs", args.sweep_runs, None),
+                                   ("--optimizer", args.optimizer, "sgd"),
+                                   ("--fedavg", args.fedavg, False),
+                                   ("--per-step", args.fused, True)):
+            if val != default:
+                raise SystemExit(f"population mode (--n-total) does not "
+                                 f"compose with {flag}")
+        _, losses = population_loop(
+            cfg, fed, n_total=args.n_total, cohort_size=args.cohort_size,
+            sampling=args.sampling, staleness=args.staleness,
+            n_clusters=args.n_clusters, steps=args.steps,
+            per_agent_batch=args.batch, seq_len=args.seq, lr=args.lr,
+            ckpt_dir=args.ckpt_dir, overlap=args.overlap)
+        first = np.mean(losses[:5])
+        last = np.mean(losses[-5:])
+        print(f"[train] done: loss {first:.4f} → {last:.4f} "
+              f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+        return
     state, losses = train_loop(
         cfg, fed, steps=args.steps, per_agent_batch=args.batch,
         seq_len=args.seq, lr=args.lr, optimizer=args.optimizer,

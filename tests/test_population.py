@@ -1,0 +1,446 @@
+"""Population-engine contract tests (repro.core.population + satellites).
+
+Covers the host store (memmap, gather/scatter, chunked checkpoint
+round-trip), the cohort samplers, the sparse topology layer (SparseGraph,
+induced subgraphs, CSR Metropolis/λ₂, the dense-size guard), the FedPAE
+staleness tilt, and the engine itself: bit-identity against the flat
+sparse engine at n_total == cohort, overlap ≡ sync trajectories, the
+hierarchical two-tier server, and the launch/analysis cost model's flat
+peak-device invariant.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (latest_population_step, load_population,
+                              save_population)
+from repro.core import FedDecConfig
+from repro.core import flat as flat_lib
+from repro.core import mixing as mixing_lib
+from repro.core import population as pop
+from repro.core import topology as topo
+from repro.core.mixing import MixingDistribution
+from repro.data import linreg
+from repro.launch import analysis
+
+
+# ---------------------------------------------------------------------------
+# PopulationStore
+# ---------------------------------------------------------------------------
+
+
+class TestStore:
+    def test_create_is_memmap_and_broadcasts_row(self):
+        store = pop.PopulationStore.create(100, np.arange(5.0), chunk_rows=7)
+        assert isinstance(store.rows, np.memmap)
+        assert store.rows.shape == (100, 5)
+        np.testing.assert_array_equal(store.rows[73], np.arange(5.0))
+        assert store.last_round.tolist() == [-1] * 100
+
+    def test_gather_scatter_roundtrip(self):
+        store = pop.PopulationStore.create(20, np.zeros(3))
+        ids = np.array([2, 7, 19])
+        vals = np.arange(9.0, dtype=np.float32).reshape(3, 3)
+        store.scatter(ids, vals)
+        np.testing.assert_array_equal(store.gather(ids), vals)
+        np.testing.assert_array_equal(store.rows[0], np.zeros(3))
+
+    def test_gather_returns_copy(self):
+        store = pop.PopulationStore.create(4, np.ones(2))
+        got = store.gather(np.array([0]))
+        got[:] = 99.0
+        np.testing.assert_array_equal(store.rows[0], np.ones(2))
+
+    def test_ages_clip_at_zero(self):
+        store = pop.PopulationStore.create(4, np.zeros(2))
+        store.last_round[:] = [5, -1, 2, 9]
+        np.testing.assert_array_equal(
+            store.ages(np.arange(4), 5), [0, 6, 3, 0])
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError, match="rows must be"):
+            pop.PopulationStore(np.zeros(3), np.zeros(3))
+        with pytest.raises(ValueError, match="last_round"):
+            pop.PopulationStore(np.zeros((3, 2)), np.zeros(4))
+
+
+class TestCheckpoint:
+    def test_chunked_roundtrip(self, tmp_path):
+        rows = np.arange(40, dtype=np.float32).reshape(10, 4)
+        last = np.arange(10, dtype=np.int64) - 1
+        save_population(str(tmp_path), 7, rows, last, chunk_rows=3)
+        for mmap in (True, False):
+            got, got_last, meta = load_population(str(tmp_path), mmap=mmap)
+            np.testing.assert_array_equal(got, rows)
+            np.testing.assert_array_equal(got_last, last)
+        assert meta["n_total"] == 10 and meta["d"] == 4 and meta["step"] == 7
+        assert latest_population_step(str(tmp_path)) == 7
+
+    def test_latest_picks_max_step(self, tmp_path):
+        rows = np.zeros((4, 2), np.float32)
+        last = np.zeros(4, np.int64)
+        for step in (3, 12, 5):
+            save_population(str(tmp_path), step, rows, last)
+        assert latest_population_step(str(tmp_path)) == 12
+        assert latest_population_step(str(tmp_path / "nope")) is None
+
+    def test_store_save_restore(self, tmp_path):
+        store = pop.PopulationStore.create(9, np.zeros(3), chunk_rows=4)
+        store.scatter(np.array([1, 8]), np.full((2, 3), 2.5, np.float32))
+        store.last_round[:] = np.arange(9)
+        store.save(str(tmp_path), 42)
+        back = pop.PopulationStore.restore(str(tmp_path))
+        np.testing.assert_array_equal(back.rows, store.rows)
+        np.testing.assert_array_equal(back.last_round, store.last_round)
+        back.scatter(np.array([0]), np.ones((1, 3), np.float32))  # writable
+
+    def test_save_validates_shapes(self, tmp_path):
+        with pytest.raises(ValueError, match="rows must be"):
+            save_population(str(tmp_path), 0, np.zeros((3, 2)), np.zeros(4))
+
+
+# ---------------------------------------------------------------------------
+# Cohort sampling
+# ---------------------------------------------------------------------------
+
+
+class TestSampling:
+    def _spec(self, **kw):
+        base = dict(n_total=50, cohort_size=10)
+        base.update(kw)
+        return pop.PopulationSpec(**base)
+
+    def test_uniform_sorted_unique(self):
+        rng = np.random.default_rng(0)
+        last = np.full(50, -1, np.int64)
+        ids = pop.sample_cohort(rng, self._spec(), last, 0)
+        assert ids.dtype == np.int64
+        assert len(np.unique(ids)) == 10
+        np.testing.assert_array_equal(ids, np.sort(ids))
+
+    def test_full_cohort_is_identity_slice(self):
+        rng = np.random.default_rng(0)
+        spec = self._spec(n_total=10, cohort_size=10)
+        ids = pop.sample_cohort(rng, spec, np.full(10, -1, np.int64), 0)
+        np.testing.assert_array_equal(ids, np.arange(10))
+
+    def test_stale_prioritizes_left_out_agents(self):
+        rng = np.random.default_rng(0)
+        spec = self._spec(sampling="stale")
+        last = np.zeros(50, np.int64)
+        last[:10] = -10**9         # ten agents far staler than the rest
+        ids = pop.sample_cohort(rng, spec, last, round_idx=1)
+        np.testing.assert_array_equal(ids, np.arange(10))
+
+    def test_weighted_follows_weights(self):
+        rng = np.random.default_rng(0)
+        spec = self._spec(sampling="weighted")
+        w = np.zeros(50)
+        w[20:30] = 1.0             # only these are sampleable
+        ids = pop.sample_cohort(rng, spec, np.full(50, -1, np.int64), 0,
+                                weights=w)
+        np.testing.assert_array_equal(ids, np.arange(20, 30))
+
+    def test_weighted_validation(self):
+        rng = np.random.default_rng(0)
+        spec = self._spec(sampling="weighted")
+        last = np.full(50, -1, np.int64)
+        with pytest.raises(ValueError, match="needs a per-agent weights"):
+            pop.sample_cohort(rng, spec, last, 0)
+        with pytest.raises(ValueError, match="positive sum"):
+            pop.sample_cohort(rng, spec, last, 0, weights=np.zeros(50))
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError, match="cohort_size"):
+            pop.PopulationSpec(10, 11)
+        with pytest.raises(ValueError, match="unknown sampling"):
+            pop.PopulationSpec(10, 2, sampling="roulette")
+        with pytest.raises(ValueError, match="staleness"):
+            pop.PopulationSpec(10, 2, staleness=-1.0)
+        with pytest.raises(ValueError, match="n_clusters"):
+            pop.PopulationSpec(10, 2, n_clusters=3)
+
+
+# ---------------------------------------------------------------------------
+# Sparse topology layer (SparseGraph / induced subgraph / CSR weights / λ₂)
+# ---------------------------------------------------------------------------
+
+
+class TestSparseTopology:
+    def test_ring_csr_matches_dense_ring(self):
+        for n, k in ((8, 1), (9, 2), (16, 3)):
+            g = topo.ring_graph(n, k=k)
+            csr = topo.ring_graph_csr(n, k=k)
+            want = topo.csr_from_graph(g)
+            np.testing.assert_array_equal(csr.indptr, want.indptr)
+            np.testing.assert_array_equal(csr.indices, want.indices)
+            csr.validate()
+
+    def test_sparse_graph_validation(self):
+        with pytest.raises(ValueError, match="out of range"):
+            topo.SparseGraph(np.array([0, 1]), np.array([1]))  # n=1, nbr 1
+        with pytest.raises(ValueError, match="indptr"):
+            topo.SparseGraph(np.array([1, 0]), np.array([]))
+        g = topo.SparseGraph(np.array([0, 1, 2]), np.array([1, 0]))
+        g.validate()
+        with pytest.raises(ValueError, match="self-loop"):
+            topo.SparseGraph(np.array([0, 1, 2]),
+                             np.array([0, 0])).validate()
+        with pytest.raises(ValueError):
+            topo.SparseGraph(np.array([0, 1, 1, 1]),
+                             np.array([1])).validate()  # asymmetric
+
+    def test_induced_subgraph_matches_dense(self):
+        g = topo.geographic_graph(12, 0.6, seed=2)
+        ids = np.array([1, 3, 4, 9, 11])
+        sub = topo.induced_subgraph(topo.csr_from_graph(g), ids)
+        np.testing.assert_array_equal(
+            sub.adjacency, g.adjacency[np.ix_(ids, ids)])
+        # dense-graph input path
+        sub2 = topo.induced_subgraph(g, ids)
+        np.testing.assert_array_equal(sub2.adjacency, sub.adjacency)
+
+    def test_induced_subgraph_requires_unique_ids(self):
+        g = topo.ring_graph_csr(8, 1)
+        with pytest.raises(ValueError, match="unique"):
+            topo.induced_subgraph(g, np.array([1, 1, 2]))
+
+    def test_metropolis_csr_matches_dense(self):
+        g = topo.geographic_graph(10, 0.6, seed=1)
+        csr = topo.csr_from_graph(g)
+        vals, diag = topo.metropolis_weights_csr(csr)
+        w = topo.metropolis_weights(g)
+        np.testing.assert_allclose(diag, np.diagonal(w))
+        for i in range(10):
+            js = csr.indices[csr.indptr[i]:csr.indptr[i + 1]]
+            np.testing.assert_allclose(
+                vals[csr.indptr[i]:csr.indptr[i + 1]], w[i, js])
+
+    def test_lambda2_sparse_matches_dense(self):
+        for maker in (lambda: topo.ring_graph(12, k=2),
+                      lambda: topo.geographic_graph(14, 0.6, seed=3)):
+            g = maker()
+            want = topo.lambda2(topo.metropolis_weights(g))
+            got = topo.lambda2_sparse(topo.csr_from_graph(g))
+            assert got == pytest.approx(want, abs=1e-6)
+
+    def test_dense_size_guard(self):
+        with pytest.raises(ValueError, match="n_dense_max"):
+            topo.check_dense_size(5000, "test matrix")
+        topo.check_dense_size(5000, "test matrix", n_dense_max=10_000)
+        with pytest.raises(ValueError, match="n_dense_max"):
+            topo.metropolis_weights(topo.ring_graph(12, 1), n_dense_max=10)
+
+
+class TestStalenessTilt:
+    def test_beta_zero_is_bitwise_identity(self):
+        w = topo.metropolis_weights(topo.ring_graph(8, 1))
+        out = mixing_lib.staleness_tilted_weights(w, np.arange(8), 0.0)
+        assert out is w
+
+    def test_rows_still_sum_to_one(self):
+        w = topo.metropolis_weights(topo.geographic_graph(9, 0.6, seed=4))
+        ages = np.array([0, 1, 5, 0, 2, 10, 0, 3, 7])
+        out = mixing_lib.staleness_tilted_weights(w, ages, 0.5)
+        np.testing.assert_allclose(out.sum(axis=1), np.ones(9), atol=1e-12)
+        # stale agents' columns are down-weighted off-diagonal
+        assert out[0, 5] < w[0, 5] or w[0, 5] == 0.0
+
+    def test_validation(self):
+        w = topo.metropolis_weights(topo.ring_graph(4, 1))
+        with pytest.raises(ValueError, match="staleness"):
+            mixing_lib.staleness_tilted_weights(w, np.zeros(4), -0.1)
+        with pytest.raises(ValueError, match="ages"):
+            mixing_lib.staleness_tilted_weights(w, np.zeros(3), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# The engine: bit-identity, overlap ≡ sync, hierarchy, cost model
+# ---------------------------------------------------------------------------
+
+
+N_EQ, H_EQ, K_EQ, ROUNDS_EQ = 12, 4, 3, 2
+
+
+@pytest.fixture(scope="module")
+def eq_problem():
+    return linreg.make_problem(n=N_EQ, seed=0)
+
+
+@pytest.fixture(scope="module")
+def eq_batches(eq_problem):
+    return [
+        jax.block_until_ready(jax.vmap(
+            lambda k: linreg.sample_minibatch(eq_problem, k, m=2))(
+            jax.random.split(jax.random.fold_in(jax.random.key(3), r), H_EQ)))
+        for r in range(ROUNDS_EQ)]
+
+
+def _lr(_t):
+    return jnp.float32(1e-3)
+
+
+class TestEngine:
+    def test_bit_identical_to_flat_sparse_when_cohort_is_population(
+            self, eq_problem, eq_batches):
+        graph = topo.geographic_graph(N_EQ, 0.5, seed=1)
+        grad_fn = linreg.make_grad_fn(eq_problem.m_rows)
+        fspec = flat_lib.make_flat_spec(jnp.zeros(eq_problem.d))
+        key = jax.random.key(7)
+
+        fcfg = FedDecConfig(
+            mixing=MixingDistribution(graph, p_fail=0.0,
+                                      scheme="metropolis"),
+            h=H_EQ, k=K_EQ, gossip_impl="sparse")
+        flat_round = flat_lib.make_flat_feddec_round(
+            fcfg, fspec, grad_fn, _lr, donate=False)
+        st = flat_lib.init_flat_state(fspec, jnp.zeros(eq_problem.d), N_EQ)
+        for r in range(ROUNDS_EQ):
+            st, _ = flat_round(st, eq_batches[r], key)
+        ref = np.asarray(st.flat)
+
+        spec = pop.PopulationSpec(N_EQ, N_EQ,
+                                  max_degree=int(graph.degrees.max()))
+        eng = pop.PopulationEngine(
+            spec, fspec, grad_fn, _lr, topo.csr_from_graph(graph),
+            h=H_EQ, k=K_EQ,
+            row_init=np.zeros(eq_problem.d, np.float32))
+        eng.run(ROUNDS_EQ, lambda r, ids: eq_batches[r], key)
+        got = eng.store.gather(np.arange(N_EQ))
+        np.testing.assert_array_equal(got, ref)
+
+    def test_overlap_equals_sync_trajectory(self, eq_problem):
+        graph = topo.ring_graph_csr(64, 2)
+        grad_fn = linreg.make_grad_fn(eq_problem.m_rows)
+        fspec = flat_lib.make_flat_spec(jnp.zeros(eq_problem.d))
+        batches = {
+            r: jax.block_until_ready(jax.vmap(
+                lambda k: linreg.sample_minibatch(eq_problem, k, m=2))(
+                jax.random.split(jax.random.fold_in(jax.random.key(5), r),
+                                 H_EQ)))
+            for r in range(6)}
+
+        def batch_fn(r, ids):
+            # fixed per-round batches restricted to the cohort size
+            return jax.tree.map(lambda b: b[:, :8], batches[r])
+
+        stores = {}
+        for overlap in (False, True):
+            spec = pop.PopulationSpec(64, 8, max_degree=4, seed=3)
+            eng = pop.PopulationEngine(
+                spec, fspec, grad_fn, _lr, graph, h=H_EQ, k=2,
+                row_init=np.zeros(eq_problem.d, np.float32))
+            eng.run(6, batch_fn, jax.random.key(0), overlap=overlap)
+            stores[overlap] = eng.store.gather(np.arange(64))
+        np.testing.assert_array_equal(stores[True], stores[False])
+
+    def test_singleton_clusters_match_flat_server(self, eq_problem,
+                                                  eq_batches):
+        """n_clusters == n_total == cohort → tier-1 averaging is the
+        identity (every cluster is one agent) and the hierarchical round
+        must be bit-identical to the plain server round."""
+        graph = topo.geographic_graph(N_EQ, 0.5, seed=1)
+        grad_fn = linreg.make_grad_fn(eq_problem.m_rows)
+        fspec = flat_lib.make_flat_spec(jnp.zeros(eq_problem.d))
+        key = jax.random.key(7)
+        outs = {}
+        for n_clusters in (0, N_EQ):
+            spec = pop.PopulationSpec(N_EQ, N_EQ, n_clusters=n_clusters,
+                                      max_degree=int(graph.degrees.max()))
+            eng = pop.PopulationEngine(
+                spec, fspec, grad_fn, _lr, topo.csr_from_graph(graph),
+                h=H_EQ, k=K_EQ,
+                row_init=np.zeros(eq_problem.d, np.float32))
+            eng.run(ROUNDS_EQ, lambda r, ids: eq_batches[r], key)
+            outs[n_clusters] = eng.store.gather(np.arange(N_EQ))
+        np.testing.assert_array_equal(outs[0], outs[N_EQ])
+
+    def test_hierarchical_mode_runs_and_stays_finite(self, eq_problem,
+                                                     eq_batches):
+        graph = topo.geographic_graph(N_EQ, 0.5, seed=1)
+        grad_fn = linreg.make_grad_fn(eq_problem.m_rows)
+        fspec = flat_lib.make_flat_spec(jnp.zeros(eq_problem.d))
+        spec = pop.PopulationSpec(N_EQ, N_EQ, n_clusters=3,
+                                  max_degree=int(graph.degrees.max()))
+        eng = pop.PopulationEngine(
+            spec, fspec, grad_fn, _lr, topo.csr_from_graph(graph),
+            h=H_EQ, k=K_EQ, row_init=np.zeros(eq_problem.d, np.float32))
+        eng.run(ROUNDS_EQ, lambda r, ids: eq_batches[r], jax.random.key(7))
+        rows = eng.store.gather(np.arange(N_EQ))
+        assert np.isfinite(rows).all()
+        assert np.abs(rows).sum() > 0.0
+
+    def test_staleness_mode_runs(self, eq_problem):
+        graph = topo.ring_graph_csr(32, 1)
+        grad_fn = linreg.make_grad_fn(eq_problem.m_rows)
+        fspec = flat_lib.make_flat_spec(jnp.zeros(eq_problem.d))
+        spec = pop.PopulationSpec(32, 6, sampling="stale", staleness=0.5,
+                                  max_degree=2, seed=1)
+        eng = pop.PopulationEngine(
+            spec, fspec, grad_fn, _lr, graph, h=H_EQ, k=2,
+            row_init=np.zeros(eq_problem.d, np.float32))
+
+        def batch_fn(r, ids):
+            b = jax.vmap(lambda k: linreg.sample_minibatch(
+                eq_problem, k, m=2))(
+                jax.random.split(jax.random.fold_in(jax.random.key(5), r),
+                                 H_EQ))
+            return jax.tree.map(lambda x: x[:, :6], b)
+
+        eng.run(4, batch_fn, jax.random.key(0))
+        assert np.isfinite(eng.store.rows).all()
+        # every cohort was marked: 4 rounds × 6 agents, maybe overlapping
+        assert (eng.store.last_round >= 0).sum() <= 24
+
+    def test_max_degree_guard_raises(self):
+        graph = topo.geographic_graph(N_EQ, 0.9, seed=1)  # dense-ish
+        spec = pop.PopulationSpec(N_EQ, N_EQ, max_degree=1)
+        with pytest.raises(ValueError, match="max_degree"):
+            pop.build_cohort_mix(topo.csr_from_graph(graph),
+                                 np.arange(N_EQ), spec)
+
+    def test_optimizer_not_streamed(self, eq_problem):
+        fspec = flat_lib.make_flat_spec(jnp.zeros(eq_problem.d))
+        with pytest.raises(NotImplementedError, match="optimizer"):
+            pop.PopulationEngine(
+                pop.PopulationSpec(8, 4), fspec,
+                linreg.make_grad_fn(10), _lr, topo.ring_graph_csr(8, 1),
+                h=2, k=2, optimizer=object(),
+                row_init=np.zeros(eq_problem.d, np.float32))
+
+
+class TestCostModel:
+    def test_peak_device_bytes_has_no_n_total_term(self):
+        peaks = {
+            analysis.population_cost_model(
+                n_total=n, cohort_size=256, d=25, max_degree=4,
+                h=10)["peak_device_bytes"]
+            for n in (10**4, 10**5, 10**6)}
+        assert len(peaks) == 1
+
+    def test_host_store_scales_with_n_total(self):
+        small, big = (analysis.population_cost_model(
+            n_total=n, cohort_size=64, d=10, max_degree=4, h=5)
+            for n in (1000, 2000))
+        assert big["host_store_bytes"] == 2 * small["host_store_bytes"]
+        assert big["upload_bytes_round"] == small["upload_bytes_round"]
+
+    def test_transfer_time_uses_bandwidth(self):
+        m = analysis.population_cost_model(
+            n_total=100, cohort_size=10, d=8, max_degree=2, h=3,
+            h2d_bw=1e6)
+        assert m["transfer_us_round"] == pytest.approx(
+            m["hostdev_bytes_round"] / 1e6 * 1e6)
+
+
+class TestLaunch:
+    def test_population_graph_parses_ring(self):
+        from repro.launch.train import population_graph
+        g = population_graph("ring2", 64)
+        assert isinstance(g, topo.SparseGraph)
+        assert g.max_degree == 4
+        with pytest.raises(ValueError, match="ring"):
+            population_graph("geographic", 64)

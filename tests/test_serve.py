@@ -1,0 +1,86 @@
+"""Serving-driver tests: generate() contract + a tiny end-to-end decode."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.serve import generate
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_config("qwen1.5-4b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _prompt(cfg, b=2, s=4):
+    return jax.random.randint(jax.random.key(2), (b, s), 0, cfg.vocab_size)
+
+
+class TestValidation:
+    def test_prompt_must_be_2d(self, smoke_model):
+        cfg, model, params = smoke_model
+        with pytest.raises(ValueError, match=r"\(B, S_prompt\)"):
+            generate(model, params, jnp.zeros(4, jnp.int32))
+        with pytest.raises(ValueError, match=r"\(B, S_prompt\)"):
+            generate(model, params, jnp.zeros((2, 3, 4), jnp.int32))
+
+    def test_max_new_tokens_positive(self, smoke_model):
+        cfg, model, params = smoke_model
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            generate(model, params, _prompt(cfg), max_new_tokens=0)
+
+    def test_temperature_nonnegative(self, smoke_model):
+        cfg, model, params = smoke_model
+        with pytest.raises(ValueError, match="temperature"):
+            generate(model, params, _prompt(cfg), temperature=-0.5)
+
+    def test_nonempty_prompt(self, smoke_model):
+        cfg, model, params = smoke_model
+        with pytest.raises(ValueError, match="at least one token"):
+            generate(model, params, jnp.zeros((2, 0), jnp.int32))
+
+    def test_cache_len_must_hold_sequence(self, smoke_model):
+        cfg, model, params = smoke_model
+        with pytest.raises(ValueError, match="cannot hold"):
+            generate(model, params, _prompt(cfg, s=4), max_new_tokens=8,
+                     cache_len=11)
+
+
+class TestDecode:
+    def test_greedy_decode_shape_and_prompt_prefix(self, smoke_model):
+        cfg, model, params = smoke_model
+        prompt = _prompt(cfg, b=2, s=4)
+        seqs = generate(model, params, prompt, max_new_tokens=3)
+        assert seqs.shape == (2, 7)
+        np.testing.assert_array_equal(np.asarray(seqs[:, :4]),
+                                      np.asarray(prompt))
+        toks = np.asarray(seqs)
+        assert ((toks >= 0) & (toks < cfg.vocab_size)).all()
+
+    def test_greedy_is_deterministic(self, smoke_model):
+        cfg, model, params = smoke_model
+        prompt = _prompt(cfg, b=1, s=3)
+        a = generate(model, params, prompt, max_new_tokens=2)
+        b = generate(model, params, prompt, max_new_tokens=2)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_explicit_cache_len_matches_default(self, smoke_model):
+        cfg, model, params = smoke_model
+        prompt = _prompt(cfg, b=1, s=3)
+        a = generate(model, params, prompt, max_new_tokens=2)
+        b = generate(model, params, prompt, max_new_tokens=2, cache_len=16)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_temperature_sampling_runs(self, smoke_model):
+        cfg, model, params = smoke_model
+        seqs = generate(model, params, _prompt(cfg, b=1, s=3),
+                        max_new_tokens=2, temperature=1.0,
+                        key=jax.random.key(9))
+        assert seqs.shape == (1, 5)
