@@ -1,0 +1,268 @@
+"""Delta-parameterized state: store bytes, bit-identity, batched serving.
+
+Three sections, all against repro.core.delta (base + per-agent delta
+parameterization of the flat (n, D) buffer):
+
+* **store rows** — host-store bytes of :class:`repro.core.delta.DeltaStore`
+  vs the dense population store at n_total ∈ {1e4, 1e5, 1e6}, D = 2048,
+  for ``topk:128`` / ``lowrank:8`` / ``full``.  Every row carries the exact
+  analytic columns of ``launch.analysis.delta_cost_model``; rows small
+  enough to materialize also record the *measured* ``DeltaStore.nbytes``
+  (which must equal the model exactly — the guard checks) plus cohort
+  gather/scatter µs.  The acceptance column is ``store_ratio`` ≤ 0.25 for
+  the topk store at the largest n_total: 128·(4+4) = 1 KiB/agent vs the
+  8 KiB dense row.
+* **equivalence** — the delta engine at rank=full is **bit-identical** to
+  the flat engine (``max_abs_err == 0.0``, pinned — the PR 4/5/6 gate).
+  The full codec's two-term payload (p = fl(x−base), c = fl(x−fl(base+p)))
+  round-trips bitwise, so the EF residual stays exactly zero and the
+  gossip reduces to the uncompressed mix.  Also pins the DeltaStore
+  full-kind gather∘scatter round-trip (same op order as the codec).
+* **serving** — multi-tenant personalized decode
+  (``launch.serve.generate_personalized``: gather deltas → one vmapped
+  apply → ONE compiled dispatch per token for the whole batch) vs the
+  naive baseline (B sequential ``generate`` calls, each with its own full
+  parameter set).  Tokens/sec for both; the batched path must win and the
+  decoded tokens must match the naive loop exactly.
+
+Emits the standard ``name,us_per_call,derived`` CSV lines plus
+results/benchmarks/BENCH_delta.json (smoke runs write
+BENCH_delta.smoke.json so the committed baseline is never clobbered).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_delta [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_config
+from repro.core import delta as delta_lib
+from repro.core import feddec, flat as flat_lib
+from repro.core import topology as topo
+from repro.core.mixing import MixingDistribution
+from repro.data import linreg
+from repro.launch import analysis, serve
+from repro.models import build_model
+
+STORE_D = 2048                      # dense row = 8 KiB at f32
+STORE_DELTAS = ("topk:128", "lowrank:8", "full")
+COHORT = 256                        # gather/scatter cohort for timing
+# full materializes 2 (n, D) memmaps and lowrank runs an n-batched SVD on
+# scatter — materialize those only at the smallest n; the O(n·K) topk store
+# (the row the 0.25x acceptance is about) is cheap enough to materialize
+# at every grid point, 1e6 included (~1 GiB on disk)
+MATERIALIZE_CAP = {"topk": 10**6, "lowrank": 10**4, "full": 10**4}
+
+
+def bench_store(n_total: int, delta: str, *, time_iters: int) -> dict:
+    """One (n_total, delta) row: exact cost model + measured store."""
+    model = analysis.delta_cost_model(n_total=n_total, d=STORE_D, delta=delta)
+    spec = delta_lib.parse_delta(delta)
+    row = {**model, "materialized": False, "measured_store_bytes": None,
+           "gather_us": None, "scatter_us": None}
+    if n_total <= MATERIALIZE_CAP[spec.kind]:
+        rng = np.random.default_rng(0)
+        base = rng.standard_normal(STORE_D).astype(np.float32)
+        store = delta_lib.DeltaStore.create(n_total, base, spec)
+        ids = rng.choice(n_total, size=COHORT, replace=False)
+        vals = (base[None, :]
+                + 0.01 * rng.standard_normal((COHORT, STORE_D))
+                ).astype(np.float32)
+        store.scatter(ids, vals)        # warm (page in the touched rows)
+        store.gather(ids)
+        ts_g, ts_s = [], []
+        for _ in range(time_iters):
+            t0 = time.perf_counter()
+            store.scatter(ids, vals)
+            ts_s.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            store.gather(ids)
+            ts_g.append(time.perf_counter() - t0)
+        row.update(materialized=True,
+                   measured_store_bytes=store.nbytes,
+                   gather_us=round(sorted(ts_g)[len(ts_g) // 2] * 1e6, 1),
+                   scatter_us=round(sorted(ts_s)[len(ts_s) // 2] * 1e6, 1))
+        del store
+    common.emit(f"delta_store_{delta.replace(':', '')}_n{n_total}",
+                row["gather_us"] or 0.0,
+                f"store_ratio={model['store_ratio']:.4f};"
+                f"materialized={row['materialized']}")
+    return row
+
+
+def bench_equivalence(*, rounds: int = 6) -> dict:
+    """delta='full' trajectory ≡ the flat engine, bitwise (the PR-4 gate)."""
+    n, d, h = 8, 25, 4
+    problem = linreg.make_problem(n=n, m_rows=10, d=d, seed=0)
+    graph = topo.geographic_graph(n, 0.5, seed=1)
+    grad_fn = linreg.make_grad_fn(problem.m_rows)
+    lr = lambda t: jnp.float32(1e-3)  # noqa: E731
+    key = jax.random.key(7)
+    x0 = jax.random.normal(jax.random.key(11), (d,)) * 0.3
+    per_round = [
+        jax.block_until_ready(jax.vmap(
+            lambda k: linreg.sample_minibatch(problem, k, m=2))(
+            jax.random.split(jax.random.fold_in(jax.random.key(3), r), h)))
+        for r in range(rounds)]
+
+    def run(delta: str):
+        cfg = feddec.FedDecConfig(
+            mixing=MixingDistribution(graph, p_fail=0.0, scheme="metropolis"),
+            h=h, k=3, gossip_impl="dense", delta=delta)
+        fspec = flat_lib.make_flat_spec(jnp.zeros(d))
+        base = fspec.ravel(x0) if delta != "none" else None
+        rnd = flat_lib.make_flat_feddec_round(cfg, fspec, grad_fn, lr,
+                                              donate=False, delta_base=base)
+        st = flat_lib.init_flat_state(fspec, x0, n, delta=delta)
+        for r in range(rounds):
+            st, _ = rnd(st, per_round[r], key)
+        res = 0.0 if isinstance(st.residual, tuple) \
+            else float(jnp.abs(st.residual).max())
+        return np.asarray(st.flat), res
+
+    ref, _ = run("none")
+    got, res_max = run("full")
+    max_err = float(np.abs(got - ref).max())
+    bit = bool(np.array_equal(got, ref))
+
+    # DeltaStore full-kind round-trip: gather(scatter(x)) == x bitwise,
+    # including adversarial magnitudes (the Sterbenz argument end-to-end)
+    rng = np.random.default_rng(2)
+    rows = rng.standard_normal((16, 64)).astype(np.float32)
+    rows[0, :4] = [1e30, 1e-30, 1.2e-38, 0.0]
+    store = delta_lib.DeltaStore.create(
+        16, rng.standard_normal(64).astype(np.float32), "full")
+    store.scatter(np.arange(16), rows)
+    store_exact = bool(np.array_equal(store.gather(np.arange(16)), rows))
+
+    common.emit("delta_equivalence", 0.0,
+                f"max_abs_err={max_err:.1e};bit_identical={bit};"
+                f"residual_max={res_max:.1e};store_roundtrip={store_exact}")
+    return {"n_agents": n, "d": d, "h": h, "rounds": rounds,
+            "max_abs_err": max_err, "bit_identical": bit,
+            "residual_max_abs": res_max,
+            "store_roundtrip_exact": store_exact}
+
+
+def bench_serving(*, batch: int, prompt_len: int, new_tokens: int,
+                  time_iters: int) -> dict:
+    """Batched personalized decode vs B sequential full-weight generates."""
+    cfg = get_config("qwen1.5-4b").smoke()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    fspec = flat_lib.make_flat_spec(params)
+    base = fspec.ravel(params)
+    deltas = (jax.random.normal(jax.random.key(1), (batch, fspec.d))
+              * 0.01).astype(base.dtype)
+    prompt = jax.random.randint(jax.random.key(2), (batch, prompt_len), 0,
+                                cfg.vocab_size)
+
+    def run_batched():
+        return serve.generate_personalized(
+            model, fspec, base, deltas, prompt, max_new_tokens=new_tokens)
+
+    def run_naive():
+        outs = []
+        for b in range(batch):
+            p_b = fspec.unravel(base + deltas[b])
+            outs.append(serve.generate(model, p_b, prompt[b:b + 1],
+                                       max_new_tokens=new_tokens))
+        return jnp.concatenate(outs, axis=0)
+
+    got_b = jax.block_until_ready(run_batched())     # compile + warm
+    got_n = jax.block_until_ready(run_naive())
+    matches = bool(np.array_equal(np.asarray(got_b), np.asarray(got_n)))
+
+    def med_tok_s(fn):
+        ts = []
+        for _ in range(time_iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append(time.perf_counter() - t0)
+        return batch * new_tokens / sorted(ts)[len(ts) // 2]
+
+    batched_tok_s = med_tok_s(run_batched)
+    naive_tok_s = med_tok_s(run_naive)
+    speedup = batched_tok_s / naive_tok_s
+    common.emit(f"delta_serving_b{batch}",
+                batch * new_tokens / batched_tok_s * 1e6,
+                f"batched_tok_s={batched_tok_s:.1f};"
+                f"naive_tok_s={naive_tok_s:.1f};speedup={speedup:.2f}x;"
+                f"matches_naive={matches}")
+    return {"arch": cfg.name, "d_flat": int(fspec.d), "batch": batch,
+            "prompt_len": prompt_len, "new_tokens": new_tokens,
+            "batched_tok_s": round(batched_tok_s, 2),
+            "naive_tok_s": round(naive_tok_s, 2),
+            "speedup": round(speedup, 3), "matches_naive": matches}
+
+
+def main(smoke: bool = False) -> None:
+    if smoke:
+        grid, iters = (10**4, 10**5), 3
+        serving = bench_serving(batch=4, prompt_len=2, new_tokens=4,
+                                time_iters=3)
+    else:
+        # batch pinned where the stacked (B, D) parameter working set still
+        # fits this host's LLC — past that the one-dispatch win inverts on
+        # CPU (B=6 already thrashes); accelerator memory moves the knee
+        grid, iters = (10**4, 10**5, 10**6), 5
+        serving = bench_serving(batch=4, prompt_len=4, new_tokens=16,
+                                time_iters=5)
+
+    rows = [bench_store(n, delta, time_iters=iters)
+            for n in grid for delta in STORE_DELTAS]
+    equivalence = bench_equivalence()
+
+    max_n = max(grid)
+    topk_at_max = next(r for r in rows
+                       if r["n_total"] == max_n
+                       and r["delta"].startswith("topk:"))
+    acceptance = {
+        "rank_full_bit_identical": equivalence["bit_identical"],
+        "max_abs_err": equivalence["max_abs_err"],
+        "residual_max_abs": equivalence["residual_max_abs"],
+        "store_roundtrip_exact": equivalence["store_roundtrip_exact"],
+        "max_n_total": max_n,
+        "store_ratio_at_max_n": topk_at_max["store_ratio"],
+        "batched_tok_s": serving["batched_tok_s"],
+        "naive_tok_s": serving["naive_tok_s"],
+        "serving_speedup": serving["speedup"],
+        "serving_matches_naive": serving["matches_naive"],
+        "note": ("bit-identity: the full codec's two-term payload "
+                 "round-trips bitwise, the EF residual stays exactly zero, "
+                 "and the gossip reduces to the uncompressed mix — "
+                 "max_abs_err is pinned at 0.0; store_ratio_at_max_n is "
+                 "the topk:128 DeltaStore vs the dense (n_total, 2048) "
+                 "population store (<= 0.25 acceptance); serving compares "
+                 "one vmapped dispatch per token against B sequential "
+                 "full-weight generate calls decoding identical tokens")}
+    out = {"workload": "delta-parameterized FedDec state "
+                       "(store/engine/serving)",
+           "backend": jax.default_backend(), "smoke": smoke,
+           "rows": rows, "equivalence": equivalence, "serving": serving,
+           "acceptance": acceptance}
+    name = "BENCH_delta.smoke.json" if smoke else "BENCH_delta.json"
+    path = os.path.join(common.ensure_results_dir(), name)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {path}")
+    common.write_csv("bench_delta.csv", list(rows[0].keys()),
+                     [tuple(r.values()) for r in rows])
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="smaller n_total grid / shorter serving run for CI")
+    args = p.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=args.smoke)

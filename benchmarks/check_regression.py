@@ -50,6 +50,18 @@ evidence instead:
     XLA and host work), and the n_total == cohort trajectory stayed
     bit-identical to the flat sparse engine.
 
+  * delta — BENCH_delta.json store rows' byte columns are exact against
+    analysis.delta_cost_model (and every materialized store's *measured*
+    nbytes equals the model exactly — the memmap layout and the analytic
+    row must never drift apart), the topk delta store stays ≤ 0.25× the
+    dense population store at the largest n_total (committed baseline must
+    reach 1e6 with the store actually materialized), the rank=full engine
+    trajectory stayed bit-identical to the flat engine (max_abs_err == 0.0
+    with an exactly-zero EF residual — the PR 4/5/6 gate), the DeltaStore
+    full-kind round-trip is bitwise, and batched personalized serving
+    decoded the same tokens as the naive per-request loop while beating
+    its tokens/sec.
+
 Run (what ci.yml does):
   PYTHONPATH=src python -m benchmarks.check_regression \\
       --baseline-gossip results/benchmarks/BENCH_gossip.json \\
@@ -57,7 +69,9 @@ Run (what ci.yml does):
       --baseline-sharded results/benchmarks/BENCH_sharded.json \\
       --fresh-sharded results/benchmarks/BENCH_sharded.smoke.json \\
       --baseline-compress results/benchmarks/BENCH_compress.json \\
-      --fresh-compress results/benchmarks/BENCH_compress.smoke.json
+      --fresh-compress results/benchmarks/BENCH_compress.smoke.json \\
+      --baseline-delta results/benchmarks/BENCH_delta.json \\
+      --fresh-delta results/benchmarks/BENCH_delta.smoke.json
 """
 
 from __future__ import annotations
@@ -103,12 +117,25 @@ REQUIRED_POPULATION_OVERLAP = {"host_cpus", "sync_ms_per_round",
                                "overlap_ms_per_round", "device_stage_ms",
                                "host_stage_ms", "speedup_measured",
                                "speedup_pipeline_bound", "drains"}
+REQUIRED_DELTA_ROW = {"n_total", "d", "delta", "delta_row_bytes",
+                      "flat_row_bytes", "flat_store_bytes",
+                      "delta_store_bytes", "store_ratio", "materialized",
+                      "measured_store_bytes", "gather_us", "scatter_us"}
+REQUIRED_DELTA_EQUIV = {"n_agents", "d", "h", "rounds", "max_abs_err",
+                        "bit_identical", "residual_max_abs",
+                        "store_roundtrip_exact"}
+REQUIRED_DELTA_SERVING = {"arch", "d_flat", "batch", "prompt_len",
+                          "new_tokens", "batched_tok_s", "naive_tok_s",
+                          "speedup", "matches_naive"}
 INT8_HALO_CEILING = 0.30  # acceptance: int8 halo bytes ≤ 0.30× f32 halo
 SWEEP_SMOKE_MARGIN = 1.5   # generous: committed baseline shows 6-17x
 SWEEP_ACCEPT_SPEEDUP = 5.0  # ISSUE acceptance at fig4 shapes (committed)
 POPULATION_OVERLAP_FLOOR = 1.2    # acceptance: streaming overlap ≥ 1.2×
 POPULATION_OVERLAP_SMOKE_FLOOR = 1.0  # relaxed: tiny smoke shapes
 POPULATION_MAX_N = 1_000_000      # acceptance: committed run reaches 1e6
+DELTA_STORE_CEILING = 0.25   # acceptance: topk delta store ≤ 0.25× dense
+DELTA_MAX_N = 1_000_000      # acceptance: committed run reaches 1e6
+DELTA_SERVING_FLOOR = 1.0    # batched personalized decode beats naive
 
 
 class RegressionError(AssertionError):
@@ -450,6 +477,107 @@ def check_population_doc(doc: dict, label: str) -> None:
           f"bit-identity max_abs_err {eq['max_abs_err']}")
 
 
+def check_delta_doc(doc: dict, label: str) -> None:
+    """Delta-parameterization evidence: exact byte columns (analytic AND
+    measured), the ≤ 0.25× topk store ceiling, the rank=full bit-identity
+    gate, and the batched-serving ordering."""
+    rows = doc.get("rows", [])
+    _require(bool(rows), f"{label}: no benchmark rows")
+    for row in rows:
+        missing = REQUIRED_DELTA_ROW - set(row)
+        _require(not missing, f"{label}: row missing {missing}: {row}")
+        # exact: every analytic column recomputed at the row's own shape
+        model = analysis.delta_cost_model(
+            n_total=row["n_total"], d=row["d"], delta=row["delta"])
+        for col, want in model.items():
+            _require(row[col] == want,
+                     f"{label}: delta={row['delta']} n_total="
+                     f"{row['n_total']} {col} drifted: row={row[col]} "
+                     f"cost-model={want}")
+        if row["materialized"]:
+            # the memmap layout IS the byte model: measured == analytic
+            _require(row["measured_store_bytes"]
+                     == model["delta_store_bytes"],
+                     f"{label}: delta={row['delta']} n_total="
+                     f"{row['n_total']} measured store bytes "
+                     f"{row['measured_store_bytes']} != analytic "
+                     f"{model['delta_store_bytes']}")
+            _require(row["gather_us"] > 0 and row["scatter_us"] > 0,
+                     f"{label}: non-positive gather/scatter time: {row}")
+    kinds = {r["delta"].split(":")[0] for r in rows}
+    _require({"topk", "lowrank", "full"} <= kinds,
+             f"{label}: delta-kind coverage shrank: {kinds}")
+
+    # the acceptance column: the topk store ≤ 0.25× the dense population
+    # store at the largest n_total, with the store actually materialized
+    # there (measured bytes, not just the model)
+    max_n = max(r["n_total"] for r in rows)
+    topk_rows = [r for r in rows
+                 if r["n_total"] == max_n and r["delta"].startswith("topk:")]
+    _require(bool(topk_rows),
+             f"{label}: no topk row at the largest n_total={max_n}")
+    for row in topk_rows:
+        _require(row["store_ratio"] <= DELTA_STORE_CEILING,
+                 f"{label}: topk store ratio {row['store_ratio']:.4f} > "
+                 f"{DELTA_STORE_CEILING} at n_total={max_n}")
+        _require(row["materialized"],
+                 f"{label}: the acceptance topk store at n_total={max_n} "
+                 f"was never materialized — the measured-byte evidence "
+                 f"vanished")
+
+    # the PR 4/5/6 gate: rank=full trajectory bit-identical, residual
+    # exactly zero, store round-trip bitwise
+    eq = doc.get("equivalence", {})
+    missing = REQUIRED_DELTA_EQUIV - set(eq)
+    _require(not missing, f"{label}: equivalence record missing {missing}")
+    _require(bool(eq["bit_identical"]) and eq["max_abs_err"] == 0.0,
+             f"{label}: rank=full bit-identity broke: {eq}")
+    _require(eq["residual_max_abs"] == 0.0,
+             f"{label}: rank=full EF residual is nonzero "
+             f"({eq['residual_max_abs']}) — the lossless anchor leaks")
+    _require(bool(eq["store_roundtrip_exact"]),
+             f"{label}: DeltaStore full-kind round-trip lost bitwise "
+             f"exactness")
+
+    # serving: identical tokens, batched beats the naive per-request loop
+    sv = doc.get("serving", {})
+    missing = REQUIRED_DELTA_SERVING - set(sv)
+    _require(not missing, f"{label}: serving record missing {missing}")
+    _require(bool(sv["matches_naive"]),
+             f"{label}: batched personalized decode diverged from the "
+             f"naive per-request loop")
+    _require(sv["speedup"] > DELTA_SERVING_FLOOR,
+             f"{label}: batched personalized decode no longer beats naive "
+             f"per-agent serving: {sv['speedup']} <= {DELTA_SERVING_FLOOR}")
+
+    acc = doc.get("acceptance", {})
+    _require(bool(acc.get("rank_full_bit_identical"))
+             and acc.get("max_abs_err") == 0.0,
+             f"{label}: acceptance bit-identity record broke: {acc}")
+    _require(acc.get("store_ratio_at_max_n", 1.0) <= DELTA_STORE_CEILING,
+             f"{label}: acceptance store ratio "
+             f"{acc.get('store_ratio_at_max_n')} > {DELTA_STORE_CEILING}")
+    if not doc.get("smoke"):
+        _require(max_n >= DELTA_MAX_N,
+                 f"{label}: committed baseline tops out at "
+                 f"n_total={max_n} < {DELTA_MAX_N}")
+    print(f"[guard] {label}: {len(rows)} rows OK, topk ratio "
+          f"{topk_rows[0]['store_ratio']:.4f} at n_total={max_n}, "
+          f"bit-identity max_abs_err {eq['max_abs_err']}, serving "
+          f"{sv['speedup']}x over naive")
+
+
+def check_delta_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
+    """Smoke runs shrink the n_total grid by design; the delta-kind
+    coverage and the bit-identity anchor must survive."""
+    base_deltas = {r["delta"] for r in baseline["rows"]}
+    new_deltas = {r["delta"] for r in fresh["rows"]}
+    _require(base_deltas <= new_deltas,
+             f"fresh delta run dropped schemes: {base_deltas - new_deltas}")
+    _require(bool(fresh.get("equivalence", {}).get("bit_identical")),
+             "fresh delta run lost the rank=full bit-identity anchor")
+
+
 def check_population_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
     """Smoke runs shrink the n_total grid by design; the fixed-cohort
     contract and the equivalence anchor must survive."""
@@ -505,6 +633,10 @@ def main() -> None:
                    help="optional: committed BENCH_population.json baseline")
     p.add_argument("--fresh-population", default=None,
                    help="fresh BENCH_population[.smoke].json to check")
+    p.add_argument("--baseline-delta", default=None,
+                   help="optional: committed BENCH_delta.json baseline")
+    p.add_argument("--fresh-delta", default=None,
+                   help="fresh BENCH_delta[.smoke].json to check")
     args = p.parse_args()
 
     with open(args.baseline_gossip) as f:
@@ -551,6 +683,15 @@ def main() -> None:
                                  "baseline BENCH_population")
             check_population_baseline_vs_fresh(baseline_population,
                                                fresh_population)
+    if args.fresh_delta:
+        with open(args.fresh_delta) as f:
+            fresh_delta = json.load(f)
+        check_delta_doc(fresh_delta, "fresh BENCH_delta")
+        if args.baseline_delta:
+            with open(args.baseline_delta) as f:
+                baseline_delta = json.load(f)
+            check_delta_doc(baseline_delta, "baseline BENCH_delta")
+            check_delta_baseline_vs_fresh(baseline_delta, fresh_delta)
     print("[guard] all perf-regression checks passed")
 
 

@@ -19,6 +19,9 @@ commentary) and writes full curves/tables under results/benchmarks/.
   bench_population — cohort-sampled population engine (n_total up to 1e6:
                      flat peak-device bytes, streaming overlap, cohort
                      bit-identity vs the flat sparse engine)
+  bench_delta      — delta-parameterized state (DeltaStore bytes vs the
+                     dense store, rank=full bit-identity, batched
+                     personalized serving vs the naive per-agent loop)
   ablation_server  — beyond-paper: §5 conjecture (server vs pure gossip)
   roofline         — aggregates results/dryrun into the §Roofline table
 """
@@ -33,11 +36,11 @@ def main() -> None:
     p.add_argument("--only", default=None)
     args = p.parse_args()
 
-    from benchmarks import (ablation_server, bench_compress, bench_fused,
-                            bench_gossip, bench_kernels, bench_population,
-                            bench_sharded, bench_sweep, fig2_alpha,
-                            fig4_convergence, roofline, table1_lambda2,
-                            theory_check)
+    from benchmarks import (ablation_server, bench_compress, bench_delta,
+                            bench_fused, bench_gossip, bench_kernels,
+                            bench_population, bench_sharded, bench_sweep,
+                            fig2_alpha, fig4_convergence, roofline,
+                            table1_lambda2, theory_check)
     jobs = {
         "table1_lambda2": lambda: table1_lambda2.main(
             seeds=3 if args.quick else 10),
@@ -53,6 +56,7 @@ def main() -> None:
         "bench_compress": lambda: bench_compress.main(smoke=args.quick),
         "bench_sweep": lambda: bench_sweep.main(smoke=args.quick),
         "bench_population": lambda: bench_population.main(smoke=args.quick),
+        "bench_delta": lambda: bench_delta.main(smoke=args.quick),
         "ablation_server": lambda: ablation_server.main(
             t_steps=1500 if args.quick else 3000,
             seeds=3 if args.quick else 6),

@@ -291,3 +291,7 @@ class FedConfig:
     # gossip payload compression with error feedback (repro.core.compress):
     # none | identity | bf16 | int8 | topk:R
     gossip_compress: str = "none"
+    # delta parameterization of the agent state (repro.core.delta):
+    # none | full | topk:K | lowrank:R — mutually exclusive with
+    # gossip_compress; 'full' is the lossless bit-identical anchor
+    delta: str = "none"

@@ -361,6 +361,12 @@ class EngineSpec:
       force_run_axis: keep the run axis even for a single run (the sweep
         engine's own public API lowers R = 1 plans this way so its carry
         stays a SweepFedState).
+      delta: the delta-parameterization axis (mirrors the shared
+        ``FedDecConfig.delta``): 'none' | 'full' | 'topk:K' | 'lowrank:R'.
+        Non-'none' lowers on the single-run, single-device flat engine
+        (agents exchange encoded deltas against a shared base row —
+        repro.core.delta); the population engine consumes the same codecs
+        host-side via DeltaStore.
     """
 
     configs: tuple
@@ -369,6 +375,7 @@ class EngineSpec:
     axis_name: Any = "agents"
     t_steps: tuple | None = None
     force_run_axis: bool = False
+    delta: str = "none"
 
     @property
     def cfg(self):
@@ -426,9 +433,29 @@ def parse_engine_spec(configs, layout: str = "flat", n_shards: int = 1,
                          f"size {n_shards} (block-sharded rows)")
     if t_steps is not None:
         t_steps = tuple(int(t) for t in np.asarray(t_steps).reshape(-1))
+    delta = getattr(configs[0], "delta", "none")
+    if any(getattr(c, "delta", "none") != delta for c in configs):
+        raise ValueError("all runs of an engine lattice must share one "
+                         "delta parameterization")
+    if delta != "none":
+        if layout == "tree":
+            raise ValueError(
+                "delta parameterization needs the flat (n, D) layout — the "
+                "base row and encoded payloads are whole-buffer objects; "
+                "use layout='flat'")
+        if len(configs) > 1 or force_run_axis:
+            raise ValueError(
+                "delta parameterization is single-run: the sweep lattice "
+                "shares one state buffer per run and does not thread the "
+                "per-run base rows")
+        if n_shards > 1:
+            raise ValueError(
+                "delta parameterization lowers on the single-device flat "
+                "engine (the sharded halo exchanges dense row blocks); "
+                "use n_shards=1 or delta='none'")
     spec = EngineSpec(configs=configs, layout=layout, n_shards=n_shards,
                       axis_name=axis_name, t_steps=t_steps,
-                      force_run_axis=force_run_axis)
+                      force_run_axis=force_run_axis, delta=delta)
     if spec.has_run_axis or t_steps is not None:
         spec.plan()  # full lattice validation (raises on bad combinations)
     return spec
@@ -456,13 +483,15 @@ def make_engine_round(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
                       optimizer=None, metrics_fn=None,
                       block_d: int | None = None, donate: bool = True,
                       jit: bool = True, unroll: int = 1,
-                      per_step_keys: bool = False):
+                      per_step_keys: bool = False, delta_base=None):
     """Lower an EngineSpec to its fused-round executor.
 
     Dispatch: layout 'tree' → the tree engine; a run axis → the sweep
     engine; a mesh → the sharded engine; both → the sharded-sweep
     composition.  The per-engine ``make_*_feddec_round`` constructors are
-    shims over this function.
+    shims over this function.  ``delta_base`` is the shared (D,) base row
+    of a ``delta != 'none'`` spec (defaults to zeros — every agent row is
+    then its own delta).
     """
     kind = _dispatch(espec, flat_spec, mesh)
     if kind in ("sweep", "sharded_sweep") and gossip_fn is not None:
@@ -472,6 +501,9 @@ def make_engine_round(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
     if kind == "sharded" and metrics_fn is not None:
         raise ValueError("metrics_fn is not supported by the single-run "
                          "sharded lowering")
+    if delta_base is not None and espec.delta == "none":
+        raise ValueError("delta_base was passed but the spec has "
+                         "delta='none'")
 
     if kind == "tree":
         from repro.core import feddec
@@ -484,7 +516,7 @@ def make_engine_round(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
         return flat_lib._lower_flat_round(
             espec.cfg, flat_spec, grad_fn, lr_fn, gossip_fn=gossip_fn,
             optimizer=optimizer, metrics_fn=metrics_fn, donate=donate,
-            jit=jit, unroll=unroll)
+            jit=jit, unroll=unroll, delta_base=delta_base)
     if kind == "sweep":
         from repro.core import sweep as sweep_lib
         return sweep_lib._lower_sweep_round(
@@ -507,12 +539,16 @@ def make_engine_round(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
 def make_engine_step(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
                      flat_spec=None, mesh=None, gossip_fn=None,
                      optimizer=None, block_d: int | None = None,
-                     donate: bool = True, jit: bool = True):
+                     donate: bool = True, jit: bool = True,
+                     delta_base=None):
     """Lower an EngineSpec to its one-iteration executor (same dispatch as
     :func:`make_engine_round`)."""
     kind = _dispatch(espec, flat_spec, mesh)
     if kind in ("sweep", "sharded_sweep") and gossip_fn is not None:
         raise ValueError("gossip_fn overrides are single-run only")
+    if delta_base is not None and espec.delta == "none":
+        raise ValueError("delta_base was passed but the spec has "
+                         "delta='none'")
 
     if kind == "tree":
         from repro.core import feddec
@@ -523,7 +559,8 @@ def make_engine_step(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
         from repro.core import flat as flat_lib
         return flat_lib._lower_flat_step(
             espec.cfg, flat_spec, grad_fn, lr_fn, gossip_fn=gossip_fn,
-            optimizer=optimizer, donate=donate, jit=jit)
+            optimizer=optimizer, donate=donate, jit=jit,
+            delta_base=delta_base)
     if kind == "sweep":
         from repro.core import sweep as sweep_lib
         return sweep_lib._lower_sweep_step(

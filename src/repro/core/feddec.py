@@ -85,6 +85,12 @@ class FedDecConfig:
         agents exchange encoded values with a CHOCO-style error-feedback
         residual carried in the state; 'none' (default) is the exact
         uncompressed path with no residual state.
+      delta: delta parameterization of the agent state
+        ('none'|'full'|'topk:K'|'lowrank:R', repro.core.delta): agents are
+        stored/exchanged as ``base + delta_i`` and gossip moves the
+        *encoded delta* payload through the same error-feedback machinery
+        as gossip_compress (the two are mutually exclusive).  'full' is the
+        lossless two-term anchor — bit-identical to delta='none'.
     """
 
     mixing: MixingDistribution
@@ -93,6 +99,7 @@ class FedDecConfig:
     server_enabled: bool = True
     gossip_impl: str = "dense"
     gossip_compress: str = "none"
+    delta: str = "none"
 
     GOSSIP_IMPLS = engine.GOSSIP_IMPLS
 
@@ -102,6 +109,14 @@ class FedDecConfig:
         if self.k < 1:
             raise ValueError(f"K must be >= 1, got {self.k}")
         compress_lib.parse_compress(self.gossip_compress)  # validate spec
+        from repro.core import delta as delta_lib
+        delta_lib.parse_delta(self.delta)  # validate spec
+        if self.delta != "none" and self.gossip_compress != "none":
+            raise ValueError(
+                "delta and gossip_compress are mutually exclusive: both "
+                "route the exchange through the same error-feedback "
+                f"residual (got delta={self.delta!r}, "
+                f"gossip_compress={self.gossip_compress!r})")
         # the same error every resolver raises (engine.unknown_gossip_impl)
         engine.check_gossip_impl(self.gossip_impl)
 

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compress as compress_lib
+from repro.core import delta as delta_lib
 from repro.core import engine
 from repro.core import server as server_lib
 from repro.core.feddec import FedDecConfig, FedState
@@ -174,17 +175,21 @@ class FlatFedState:
 
 
 def init_flat_state(spec: FlatSpec, params_single: Any, n_agents: int,
-                    optimizer=None, compress: str = "none") -> FlatFedState:
+                    optimizer=None, compress: str = "none",
+                    delta: str = "none") -> FlatFedState:
     """z_i^1 = z^1 ∀i (Alg. 1 line 1), directly in the flat layout.
 
     ``compress != 'none'`` adds the zero-initialised (n, D) error-feedback
-    residual buffer the compressed-gossip step carries (repro.core.compress).
+    residual buffer the compressed-gossip step carries (repro.core.compress);
+    ``delta != 'none'`` carries the same residual for the delta-encoded
+    exchange (repro.core.delta) — the two are mutually exclusive.
     """
     row = spec.ravel(params_single)
     flat = jnp.tile(row[None], (n_agents, 1))
     opt_state = optimizer.init(flat) if optimizer is not None else ()
-    residual = compress_lib.init_residual(
-        compress_lib.parse_compress(compress), n_agents, spec.d, spec.dtype)
+    needs_res = (compress_lib.parse_compress(compress) is not None
+                 or delta_lib.parse_delta(delta).kind != "none")
+    residual = jnp.zeros((n_agents, spec.d), spec.dtype) if needs_res else ()
     return FlatFedState(flat=flat, step=jnp.asarray(1, dtype=jnp.int32),
                         opt_state=opt_state, residual=residual)
 
@@ -279,7 +284,8 @@ def resolve_flat_gossip(cfg: FedDecConfig,
 
 
 def _flat_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
-              lr_fn: LrFn, gossip_fn, optimizer) -> engine.EngineOps:
+              lr_fn: LrFn, gossip_fn, optimizer,
+              delta_base=None) -> engine.EngineOps:
     """The flat engine's vtable for the shared Algorithm-1 body."""
     custom_gossip = gossip_fn is not None
     if gossip_fn is None:
@@ -290,6 +296,17 @@ def _flat_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
     # (kernels/compress_mix.py) instead of three whole-buffer passes
     compressor = compress_lib.parse_compress(cfg.gossip_compress) \
         if cfg.gossip_impl != "none" else None
+    # delta-parameterized exchange: the wire carries encoded deltas against
+    # a shared base row, through the identical EF wrapper (delta='full' is
+    # the lossless anchor — bit-identical to the uncompressed path)
+    if compressor is None and cfg.gossip_impl != "none" \
+            and delta_lib.parse_delta(cfg.delta).kind != "none":
+        base = jnp.zeros((spec.d,), spec.dtype) if delta_base is None \
+            else jnp.asarray(delta_base, spec.dtype).reshape(-1)
+        if base.shape[0] != spec.d:
+            raise ValueError(f"delta_base has D={base.shape[0]}, flat spec "
+                             f"has D={spec.d}")
+        compressor = delta_lib.make_delta_codec(cfg.delta, base)
     ef_gossip = None
     if compressor is not None:
         ef_gossip = compress_lib.make_flat_ef_gossip(
@@ -341,26 +358,29 @@ def _flat_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
 
 
 def _build_flat_step_body(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
-                          lr_fn: LrFn, gossip_fn, optimizer):
+                          lr_fn: LrFn, gossip_fn, optimizer,
+                          delta_base=None):
     """Algorithm-1 body on the flat carry; unflattens only around grad_fn."""
     return engine.build_step_body(
-        _flat_ops(cfg, spec, grad_fn, lr_fn, gossip_fn, optimizer))
+        _flat_ops(cfg, spec, grad_fn, lr_fn, gossip_fn, optimizer,
+                  delta_base=delta_base))
 
 
 def _lower_flat_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                      lr_fn: LrFn, *, gossip_fn=None, optimizer=None,
-                     donate: bool = True, jit: bool = True):
+                     donate: bool = True, jit: bool = True,
+                     delta_base=None):
     step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
-                                 optimizer)
+                                 optimizer, delta_base=delta_base)
     return engine.finalize_executor(step, donate=donate, jit=jit)
 
 
 def _lower_flat_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                       lr_fn: LrFn, *, gossip_fn=None, optimizer=None,
                       metrics_fn=None, donate: bool = True, jit: bool = True,
-                      unroll: int = 1):
+                      unroll: int = 1, delta_base=None):
     step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
-                                 optimizer)
+                                 optimizer, delta_base=delta_base)
     round_fn = engine.make_scan_round(step, metrics_fn=metrics_fn,
                                       unroll=unroll)
     return engine.finalize_executor(round_fn, donate=donate, jit=jit)
@@ -368,13 +388,15 @@ def _lower_flat_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
 
 def make_flat_feddec_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                           lr_fn: LrFn, gossip_fn=None, optimizer=None,
-                          donate: bool = True, jit: bool = True):
+                          donate: bool = True, jit: bool = True,
+                          delta_base=None):
     """One-iteration flat executor: step(state, batch, key) like the tree
     engine's make_feddec_step, carrying FlatFedState."""
     espec = engine.parse_engine_spec(cfg, layout="flat")
     return engine.make_engine_step(espec, grad_fn, lr_fn, flat_spec=spec,
                                    gossip_fn=gossip_fn, optimizer=optimizer,
-                                   donate=donate, jit=jit)
+                                   donate=donate, jit=jit,
+                                   delta_base=delta_base)
 
 
 def make_flat_feddec_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
@@ -382,7 +404,7 @@ def make_flat_feddec_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                            metrics_fn: Callable[[FlatFedState], dict]
                            | None = None,
                            donate: bool = True, jit: bool = True,
-                           unroll: int = 1):
+                           unroll: int = 1, delta_base=None):
     """The fused flat executor: H steps per compiled call, flat carry.
 
     Same contract as repro.core.feddec.make_feddec_round — batches carry a
@@ -397,4 +419,5 @@ def make_flat_feddec_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
     return engine.make_engine_round(espec, grad_fn, lr_fn, flat_spec=spec,
                                     gossip_fn=gossip_fn, optimizer=optimizer,
                                     metrics_fn=metrics_fn, donate=donate,
-                                    jit=jit, unroll=unroll)
+                                    jit=jit, unroll=unroll,
+                                    delta_base=delta_base)

@@ -163,6 +163,11 @@ class PopulationStore:
     def d(self) -> int:
         return self.rows.shape[1]
 
+    @property
+    def nbytes(self) -> int:
+        """Live host bytes: dense rows + staleness counters."""
+        return int(self.rows.nbytes + self.last_round.nbytes)
+
     @classmethod
     def create(cls, n_total: int, row_init: np.ndarray,
                path: str | None = None, dtype=np.float32,
@@ -438,6 +443,7 @@ class PopulationEngine:
                  store: PopulationStore | None = None,
                  row_init: np.ndarray | None = None,
                  store_path: str | None = None,
+                 delta: str = "none",
                  weights: np.ndarray | None = None, metrics_fn=None,
                  jit: bool = True):
         n = graph.n
@@ -457,9 +463,26 @@ class PopulationEngine:
         if store is None:
             if row_init is None:
                 raise ValueError("pass either store= or row_init=")
-            store = PopulationStore.create(
-                spec.n_total, np.asarray(row_init, dtype=flat_spec.dtype),
-                path=store_path, dtype=np.dtype(flat_spec.dtype))
+            if delta != "none":
+                # base = z^1, every agent row an encoded (initially zero)
+                # delta: the host store is O(n_total·K) instead of
+                # O(n_total·D) — see repro.core.delta.DeltaStore
+                from repro.core.delta import DeltaStore
+                store = DeltaStore.create(
+                    spec.n_total,
+                    np.asarray(row_init, dtype=flat_spec.dtype),
+                    delta, path=store_path,
+                    dtype=np.dtype(flat_spec.dtype))
+            else:
+                store = PopulationStore.create(
+                    spec.n_total,
+                    np.asarray(row_init, dtype=flat_spec.dtype),
+                    path=store_path, dtype=np.dtype(flat_spec.dtype))
+        elif delta != "none":
+            from repro.core.delta import DeltaStore
+            if not isinstance(store, DeltaStore):
+                raise ValueError("delta != 'none' with an explicit store= "
+                                 "needs a DeltaStore")
         if store.d != flat_spec.d:
             raise ValueError(f"store D={store.d} != flat spec D="
                              f"{flat_spec.d}")

@@ -26,7 +26,8 @@ __all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "H2D_BW", "CollectiveStats",
            "dtype_bytes", "gossip_cost_model", "sharded_gossip_cost_model",
            "sweep_cost_model", "sharded_sweep_cost_model",
            "population_cost_model", "compress_row_bytes",
-           "compressed_halo_cost_model", "COMPRESS_SCHEMES", "hlo_analysis"]
+           "compressed_halo_cost_model", "COMPRESS_SCHEMES",
+           "delta_row_bytes", "delta_cost_model", "hlo_analysis"]
 
 PEAK_FLOPS = 197e12   # bf16 per chip
 HBM_BW = 819e9        # bytes/s per chip
@@ -390,6 +391,69 @@ def population_cost_model(*, n_total: int, cohort_size: int, d: int,
         "subgraph_edge_bytes_round": edge_bytes,
         "peak_device_bytes": 2.0 * row_bytes + 2.0 * edge_bytes,
         "transfer_us_round": hostdev / h2d_bw * 1e6,
+    }
+
+
+def delta_row_bytes(delta: str, d: int, param_bytes: int = 4) -> float:
+    """Analytic per-agent payload bytes of a delta parameterization.
+
+    Mirrors ``repro.core.delta.delta_store_bytes_per_row`` without
+    importing the codecs (this module stays jax-free): 'full' stores the
+    two-term exact delta (2·D·b — the bit-identity anchor, not a
+    compression), 'topk:K' keeps K (value, int32 index) pairs, 'lowrank:R'
+    keeps the rank-R factors of the near-square (d1, d2) reshape.
+    """
+    if delta == "none":
+        return float(d * param_bytes)
+    if delta == "full":
+        return float(2 * d * param_bytes)
+    if delta.startswith("topk:"):
+        k = min(int(delta[5:]), d)
+        return float(k) * (param_bytes + 4.0)
+    if delta.startswith("lowrank:"):
+        d1, f = 1, 1
+        while f * f <= d:          # largest divisor of d below sqrt(d)
+            if d % f == 0:
+                d1 = f
+            f += 1
+        d2 = d // d1
+        r = min(int(delta[8:]), d1)
+        return float(r * (d1 + d2) * param_bytes)
+    raise ValueError(f"unknown delta scheme {delta!r}")
+
+
+def delta_cost_model(*, n_total: int, d: int, delta: str,
+                     param_bytes: int = 4, counter_bytes: int = 8) -> dict:
+    """Analytic host-store byte model of the delta parameterization.
+
+    The delta store (repro.core.delta.DeltaStore) replaces the population
+    engine's dense (n_total, D) memmap with one shared base row plus
+    per-agent encoded payloads, so the host store shrinks from
+    O(n_total·D) to O(n_total·K).  Returns the exact columns the
+    regression guard recomputes:
+
+      * ``delta_row_bytes``   — encoded payload bytes per agent (also the
+        gossip wire bytes of the delta-encoded exchange);
+      * ``flat_store_bytes``  — the dense baseline,
+        n_total·(D·b + counter_bytes) (== population_cost_model's
+        ``host_store_bytes``);
+      * ``delta_store_bytes`` — D·b (base) + n_total·(row + counter);
+      * ``store_ratio``       — delta / flat, the ≤ 0.25× acceptance
+        column at n_total = 1e6 for topk stores.
+    """
+    row = delta_row_bytes(delta, d, param_bytes)
+    flat_store = float(n_total * (d * param_bytes + counter_bytes))
+    delta_store = float(d * param_bytes
+                        + n_total * (row + counter_bytes))
+    return {
+        "n_total": int(n_total),
+        "d": int(d),
+        "delta": delta,
+        "delta_row_bytes": row,
+        "flat_row_bytes": float(d * param_bytes),
+        "flat_store_bytes": flat_store,
+        "delta_store_bytes": delta_store,
+        "store_ratio": delta_store / flat_store,
     }
 
 

@@ -78,7 +78,8 @@ def build_fed_setup(cfg: ArchConfig, axes: shd.MeshAxes,
     impl = "dense" if fed.gossip_impl == "permute" else fed.gossip_impl
     fcfg = feddec.FedDecConfig(mixing=mixing, h=fed.h,
                                k=min(fed.k, n), gossip_impl=impl,
-                               gossip_compress=fed.gossip_compress)
+                               gossip_compress=fed.gossip_compress,
+                               delta=fed.delta)
     return fcfg, n
 
 

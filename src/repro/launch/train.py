@@ -132,6 +132,7 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     lr_fn = lambda t: jnp.asarray(lr, jnp.float32)  # noqa: E731
     # no exchange (FedAvg / impl 'none') ⇒ nothing to compress, no residual
     compress = fcfg.gossip_compress if fcfg.gossip_impl != "none" else "none"
+    delta = fcfg.delta if fcfg.gossip_impl != "none" else "none"
 
     data = make_federated_lm(cfg.vocab_size, n_agents, seq_len,
                              alpha=data_alpha, seed=seed)
@@ -161,7 +162,8 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
         else:
             state = flat_lib.init_flat_state(spec, params0, n_agents,
                                              optimizer=opt,
-                                             compress=compress)
+                                             compress=compress,
+                                             delta=delta)
             if mesh_agents is not None:
                 if n_agents % mesh_agents:
                     raise ValueError(f"--mesh-agents {mesh_agents} must "
@@ -179,11 +181,13 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
             elif fused:
                 round_fn = flat_lib.make_flat_feddec_round(
                     fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
-                    donate=True)
+                    donate=True, delta_base=spec.ravel(params0)
+                    if delta != "none" else None)
             else:
                 step = flat_lib.make_flat_feddec_step(
                     fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
-                    donate=True)
+                    donate=True, delta_base=spec.ravel(params0)
+                    if delta != "none" else None)
     else:
         state = feddec.init_state(params0, n_agents, optimizer=opt,
                                   compress=compress)
@@ -206,7 +210,8 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
           + (f" (sweep lattice R={sweep_runs} axis={sweep_axis})"
              if sweep_runs else "")
           + f", gossip={fcfg.gossip_impl}"
-          + (f", compress={compress}" if compress != "none" else ""))
+          + (f", compress={compress}" if compress != "none" else "")
+          + (f", delta={delta}" if delta != "none" else ""))
 
     positions = jnp.broadcast_to(
         jnp.arange(seq_len, dtype=jnp.int32)[None, None],
@@ -328,6 +333,9 @@ def population_loop(cfg: ArchConfig, fed: FedConfig, *, n_total: int,
     if fed.gossip_compress != "none":
         raise ValueError("population mode streams uncompressed rows; "
                          "--gossip-compress is not supported")
+    # --delta in population mode is a *storage* format: the host store
+    # keeps encoded delta rows (repro.core.delta.DeltaStore) and the
+    # cohort gossip runs on the decoded dense rows; 'full' is lossless
     data = make_federated_lm(cfg.vocab_size, n_total, seq_len,
                              alpha=data_alpha, seed=seed)
     params0 = model.init(jax.random.key(seed))
@@ -335,13 +343,14 @@ def population_loop(cfg: ArchConfig, fed: FedConfig, *, n_total: int,
     lr_fn = lambda t: jnp.asarray(lr, jnp.float32)  # noqa: E731
     eng = population_lib.PopulationEngine(
         pspec, spec, model.grad_fn(), lr_fn, graph, h=fed.h, k=fed.k,
-        row_init=np.asarray(spec.ravel(params0)))
+        row_init=np.asarray(spec.ravel(params0)), delta=fed.delta)
     print(f"[train] population: {model.param_count(params0):,} params × "
           f"n_total={n_total} (cohort {cohort_size}, sampling={sampling}"
           + (f", staleness={staleness}" if staleness else "")
           + (f", clusters={n_clusters}" if n_clusters > 1 else "")
           + f"), graph={fed.graph}, H={fed.h}, K={fed.k}, "
-          f"store={eng.store.rows.nbytes / 1e6:.1f} MB host-side")
+          + (f"delta={fed.delta}, " if fed.delta != "none" else "")
+          + f"store={eng.store.nbytes / 1e6:.1f} MB host-side")
 
     positions = jnp.broadcast_to(
         jnp.arange(seq_len, dtype=jnp.int32)[None, None],
@@ -416,6 +425,15 @@ def main() -> None:
                         "int8 | topk:R (e.g. topk:0.1); the sharded "
                         "engine's ppermute halo then moves the encoded "
                         "payload")
+    p.add_argument("--delta", default="none", metavar="SPEC",
+                   help="delta-parameterize the agent state against a "
+                        "shared base row (repro.core.delta): none | full | "
+                        "topk:K | lowrank:R (e.g. topk:128).  Gossip then "
+                        "exchanges encoded deltas with error feedback "
+                        "('full' is lossless — bit-identical to none); in "
+                        "population mode (--n-total) the host store keeps "
+                        "encoded delta rows, O(n_total·K) bytes.  Mutually "
+                        "exclusive with --gossip-compress")
     p.add_argument("--mesh-agents", type=int, default=None, metavar="N",
                    help="shard the flat (n_agents, D) buffer over an "
                         "N-device 'agents' mesh axis (repro.core.sharded); "
@@ -479,7 +497,8 @@ def main() -> None:
     fed = FedConfig(n_agents=args.agents, h=args.h, k=args.k,
                     graph=args.graph, p_fail=args.p_fail,
                     gossip_impl=args.gossip_impl,
-                    gossip_compress=args.gossip_compress)
+                    gossip_compress=args.gossip_compress,
+                    delta=args.delta)
     if args.n_total is not None:
         for flag, val, default in (("--mesh-agents", args.mesh_agents, None),
                                    ("--sweep-runs", args.sweep_runs, None),

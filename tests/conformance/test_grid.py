@@ -105,6 +105,35 @@ def test_identity_codec_bit_identical(layout):
     np.testing.assert_array_equal(got["residual"], 0.0)
 
 
+@pytest.mark.parametrize("gossip_impl", ("dense", "sparse"))
+def test_delta_full_bit_identical(gossip_impl):
+    """The delta-parameterized engine at rank=full reproduces the flat
+    reference bit for bit: the full codec's compensated two-term payload
+    round-trips exactly, so the EF residual stays zero and the delta-encoded
+    exchange reduces to the uncompressed mix (repro.core.delta)."""
+    import dataclasses
+
+    from _equiv import KEY_SEED
+
+    prob, spec = problem(), flat_spec()
+    cfg_ref = make_cfg(gossip_impl=gossip_impl)
+    ref = run_layout("flat", cfg_ref)
+
+    cfg = dataclasses.replace(cfg_ref, delta="full")
+    base = jax.random.normal(jax.random.key(33), (prob.d,)) * 0.5
+    round_fn = flat_lib.make_flat_feddec_round(
+        cfg, spec, grad_fn(prob), lr_fn(prob), donate=False,
+        delta_base=spec.ravel(base))
+    state = flat_lib.init_flat_state(spec, jnp.zeros(prob.d), N_AGENTS,
+                                     delta="full")
+    s_got, m_got = round_fn(state, stacked_batches(prob=prob),
+                            jax.random.key(KEY_SEED))
+    got = _as_trajectory(s_got, m_got)
+    assert_trajectory_equiv({**got, "residual": None}, ref, bit_exact=True,
+                            label=f"delta-full/{gossip_impl}")
+    np.testing.assert_array_equal(got["residual"], 0.0)
+
+
 @pytest.mark.parametrize("layout", ("tree", "flat"))
 def test_per_step_executor_matches_round(layout):
     """T calls of the one-iteration executor == one fused round: both derive

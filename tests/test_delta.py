@@ -1,0 +1,445 @@
+"""Delta-parameterization contract: spec parsing, codec losslessness /
+error bounds, engine bit-identity at rank=full, DeltaStore round-trips,
+and the engine-lattice validation surface."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import delta as delta_lib
+from repro.core import engine, feddec, flat as flat_lib
+from repro.core import topology as topo
+from repro.core.mixing import MixingDistribution
+from repro.data import linreg
+from repro.launch import analysis
+
+# adversarial magnitudes: huge, tiny-normal, zero — the full codec must
+# round-trip every one of them bitwise.  Subnormals are excluded: XLA CPU
+# flushes them to zero in arithmetic, identically on the flat reference
+# and the delta path, so trajectory bit-identity holds but a raw
+# subnormal input cannot survive ANY engine's arithmetic.
+ADVERSARIAL = np.array([1e30, -1e30, 1e-30, 1.2e-38, -2e-38, 0.0, 1.0,
+                        -1.0, 3.14159, 1e6], dtype=np.float32)
+
+
+def _rows(seed=0, n=4, d=32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((n, d)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Spec parsing + byte model
+# ---------------------------------------------------------------------------
+
+
+class TestSpec:
+    @pytest.mark.parametrize("s, kind, rank", [
+        ("none", "none", 0), ("full", "full", 0),
+        ("topk:128", "topk", 128), ("lowrank:8", "lowrank", 8)])
+    def test_parse(self, s, kind, rank):
+        spec = delta_lib.parse_delta(s)
+        assert (spec.kind, spec.rank) == (kind, rank)
+        assert spec.spec_str == s
+
+    @pytest.mark.parametrize("bad", ["banana", "topk", "topk:", "topk:0",
+                                     "topk:-3", "topk:x", "lowrank:0",
+                                     "full:2", ""])
+    def test_parse_rejects(self, bad):
+        with pytest.raises(ValueError):
+            delta_lib.parse_delta(bad)
+
+    def test_lossless_flags(self):
+        assert delta_lib.parse_delta("full").is_lossless
+        assert delta_lib.parse_delta("none").is_lossless
+        assert not delta_lib.parse_delta("topk:4").is_lossless
+        assert not delta_lib.parse_delta("lowrank:2").is_lossless
+
+    @pytest.mark.parametrize("d, want", [(2048, (32, 64)), (25, (5, 5)),
+                                         (13, (1, 13)), (12, (3, 4)),
+                                         (1, (1, 1))])
+    def test_factor_dims(self, d, want):
+        d1, d2 = delta_lib.factor_dims(d)
+        assert (d1, d2) == want and d1 * d2 == d and d1 <= d2
+
+    @pytest.mark.parametrize("s", ["none", "full", "topk:7", "topk:4096",
+                                   "lowrank:3", "lowrank:999"])
+    @pytest.mark.parametrize("d", [25, 64, 2048])
+    def test_analysis_mirror_agrees(self, s, d):
+        """The jax-free launch.analysis mirror and the codec byte model
+        must never drift apart."""
+        spec = delta_lib.parse_delta(s)
+        assert (analysis.delta_row_bytes(s, d)
+                == delta_lib.delta_store_bytes_per_row(spec, d))
+
+    def test_codec_wire_bytes_match_model(self):
+        d = 64
+        base = jnp.zeros(d)
+        for s in ("full", "topk:7", "lowrank:3"):
+            codec = delta_lib.make_delta_codec(s, base)
+            assert (codec.wire_bytes_per_row(d)
+                    == delta_lib.delta_store_bytes_per_row(
+                        delta_lib.parse_delta(s), d))
+
+    def test_store_ratio_acceptance_shape(self):
+        """The committed benchmark's acceptance cell: topk:128 at D=2048
+        is analytically ≤ 0.25x the dense store at any large n_total."""
+        m = analysis.delta_cost_model(n_total=10**6, d=2048, delta="topk:128")
+        assert m["store_ratio"] <= 0.25
+
+
+# ---------------------------------------------------------------------------
+# Codec round-trips
+# ---------------------------------------------------------------------------
+
+
+class TestCodecs:
+    def test_full_codec_bitwise_roundtrip_adversarial(self):
+        n, d = 4, ADVERSARIAL.size * 2
+        rng = np.random.default_rng(1)
+        u = np.concatenate(
+            [np.tile(ADVERSARIAL, (n, 1)),
+             rng.standard_normal((n, ADVERSARIAL.size)).astype(np.float32)],
+            axis=1)
+        base = rng.standard_normal(d).astype(np.float32)
+        base[:3] = [1e30, -1e-35, 0.0]
+        codec = delta_lib.make_delta_codec("full", jnp.asarray(base))
+        s = codec.decode(codec.encode(None, jnp.asarray(u)), jnp.float32, d)
+        np.testing.assert_array_equal(np.asarray(s), u)
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           scale=st.sampled_from([1e-30, 1e-6, 1.0, 1e6, 1e30]))
+    @settings(max_examples=25, deadline=None)
+    def test_full_codec_lossless_property(self, seed, scale):
+        """decode(encode(x)) == x bitwise at rank=full, so the EF residual
+        is exactly zero — over magnitudes spanning subnormal to 1e30."""
+        u = _rows(seed, scale=scale)
+        base = _rows(seed + 1, n=1, scale=scale)[0]
+        codec = delta_lib.make_delta_codec("full", jnp.asarray(base))
+        s = np.asarray(codec.decode(codec.encode(None, jnp.asarray(u)),
+                                    jnp.float32, u.shape[1]))
+        np.testing.assert_array_equal(s, u)        # lossless ...
+        np.testing.assert_array_equal(u - s, 0.0)  # ... with zero residual
+
+    @given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 40))
+    @settings(max_examples=25, deadline=None)
+    def test_topk_codec_error_bounded_property(self, seed, k):
+        """At low rank the truncation error never exceeds the full
+        deviation |x - base| componentwise (dropped entries are the
+        smallest), and kept entries reconstruct to ~x."""
+        u = _rows(seed)
+        base = _rows(seed + 1, n=1)[0]
+        codec = delta_lib.make_delta_codec(f"topk:{k}", jnp.asarray(base))
+        s = np.asarray(codec.decode(codec.encode(None, jnp.asarray(u)),
+                                    jnp.float32, u.shape[1]))
+        dev = np.abs(u - base[None, :])
+        assert (np.abs(u - s) <= dev * (1 + 1e-5) + 1e-30).all()
+        if k >= u.shape[1]:
+            np.testing.assert_allclose(s, u, rtol=1e-5, atol=1e-6)
+
+    def test_lowrank_codec_error_bounded(self):
+        u = _rows(3, n=4, d=36)
+        base = _rows(4, n=1, d=36)[0]
+        dev = np.linalg.norm(u - base[None, :], axis=1)
+        prev = None
+        for r in (1, 3, 6):
+            codec = delta_lib.make_delta_codec(f"lowrank:{r}",
+                                               jnp.asarray(base))
+            s = np.asarray(codec.decode(codec.encode(None, jnp.asarray(u)),
+                                        jnp.float32, 36))
+            err = np.linalg.norm(u - s, axis=1)
+            assert (err <= dev * (1 + 1e-4)).all()
+            if prev is not None:       # higher rank never increases error
+                assert (err <= prev * (1 + 1e-4)).all()
+            prev = err
+        # rank == d1 is exact up to fp noise (full SVD reconstruction)
+        np.testing.assert_allclose(s, u, rtol=1e-4, atol=1e-5)
+
+    def test_np_topk_matches_jax_tie_order(self):
+        """The DeltaStore's numpy encoder must pick the same entries as
+        lax.top_k, ties included (stable argsort == top_k index order)."""
+        base = np.zeros(8, np.float32)
+        u = np.array([[3.0, -3.0, 1.0, 3.0, -1.0, 0.5, -3.0, 2.0]],
+                     dtype=np.float32)
+        codec = delta_lib.make_delta_codec("topk:4", jnp.asarray(base))
+        pj = codec.encode(None, jnp.asarray(u))
+        vn, idxn = delta_lib._np_topk_encode(u, base, 4)
+        np.testing.assert_array_equal(np.asarray(pj["i"]), idxn)
+        np.testing.assert_array_equal(np.asarray(pj["v"]), vn)
+
+
+# ---------------------------------------------------------------------------
+# Engine: rank=full bit-identity + config/lattice validation
+# ---------------------------------------------------------------------------
+
+
+def _run_linreg(delta, *, rounds=4, gossip_impl="dense"):
+    n, d, h = 6, 10, 3
+    prob = linreg.make_problem(n=n, m_rows=8, d=d, seed=0)
+    graph = topo.geographic_graph(n, 0.6, seed=2)
+    cfg = feddec.FedDecConfig(
+        mixing=MixingDistribution(graph, p_fail=0.0, scheme="metropolis"),
+        h=h, k=2, gossip_impl=gossip_impl, delta=delta)
+    spec = flat_lib.make_flat_spec(jnp.zeros(d))
+    x0 = jax.random.normal(jax.random.key(4), (d,)) * 0.3
+    base = spec.ravel(x0) if delta != "none" else None
+    rnd = flat_lib.make_flat_feddec_round(
+        cfg, spec, linreg.make_grad_fn(prob.m_rows),
+        lambda t: jnp.float32(1e-3), donate=False, delta_base=base)
+    st_ = flat_lib.init_flat_state(spec, x0, n, delta=delta)
+    key = jax.random.key(5)
+    batches = [
+        jax.vmap(lambda k: linreg.sample_minibatch(prob, k, m=2))(
+            jax.random.split(jax.random.fold_in(jax.random.key(6), r), h))
+        for r in range(rounds)]
+    for b in batches:
+        st_, _ = rnd(st_, b, key)
+    res = None if isinstance(st_.residual, tuple) else np.asarray(st_.residual)
+    return np.asarray(st_.flat), res
+
+
+class TestEngine:
+    @pytest.mark.parametrize("gossip_impl", ["dense", "sparse"])
+    def test_rank_full_bit_identical(self, gossip_impl):
+        ref, _ = _run_linreg("none", gossip_impl=gossip_impl)
+        got, res = _run_linreg("full", gossip_impl=gossip_impl)
+        np.testing.assert_array_equal(got, ref)
+        np.testing.assert_array_equal(res, 0.0)
+
+    def test_topk_delta_runs_and_converges_nearby(self):
+        ref, _ = _run_linreg("none")
+        got, res = _run_linreg("topk:8")   # k >= 8/10 of the row
+        assert res is not None
+        assert np.isfinite(got).all()
+        assert np.abs(got - ref).max() < 1.0
+
+    def test_delta_and_compress_mutually_exclusive(self):
+        g = topo.ring_graph(6, 1)
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            feddec.FedDecConfig(
+                mixing=MixingDistribution(g), delta="full",
+                gossip_compress="int8")
+
+    def test_bad_delta_spec_rejected_at_config(self):
+        g = topo.ring_graph(6, 1)
+        with pytest.raises(ValueError):
+            feddec.FedDecConfig(mixing=MixingDistribution(g), delta="banana")
+
+    def test_init_flat_state_carries_residual(self):
+        spec = flat_lib.make_flat_spec(jnp.zeros(10))
+        st_ = flat_lib.init_flat_state(spec, jnp.zeros(10), 4, delta="full")
+        assert not isinstance(st_.residual, tuple)
+        assert st_.residual.shape == (4, 10)
+        st0 = flat_lib.init_flat_state(spec, jnp.zeros(10), 4)
+        assert isinstance(st0.residual, tuple)
+
+    def _cfg(self, delta="full", n=8):
+        g = topo.ring_graph(n, 1)
+        return feddec.FedDecConfig(mixing=MixingDistribution(g), h=2, k=2,
+                                   delta=delta)
+
+    def test_lattice_rejects_tree_layout(self):
+        with pytest.raises(ValueError, match="flat"):
+            engine.parse_engine_spec(self._cfg(), layout="tree")
+
+    def test_lattice_rejects_sweeps(self):
+        with pytest.raises(ValueError, match="single-run"):
+            engine.parse_engine_spec([self._cfg(), self._cfg()],
+                                     layout="flat")
+        with pytest.raises(ValueError, match="single-run"):
+            engine.parse_engine_spec(self._cfg(), layout="flat",
+                                     force_run_axis=True)
+
+    def test_lattice_rejects_sharding(self):
+        with pytest.raises(ValueError, match="single-device"):
+            engine.parse_engine_spec(self._cfg(), layout="flat", n_shards=2)
+
+    def test_lattice_rejects_mixed_delta(self):
+        with pytest.raises(ValueError, match="share one delta"):
+            engine.parse_engine_spec(
+                [self._cfg("none"), self._cfg("full")], layout="flat",
+                force_run_axis=True)
+
+    def test_delta_base_shape_checked(self):
+        spec = flat_lib.make_flat_spec(jnp.zeros(10))
+        with pytest.raises(ValueError, match="delta_base"):
+            flat_lib.make_flat_feddec_round(
+                self._cfg(), spec, lambda p, b: (p, 0.0),
+                lambda t: 1e-3, delta_base=jnp.zeros(7))
+
+    def test_delta_base_without_delta_rejected(self):
+        g = topo.ring_graph(8, 1)
+        cfg = feddec.FedDecConfig(mixing=MixingDistribution(g), h=2, k=2)
+        spec = flat_lib.make_flat_spec(jnp.zeros(10))
+        with pytest.raises(ValueError, match="delta='none'"):
+            flat_lib.make_flat_feddec_round(
+                cfg, spec, lambda p, b: (p, 0.0), lambda t: 1e-3,
+                delta_base=jnp.zeros(10))
+
+
+# ---------------------------------------------------------------------------
+# DeltaStore
+# ---------------------------------------------------------------------------
+
+
+class TestDeltaStore:
+    def test_create_rejects_none(self):
+        with pytest.raises(ValueError, match="non-'none'"):
+            delta_lib.DeltaStore.create(8, np.zeros(4, np.float32), "none")
+
+    def test_payload_leading_dim_checked(self):
+        spec = delta_lib.parse_delta("full")
+        with pytest.raises(ValueError, match="leading dim"):
+            delta_lib.DeltaStore(spec, np.zeros(4, np.float32),
+                                 {"p": np.zeros((3, 4), np.float32),
+                                  "c": np.zeros((5, 4), np.float32)},
+                                 np.full(3, -1))
+
+    @pytest.mark.parametrize("s", ["full", "topk:6", "lowrank:2"])
+    def test_fresh_store_serves_the_base(self, s):
+        base = _rows(7, n=1, d=16)[0]
+        store = delta_lib.DeltaStore.create(10, base, s)
+        got = store.gather(np.array([0, 3, 9]))
+        np.testing.assert_allclose(got, np.tile(base, (3, 1)),
+                                   rtol=1e-6, atol=1e-7)
+        assert store.n_total == 10 and store.d == 16
+
+    def test_full_store_roundtrip_bitwise(self):
+        base = np.concatenate([ADVERSARIAL[:4],
+                               _rows(8, n=1, d=12)[0]]).astype(np.float32)
+        rows = _rows(9, n=5, d=16, scale=1e3)
+        rows[0, :ADVERSARIAL.size] = ADVERSARIAL[:16]
+        store = delta_lib.DeltaStore.create(8, base, "full")
+        ids = np.array([0, 2, 4, 5, 7])
+        store.scatter(ids, rows)
+        np.testing.assert_array_equal(store.gather(ids), rows)
+
+    def test_full_store_matches_jax_codec_bitwise(self):
+        """Host gather and the jax decode must agree bitwise — the store
+        mirrors the codec's exact op order."""
+        base = _rows(10, n=1, d=24)[0]
+        rows = _rows(11, n=4, d=24, scale=50.0)
+        store = delta_lib.DeltaStore.create(4, base, "full")
+        store.scatter(np.arange(4), rows)
+        codec = delta_lib.make_delta_codec("full", jnp.asarray(base))
+        via_jax = np.asarray(codec.decode(
+            codec.encode(None, jnp.asarray(rows)), jnp.float32, 24))
+        np.testing.assert_array_equal(store.gather(np.arange(4)), via_jax)
+
+    def test_topk_store_error_bounded_and_small(self):
+        d, k, n = 64, 8, 32
+        base = _rows(12, n=1, d=d)[0]
+        rows = base[None, :] + _rows(13, n=n, d=d, scale=0.01)
+        store = delta_lib.DeltaStore.create(n, base, f"topk:{k}")
+        store.scatter(np.arange(n), rows)
+        got = store.gather(np.arange(n))
+        dev = np.abs(rows - base[None, :])
+        assert (np.abs(got - rows) <= dev * (1 + 1e-5) + 1e-30).all()
+        dense_bytes = n * d * 4
+        assert sum(a.nbytes for a in store.payload.values()) < dense_bytes
+
+    def test_lowrank_store_roundtrip(self):
+        d, n = 36, 6
+        base = _rows(14, n=1, d=d)[0]
+        rows = base[None, :] + _rows(15, n=n, d=d, scale=0.1)
+        store = delta_lib.DeltaStore.create(n, base, "lowrank:6")
+        store.scatter(np.arange(n), rows)
+        # rank 6 == d1: exact SVD reconstruction up to fp noise
+        np.testing.assert_allclose(store.gather(np.arange(n)), rows,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_nbytes_matches_cost_model(self):
+        for s in ("full", "topk:16", "lowrank:2"):
+            store = delta_lib.DeltaStore.create(
+                100, np.zeros(64, np.float32), s)
+            model = analysis.delta_cost_model(n_total=100, d=64, delta=s)
+            assert store.nbytes == model["delta_store_bytes"]
+
+    def test_ages(self):
+        store = delta_lib.DeltaStore.create(8, np.zeros(4, np.float32),
+                                            "topk:2")
+        store.last_round[2] = 5
+        ages = store.ages(np.array([0, 2]), 7)
+        np.testing.assert_array_equal(ages, [8, 2])
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        base = _rows(16, n=1, d=16)[0]
+        rows = base[None, :] + _rows(17, n=6, d=16, scale=0.05)
+        store = delta_lib.DeltaStore.create(6, base, "topk:4")
+        store.scatter(np.arange(6), rows)
+        store.last_round[:] = 3
+        store.save(str(tmp_path), step=12)
+        back = delta_lib.DeltaStore.restore(str(tmp_path), step=12)
+        assert back.spec == store.spec
+        np.testing.assert_array_equal(back.base, store.base)
+        np.testing.assert_array_equal(back.last_round, store.last_round)
+        np.testing.assert_array_equal(back.gather(np.arange(6)),
+                                      store.gather(np.arange(6)))
+
+    def test_restore_latest(self, tmp_path):
+        store = delta_lib.DeltaStore.create(4, np.zeros(8, np.float32),
+                                            "full")
+        store.save(str(tmp_path), step=1)
+        store.scatter(np.arange(4), np.ones((4, 8), np.float32))
+        store.save(str(tmp_path), step=2)
+        back = delta_lib.DeltaStore.restore(str(tmp_path))
+        np.testing.assert_array_equal(back.gather(np.arange(4)),
+                                      np.ones((4, 8), np.float32))
+
+    def test_restore_empty_dir_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            delta_lib.DeltaStore.restore(str(tmp_path))
+
+
+class TestPopulationIntegration:
+    def test_population_engine_with_delta_store(self):
+        """The cohort engine over a DeltaStore(full) backend matches the
+        dense-store engine bitwise (storage format, not algorithm)."""
+        from repro.core import population as pop
+        n_total, c, d, h = 32, 8, 12, 2
+        graph = topo.ring_graph_csr(n_total, 1)
+        spec = pop.PopulationSpec(n_total, c, max_degree=2, seed=3)
+        fspec = flat_lib.make_flat_spec(jnp.zeros(d))
+        grad_fn = linreg.make_grad_fn(4)
+        lr = lambda t: jnp.float32(1e-3)  # noqa: E731
+        prob = linreg.make_problem(n=c, m_rows=4, d=d, seed=1)
+
+        def batch_fn(r, ids):
+            return jax.vmap(lambda k: linreg.sample_minibatch(prob, k, m=2))(
+                jax.random.split(jax.random.fold_in(jax.random.key(8), r), h))
+
+        row0 = _rows(20, n=1, d=d)[0]
+        outs = []
+        for delta in ("none", "full"):
+            eng = pop.PopulationEngine(spec, fspec, grad_fn, lr, graph, h=h,
+                                       k=2, row_init=row0, delta=delta)
+            eng.run(3, batch_fn, jax.random.key(0))
+            outs.append(eng.store.gather(np.arange(n_total)))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_population_engine_rejects_mismatched_store(self):
+        from repro.core import population as pop
+        n_total, c, d = 16, 4, 8
+        graph = topo.ring_graph_csr(n_total, 1)
+        spec = pop.PopulationSpec(n_total, c, max_degree=2)
+        fspec = flat_lib.make_flat_spec(jnp.zeros(d))
+        dense = pop.PopulationStore.create(n_total, np.zeros(d, np.float32))
+        with pytest.raises(ValueError, match="DeltaStore"):
+            pop.PopulationEngine(spec, fspec, linreg.make_grad_fn(4),
+                                 lambda t: 1e-3, graph, h=2, k=2,
+                                 store=dense, delta="topk:4")
+
+
+def test_delta_spec_replace_revalidates():
+    g = topo.ring_graph(6, 1)
+    cfg = feddec.FedDecConfig(mixing=MixingDistribution(g), delta="full")
+    with pytest.raises(ValueError):
+        dataclasses.replace(cfg, delta="nope")

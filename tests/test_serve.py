@@ -1,4 +1,5 @@
-"""Serving-driver tests: generate() contract + a tiny end-to-end decode."""
+"""Serving-driver tests: generate() contract, compiled-step reuse across
+calls, and the multi-tenant personalized-decode path."""
 
 import numpy as np
 import pytest
@@ -7,7 +8,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.launch.serve import generate
+from repro.core import flat as flat_lib
+from repro.launch import serve
+from repro.launch.serve import generate, generate_personalized
 from repro.models import build_model
 
 
@@ -84,3 +87,86 @@ class TestDecode:
                         max_new_tokens=2, temperature=1.0,
                         key=jax.random.key(9))
         assert seqs.shape == (1, 5)
+
+    def test_compiled_step_reused_across_calls(self, smoke_model):
+        """Repeated generate() calls must hit the per-(model, long_variant)
+        jit cache instead of rebuilding the compiled step each call."""
+        cfg, model, params = smoke_model
+        prompt = _prompt(cfg, b=1, s=3)
+        generate(model, params, prompt, max_new_tokens=1)
+        before = serve._decode_step_fn.cache_info()
+        generate(model, params, prompt, max_new_tokens=1)
+        after = serve._decode_step_fn.cache_info()
+        assert after.hits > before.hits
+        assert after.misses == before.misses
+
+
+class TestPersonalized:
+    @pytest.fixture(scope="class")
+    def flat(self, smoke_model):
+        cfg, model, params = smoke_model
+        spec = flat_lib.make_flat_spec(params)
+        return spec, spec.ravel(params)
+
+    def test_zero_delta_matches_shared_generate(self, smoke_model, flat):
+        """delta_rows=None serves the bare base to every request — must
+        decode exactly what the shared-params path decodes."""
+        cfg, model, params = smoke_model
+        spec, base = flat
+        prompt = _prompt(cfg, b=2, s=3)
+        shared = generate(model, params, prompt, max_new_tokens=3)
+        personalized = generate_personalized(model, spec, base, None,
+                                             prompt, max_new_tokens=3)
+        np.testing.assert_array_equal(np.asarray(personalized),
+                                      np.asarray(shared))
+
+    def test_matches_naive_per_request_loop(self, smoke_model, flat):
+        """One vmapped dispatch per token == B sequential generate calls
+        with per-request full parameter sets, token for token."""
+        cfg, model, params = smoke_model
+        spec, base = flat
+        b = 3
+        deltas = (jax.random.normal(jax.random.key(5), (b, spec.d))
+                  * 0.01).astype(base.dtype)
+        prompt = _prompt(cfg, b=b, s=3)
+        batched = generate_personalized(model, spec, base, deltas, prompt,
+                                        max_new_tokens=3)
+        for i in range(b):
+            p_i = spec.unravel(base + deltas[i])
+            naive = generate(model, p_i, prompt[i:i + 1], max_new_tokens=3)
+            np.testing.assert_array_equal(np.asarray(batched[i:i + 1]),
+                                          np.asarray(naive))
+
+    def test_deltas_actually_personalize(self, smoke_model, flat):
+        cfg, model, params = smoke_model
+        spec, base = flat
+        deltas = (jax.random.normal(jax.random.key(6), (2, spec.d))
+                  * 0.5).astype(base.dtype)
+        prompt = _prompt(cfg, b=2, s=3)
+        with_d = generate_personalized(model, spec, base, deltas, prompt,
+                                       max_new_tokens=4)
+        without = generate_personalized(model, spec, base, None, prompt,
+                                        max_new_tokens=4)
+        assert not np.array_equal(np.asarray(with_d), np.asarray(without))
+
+    def test_base_width_checked(self, smoke_model, flat):
+        cfg, model, params = smoke_model
+        spec, base = flat
+        with pytest.raises(ValueError, match="flat spec"):
+            generate_personalized(model, spec, base[:-1], None,
+                                  _prompt(cfg, b=1, s=2), max_new_tokens=1)
+
+    def test_delta_rows_shape_checked(self, smoke_model, flat):
+        cfg, model, params = smoke_model
+        spec, base = flat
+        bad = jnp.zeros((3, spec.d))       # B mismatch: prompt has B=2
+        with pytest.raises(ValueError, match=r"\(B, D\)"):
+            generate_personalized(model, spec, base, bad,
+                                  _prompt(cfg, b=2, s=2), max_new_tokens=1)
+
+    def test_prompt_contract_shared_with_generate(self, smoke_model, flat):
+        cfg, model, params = smoke_model
+        spec, base = flat
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            generate_personalized(model, spec, base, None,
+                                  _prompt(cfg, b=1, s=2), max_new_tokens=0)
