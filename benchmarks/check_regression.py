@@ -127,6 +127,11 @@ REQUIRED_DELTA_EQUIV = {"n_agents", "d", "h", "rounds", "max_abs_err",
 REQUIRED_DELTA_SERVING = {"arch", "d_flat", "batch", "prompt_len",
                           "new_tokens", "batched_tok_s", "naive_tok_s",
                           "speedup", "matches_naive"}
+REQUIRED_MESH2D = {"impl", "n_agents", "d", "h", "n_agent_shards",
+                   "n_model_shards", "agents_per_device", "us_per_round",
+                   "shard_bytes_measured", "state_bytes_per_device",
+                   "gossip_collective_bytes", "model_collective_bytes",
+                   "server_bytes_per_round", "num_halo_rounds"}
 INT8_HALO_CEILING = 0.30  # acceptance: int8 halo bytes ≤ 0.30× f32 halo
 SWEEP_SMOKE_MARGIN = 1.5   # generous: committed baseline shows 6-17x
 SWEEP_ACCEPT_SPEEDUP = 5.0  # ISSUE acceptance at fig4 shapes (committed)
@@ -228,6 +233,62 @@ def check_sharded_doc(doc: dict, label: str) -> None:
              f"vs dense collective-byte evidence vanished")
     print(f"[guard] {label}: {len(rows)} rows OK, halo <= dense collective "
           f"bytes on {checked} multi-shard configs")
+
+
+def check_mesh2d_doc(doc: dict, label: str) -> None:
+    """2-D mesh evidence: exact 1/(A·M) per-device byte scaling (measured
+    shard bytes == the analytic ``n/A · D/M · 4``, no tolerance) and every
+    cost-model byte column equal to mesh2d_cost_model recomputed at the
+    row's own shape — plus vacuity proofs that the model-sharded cells and
+    the flat-engine equivalence check actually exist in the doc."""
+    rows = doc.get("rows", [])
+    _require(bool(rows), f"{label}: no benchmark rows")
+    for row in rows:
+        missing = REQUIRED_MESH2D - set(row)
+        _require(not missing, f"{label}: row missing {missing}: {row}")
+        _require(row["us_per_round"] > 0, f"{label}: non-positive time {row}")
+        n, d = row["n_agents"], row["d"]
+        a, m = row["n_agent_shards"], row["n_model_shards"]
+        model = analysis.mesh2d_cost_model(
+            n_agents=n, d=d, n_agent_shards=a, n_model_shards=m,
+            num_halo_rounds=row["num_halo_rounds"],
+            param_bytes=4)[row["impl"]]
+        for col in ("state_bytes_per_device", "gossip_collective_bytes",
+                    "model_collective_bytes", "server_bytes_per_round"):
+            _require(row[col] == model[col],
+                     f"{label}: {row['impl']} (A={a}, M={m}) {col} drifted: "
+                     f"row={row[col]} cost-model={model[col]}")
+        # the tentpole's memory law, exact: measured == n/A * D/M * 4
+        _require(row["shard_bytes_measured"] == n // a * (d // m) * 4,
+                 f"{label}: measured shard bytes {row['shard_bytes_measured']}"
+                 f" != n/A * D/M * 4 at (A={a}, M={m})")
+    impls = {r["impl"] for r in rows}
+    _require({"dense", "sparse", "pallas"} <= impls,
+             f"{label}: impl set shrank: {impls}")
+    # vacuity: the model axis must actually be exercised — a grid reduced
+    # to M = 1 cells would pass every formula above and prove nothing
+    model_cells = [r for r in rows if r["n_model_shards"] > 1]
+    _require(bool(model_cells),
+             f"{label}: no M > 1 cells — the model axis vanished")
+    _require(any(r["n_agent_shards"] > 1 for r in model_cells),
+             f"{label}: no genuinely 2-D (A > 1, M > 1) cell")
+    _require(bool(doc["acceptance"]["equivalence_checked_vs_flat"]),
+             f"{label}: flat-engine equivalence check was skipped")
+    _require(bool(doc["acceptance"]["am_way_scaling_exact"]),
+             f"{label}: 1/(A*M) scaling law no longer exact")
+    print(f"[guard] {label}: {len(rows)} rows OK, "
+          f"{len(model_cells)} model-sharded cells, byte columns exact")
+
+
+def check_mesh2d_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
+    """The committed (A, M) grid and impl coverage must survive in the
+    fresh run (a fresh run may add cells, never silently drop them)."""
+    def cells(doc):
+        return {(r["impl"], r["n_agent_shards"], r["n_model_shards"])
+                for r in doc["rows"]}
+    _require(cells(baseline) <= cells(fresh),
+             f"fresh mesh2d run dropped cells: "
+             f"{cells(baseline) - cells(fresh)}")
 
 
 def check_compress_doc(doc: dict, label: str) -> None:
@@ -637,6 +698,10 @@ def main() -> None:
                    help="optional: committed BENCH_delta.json baseline")
     p.add_argument("--fresh-delta", default=None,
                    help="fresh BENCH_delta[.smoke].json to check")
+    p.add_argument("--baseline-mesh2d", default=None,
+                   help="optional: committed BENCH_mesh2d.json baseline")
+    p.add_argument("--fresh-mesh2d", default=None,
+                   help="fresh BENCH_mesh2d[.smoke].json to check")
     args = p.parse_args()
 
     with open(args.baseline_gossip) as f:
@@ -692,6 +757,15 @@ def main() -> None:
                 baseline_delta = json.load(f)
             check_delta_doc(baseline_delta, "baseline BENCH_delta")
             check_delta_baseline_vs_fresh(baseline_delta, fresh_delta)
+    if args.fresh_mesh2d:
+        with open(args.fresh_mesh2d) as f:
+            fresh_mesh2d = json.load(f)
+        check_mesh2d_doc(fresh_mesh2d, "fresh BENCH_mesh2d")
+        if args.baseline_mesh2d:
+            with open(args.baseline_mesh2d) as f:
+                baseline_mesh2d = json.load(f)
+            check_mesh2d_doc(baseline_mesh2d, "baseline BENCH_mesh2d")
+            check_mesh2d_baseline_vs_fresh(baseline_mesh2d, fresh_mesh2d)
     print("[guard] all perf-regression checks passed")
 
 

@@ -123,6 +123,13 @@ class ArchConfig:
     # lowering time; enables explicit head-/expert-sharding constraints in
     # MLA and MoE (left None on hosts without the production mesh)
     tp_axis_name: str | None = None
+    # memory-efficient scan-over-query-chunks prefill (models.attention).
+    # The 2-D sharded engine clears it: a lax.scan whose stacked ys cross
+    # the partially-auto shard_map region is rejected by the SPMD
+    # partitioner (same constraint that inverts the fused round's nesting,
+    # core.sharded._lower_sharded_round_2d), so attention falls back to
+    # the dense block there
+    attn_chunked_prefill: bool = True
 
     def __post_init__(self):
         if self.head_dim == 0 and self.attention_kind == "gqa":

@@ -69,7 +69,8 @@ from repro.core import topology as topo
 __all__ = ["GOSSIP_IMPLS", "LAYOUTS", "EngineSpec", "EngineOps",
            "parse_engine_spec", "build_step_body", "make_scan_round",
            "finalize_executor", "resolve_gossip", "check_gossip_impl",
-           "unknown_gossip_impl", "make_engine_step", "make_engine_round",
+           "unknown_gossip_impl", "model_axis_conflict",
+           "make_engine_step", "make_engine_round",
            "make_sharded_sweep_step", "make_sharded_sweep_round",
            "shard_sweep_state", "sweep_state_specs",
            "make_population_round"]
@@ -103,6 +104,16 @@ def check_gossip_impl(impl: str) -> str:
     if impl not in GOSSIP_IMPLS:
         raise unknown_gossip_impl(impl)
     return impl
+
+
+def model_axis_conflict(feature: str) -> ValueError:
+    """THE model-axis incompatibility error — identical from every entry
+    point (parse_engine_spec, the sharded constructors, launch/train.py),
+    so incoherent ``--mesh-model`` combinations fail at validation time
+    with one canonical message instead of deep inside shard_map."""
+    return ValueError(
+        f"model-axis sharding (n_model_shards > 1 / --mesh-model) does "
+        f"not compose with {feature}; use n_model_shards=1")
 
 
 def resolve_gossip(source, layout: str = "flat", *, block_d: int | None = None,
@@ -357,6 +368,14 @@ class EngineSpec:
       n_shards: agent-axis shards (1 = single device).  Lowering with
         n_shards > 1 requires a mesh whose ``axis_name`` axis has this size.
       axis_name: mesh axis (or axes tuple) carrying the agent sharding.
+      n_model_shards: model-axis shards per agent replica (1 = each row
+        whole on its device).  > 1 lowers the 2-D mesh engine: the flat
+        buffer is additionally column-sharded over ``model_axis``, gossip /
+        server collectives stay over ``axis_name`` only, and the model
+        compute runs tensor-sharded over ``model_axis``.  Single-run flat
+        only (tree / sweep / delta combinations raise
+        :func:`model_axis_conflict`).
+      model_axis: mesh axis carrying the model (tensor) sharding.
       t_steps: optional per-run step budgets (sweep freeze masking).
       force_run_axis: keep the run axis even for a single run (the sweep
         engine's own public API lowers R = 1 plans this way so its carry
@@ -376,6 +395,8 @@ class EngineSpec:
     t_steps: tuple | None = None
     force_run_axis: bool = False
     delta: str = "none"
+    n_model_shards: int = 1
+    model_axis: Any = "model"
 
     @property
     def cfg(self):
@@ -393,6 +414,10 @@ class EngineSpec:
     def is_sharded(self) -> bool:
         return self.n_shards > 1
 
+    @property
+    def is_model_sharded(self) -> bool:
+        return self.n_model_shards > 1
+
     def plan(self):
         """The validated SweepPlan of this spec's run lattice."""
         from repro.core import sweep as sweep_lib
@@ -403,14 +428,16 @@ class EngineSpec:
 
 def parse_engine_spec(configs, layout: str = "flat", n_shards: int = 1,
                       axis_name="agents", t_steps=None,
-                      force_run_axis: bool = False) -> EngineSpec:
+                      force_run_axis: bool = False, n_model_shards: int = 1,
+                      model_axis="model") -> EngineSpec:
     """Validate and freeze an EngineSpec.
 
     ``configs`` may be a single FedDecConfig or an iterable of them.  Raises
     ValueError on any invalid combination: unknown layout, a tree-layout
-    sweep/sharding, shards not dividing n_agents, or a lattice the sweep
+    sweep/sharding, shards not dividing n_agents, a lattice the sweep
     plan rejects (mismatched n_agents/K/server/codec, > 1 non-'none' impl,
-    malformed t_steps).
+    malformed t_steps), or a model-sharded spec combined with tree / sweep /
+    delta / topk compression (:func:`model_axis_conflict`).
     """
     if hasattr(configs, "gossip_impl"):  # a single config
         configs = (configs,)
@@ -453,9 +480,28 @@ def parse_engine_spec(configs, layout: str = "flat", n_shards: int = 1,
                 "delta parameterization lowers on the single-device flat "
                 "engine (the sharded halo exchanges dense row blocks); "
                 "use n_shards=1 or delta='none'")
+    if n_model_shards < 1:
+        raise ValueError(f"n_model_shards must be >= 1, got {n_model_shards}")
+    if n_model_shards > 1:
+        if layout == "tree":
+            raise model_axis_conflict(
+                "layout 'tree' (the pytree engine has no flat buffer to "
+                "column-shard)")
+        if len(configs) > 1 or force_run_axis:
+            raise model_axis_conflict(
+                "sweep lattices (--sweep-runs) until the composition lands")
+        if delta != "none":
+            raise model_axis_conflict("delta parameterization (--delta)")
+        c0 = configs[0]
+        if (getattr(c0, "gossip_compress", "none").startswith("topk")
+                and c0.gossip_impl != "none"):
+            raise model_axis_conflict(
+                "topk gossip compression (the payload indices address the "
+                "full D axis)")
     spec = EngineSpec(configs=configs, layout=layout, n_shards=n_shards,
                       axis_name=axis_name, t_steps=t_steps,
-                      force_run_axis=force_run_axis, delta=delta)
+                      force_run_axis=force_run_axis, delta=delta,
+                      n_model_shards=n_model_shards, model_axis=model_axis)
     if spec.has_run_axis or t_steps is not None:
         spec.plan()  # full lattice validation (raises on bad combinations)
     return spec
@@ -473,6 +519,11 @@ def _dispatch(espec: EngineSpec, flat_spec, mesh):
         raise ValueError("flat layouts need a FlatSpec (flat.make_flat_spec)")
     if espec.is_sharded and mesh is None:
         raise ValueError("n_shards > 1 needs a device mesh (mesh=...)")
+    if espec.is_model_sharded and mesh is None:
+        raise ValueError("n_model_shards > 1 needs a 2-D device mesh "
+                         "(launch.mesh.make_fed_mesh)")
+    if espec.is_model_sharded:
+        return "sharded"
     if espec.has_run_axis:
         return "sharded_sweep" if mesh is not None else "sweep"
     return "sharded" if mesh is not None else "flat"
@@ -528,7 +579,9 @@ def make_engine_round(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
         return sharded_lib._lower_sharded_round(
             espec.cfg, flat_spec, grad_fn, lr_fn, mesh,
             axis_name=espec.axis_name, optimizer=optimizer, block_d=block_d,
-            donate=donate, jit=jit, unroll=unroll)
+            donate=donate, jit=jit, unroll=unroll,
+            model_axis=(espec.model_axis if espec.is_model_sharded
+                        else None))
     return make_sharded_sweep_round(
         espec.plan(), flat_spec, grad_fn, lr_fn, mesh,
         axis_name=espec.axis_name, optimizer=optimizer,
@@ -571,7 +624,9 @@ def make_engine_step(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
         return sharded_lib._lower_sharded_step(
             espec.cfg, flat_spec, grad_fn, lr_fn, mesh,
             axis_name=espec.axis_name, optimizer=optimizer, block_d=block_d,
-            donate=donate, jit=jit)
+            donate=donate, jit=jit,
+            model_axis=(espec.model_axis if espec.is_model_sharded
+                        else None))
     return make_sharded_sweep_step(
         espec.plan(), flat_spec, grad_fn, lr_fn, mesh,
         axis_name=espec.axis_name, optimizer=optimizer, block_d=block_d,

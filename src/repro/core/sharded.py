@@ -67,14 +67,20 @@ GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
 LrFn = Callable[[jax.Array], jax.Array]
 
 
-def _shard_map(fn, mesh, in_specs, out_specs):
-    """jax >= 0.5 exposes jax.shard_map; 0.4.x has the experimental one."""
+def _shard_map(fn, mesh, in_specs, out_specs, auto=frozenset()):
+    """jax >= 0.5 exposes jax.shard_map; 0.4.x has the experimental one.
+
+    ``auto`` names mesh axes left to the GSPMD partitioner (the 2-D engine
+    runs manual over 'agents' with ``auto={'model'}`` so each agent
+    replica's compute is tensor-sharded by the compiler while the gossip /
+    server collectives stay hand-written over the agent axis)."""
+    kw = {"auto": frozenset(auto)} if auto else {}
     if hasattr(jax, "shard_map"):
         return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
+                             out_specs=out_specs, check_vma=False, **kw)
     from jax.experimental.shard_map import shard_map as _sm
     return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
+               check_rep=False, **kw)
 
 
 def agent_axis_size(mesh: jax.sharding.Mesh,
@@ -183,13 +189,23 @@ def _halo_wblk(w, lo, src, me, n_local):
 
 
 def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
-                      block_d: int | None = None):
+                      block_d: int | None = None, model_axes=None):
     """gossip_impl → per-shard mix(w, x_blk, me) -> y_blk.
 
     ``w`` is the full replicated (n, n) mixing matrix (weights stay random
     per step — link failures zero entries; the *support* metadata below is
     static), ``x_blk`` the shard's (n_local, D) row block, ``me`` the shard
     index on the agent axis.
+
+    ``model_axes=(mesh, model_axis)`` is set by the 2-D lowering: the
+    caller's region is manual over the agent axis with the model axis left
+    to GSPMD, and gossip commutes with that column sharding (W contracts
+    the agent index, elementwise in D — ALGORITHM.md) so the dense
+    psum_scatter path needs no change at all.  The ppermute halo cannot run
+    under a partially-auto region (the partitioner rejects it), so the halo
+    paths wrap themselves in an inner fully-manual shard_map over the model
+    axis and exchange (n_local, D/M) sub-blocks — the halo bytes shrink by
+    M along with the state.
     """
     impl = cfg.gossip_impl
     n = cfg.n_agents
@@ -214,7 +230,7 @@ def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
         perms, pairs = _halo_setup(cfg, n_shards)
         blk_mix = _blk_mix_for(impl, block_d)
 
-        def mix(w, x_blk, me):
+        def halo(w, x_blk, me):
             lo = me * n_local
             own = jax.lax.dynamic_slice(w, (lo, lo), (n_local, n_local))
             y = blk_mix(own, x_blk)
@@ -223,13 +239,20 @@ def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
                 wblk = _halo_wblk(w, lo, perms[r, me], me, n_local)
                 y = y + blk_mix(wblk, recv)
             return y
-        return mix
+
+        if model_axes is None:
+            return halo
+        mesh, model_ax = model_axes
+        return _shard_map(halo, mesh,
+                          in_specs=(P(None, None), P(None, model_ax), P()),
+                          out_specs=P(None, model_ax))
 
     raise engine.unknown_gossip_impl(impl)
 
 
 def _make_compressed_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
-                                 compressor, block_d: int | None = None):
+                                 compressor, block_d: int | None = None,
+                                 model_axes=None):
     """Compressed-gossip per-shard mixer (repro.core.compress semantics):
 
         mix(w, p_blk, s_blk, payload, me) -> y_blk
@@ -269,7 +292,7 @@ def _make_compressed_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
         perms, pairs = _halo_setup(cfg, n_shards)
         blk_mix = _blk_mix_for(impl, block_d)
 
-        def mix(w, p_blk, s_blk, payload, me):
+        def halo(w, p_blk, s_blk, payload, me):
             lo = me * n_local
             own = jax.lax.dynamic_slice(w, (lo, lo), (n_local, n_local))
             dg = diag_blk(w, me).astype(p_blk.dtype)[:, None]
@@ -284,6 +307,26 @@ def _make_compressed_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
                 wblk = _halo_wblk(w, lo, perms[r, me], me, n_local)
                 y = y + blk_mix(wblk, s_recv)
             return y
+
+        if model_axes is None:
+            return halo
+        mesh, model_ax = model_axes
+
+        def mix(w, p_blk, s_blk, payload, me):
+            # encode ran under GSPMD (per-row scales see the full D axis —
+            # identical numerics to the flat engine); only the halo drops
+            # to the manual 2-D region.  D-sized payload leaves travel as
+            # D/M sub-blocks; per-row scalars (scales) replicate over
+            # 'model' — elementwise decode is exact on the slice.
+            pay_specs = jax.tree.map(
+                lambda a: P(None, model_ax) if a.ndim == 2 else P(None),
+                payload)
+            inner = _shard_map(
+                halo, mesh,
+                in_specs=(P(None, None), P(None, model_ax),
+                          P(None, model_ax), pay_specs, P()),
+                out_specs=P(None, model_ax))
+            return inner(w, p_blk, s_blk, payload, me)
         return mix
 
     raise engine.unknown_gossip_impl(impl)
@@ -370,43 +413,61 @@ def make_sharded_ef_gossip(cfg: FedDecConfig, mesh: jax.sharding.Mesh,
 # ---------------------------------------------------------------------------
 
 
-def _leaf_spec(leaf, axis_name) -> P:
+def _leaf_spec(leaf, axis_name, model_axis=None) -> P:
     """THE sharding rule for flat-engine state leaves (single source of
     truth for executors' shard_map specs and shard_flat_state placement):
-    (n, D) buffers follow the agent sharding, scalars (step, adamw count)
-    replicate.  ``leaf`` may be a live array or a ShapeDtypeStruct."""
-    return P(axis_name) if getattr(leaf, "ndim", 0) == 2 else P()
+    (n, D) buffers follow the agent sharding — and with ``model_axis`` set,
+    the 2-D ``P(agents, model)`` column sharding — scalars (step, adamw
+    count) replicate.  ``leaf`` may be a live array or a ShapeDtypeStruct."""
+    if getattr(leaf, "ndim", 0) != 2:
+        return P()
+    if model_axis is None:
+        return P(axis_name)
+    return P(axis_name, model_axis)
 
 
-def _opt_specs(optimizer, spec: FlatSpec, n_agents: int, axis_name) -> Any:
+def _opt_specs(optimizer, spec: FlatSpec, n_agents: int, axis_name,
+               model_axis=None) -> Any:
     """PartitionSpecs for the flat optimizer buffers."""
     if optimizer is None:
         return ()
     struct = jax.eval_shape(
         optimizer.init, jax.ShapeDtypeStruct((n_agents, spec.d), spec.dtype))
-    return jax.tree.map(lambda s: _leaf_spec(s, axis_name), struct)
+    return jax.tree.map(lambda s: _leaf_spec(s, axis_name, model_axis),
+                        struct)
 
 
 def flat_state_specs(optimizer, spec: FlatSpec, n_agents: int,
                      axis_name: str | tuple[str, ...] = "agents",
-                     compress: str = "none") -> FlatFedState:
-    """FlatFedState pytree of PartitionSpecs for the sharded engine."""
+                     compress: str = "none",
+                     model_axis: str | None = None) -> FlatFedState:
+    """FlatFedState pytree of PartitionSpecs for the sharded engine.
+
+    With ``model_axis`` set, every (n, D) leaf is column-sharded over it
+    too — the 2-D placement whose per-device bytes are ``n/A · D/M · 4``.
+    """
+    buf = _leaf_spec(jax.ShapeDtypeStruct((n_agents, spec.d), spec.dtype),
+                     axis_name, model_axis)
     return FlatFedState(
-        flat=P(axis_name), step=P(),
-        opt_state=_opt_specs(optimizer, spec, n_agents, axis_name),
-        residual=() if compress == "none" else P(axis_name))
+        flat=buf, step=P(),
+        opt_state=_opt_specs(optimizer, spec, n_agents, axis_name,
+                             model_axis),
+        residual=() if compress == "none" else buf)
 
 
 def shard_flat_state(state: FlatFedState, mesh: jax.sharding.Mesh,
-                     axis_name: str | tuple[str, ...] = "agents"
-                     ) -> FlatFedState:
-    """Place a FlatFedState on the mesh with the agent dim block-sharded."""
+                     axis_name: str | tuple[str, ...] = "agents",
+                     model_axis: str | None = None) -> FlatFedState:
+    """Place a FlatFedState on the mesh with the agent dim block-sharded
+    (and, with ``model_axis``, the D dim column-sharded)."""
     specs = FlatFedState(
-        flat=P(axis_name), step=P(),
-        opt_state=jax.tree.map(lambda l: _leaf_spec(l, axis_name),
-                               state.opt_state),
-        residual=jax.tree.map(lambda l: _leaf_spec(l, axis_name),
-                              state.residual))
+        flat=_leaf_spec(state.flat, axis_name, model_axis), step=P(),
+        opt_state=jax.tree.map(
+            lambda l: _leaf_spec(l, axis_name, model_axis),
+            state.opt_state),
+        residual=jax.tree.map(
+            lambda l: _leaf_spec(l, axis_name, model_axis),
+            state.residual))
     shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                              is_leaf=lambda x: isinstance(x, P))
     return jax.device_put(state, shardings)
@@ -444,22 +505,34 @@ def _encode_shard_block(compressor, key_c, n_agents: int, n_local: int,
 
 def _shard_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                lr_fn: LrFn, axis_name, n_shards: int, optimizer,
-               block_d: int | None) -> engine.EngineOps:
+               block_d: int | None, me_fn=None,
+               model_axes=None) -> engine.EngineOps:
     """The sharded engine's vtable for the shared Algorithm-1 body.
 
     The carry is the per-shard tuple ``(x_blk, res_blk, opt_blk, t)``;
     replicated scalars stay bit-identical to repro.core.flat's step so
     trajectories match.
+
+    ``me_fn`` supplies the shard index on the agent axis; the default is
+    ``lax.axis_index``, but the 2-D lowering's partially-auto region cannot
+    lower that (the partitioner has no device id under GSPMD) and injects
+    the index from a sharded iota input instead.  ``model_axes`` is
+    forwarded to the gossip mixers (see :func:`_make_shard_mixer`).
     """
     n_agents = cfg.n_agents
     n_local = n_agents // n_shards
+    if me_fn is None:
+        def me_fn():
+            return jax.lax.axis_index(axis_name)
     compressor = compress_lib.parse_compress(cfg.gossip_compress) \
         if cfg.gossip_impl != "none" else None
     if compressor is None:
-        mixer = _make_shard_mixer(cfg, axis_name, n_shards, block_d=block_d)
+        mixer = _make_shard_mixer(cfg, axis_name, n_shards, block_d=block_d,
+                                  model_axes=model_axes)
     else:
         cmixer = _make_compressed_shard_mixer(cfg, axis_name, n_shards,
-                                              compressor, block_d=block_d)
+                                              compressor, block_d=block_d,
+                                              model_axes=model_axes)
 
     def shard_server_round(key, x_blk, me):
         # lines 8–10 as psum + broadcast: every shard draws the same S_t
@@ -478,7 +551,7 @@ def _shard_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
         # is derived replicated and row-sliced so agent i's key matches the
         # single-device engine exactly
         x_blk, _, opt_blk, _ = state
-        me = jax.lax.axis_index(axis_name)
+        me = me_fn()
         params = spec.unflatten(x_blk)
         agent_keys = _slice_agent_keys(
             jax.random.split(key_grad, n_agents), me * n_local, n_local)
@@ -490,11 +563,11 @@ def _shard_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
         return losses, x_half, new_opt
 
     def gossip(w, x_half):
-        return mixer(w, x_half, jax.lax.axis_index(axis_name))
+        return mixer(w, x_half, me_fn())
 
     def ef_gossip(w, x_half, res_blk, key_c):
         # the halo moves the encoded payload
-        me = jax.lax.axis_index(axis_name)
+        me = me_fn()
         payload, s_blk, new_res = _encode_shard_block(
             compressor, key_c, n_agents, n_local, me, x_half, res_blk)
         return cmixer(w, x_half, s_blk, payload, me), new_res
@@ -502,7 +575,7 @@ def _shard_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
     def server(key_server, x_next, t):
         if not cfg.server_enabled:
             return x_next
-        me = jax.lax.axis_index(axis_name)
+        me = me_fn()
         return jax.lax.cond(
             (t + 1) % cfg.h == 0,
             lambda x: shard_server_round(key_server, x, me),
@@ -534,12 +607,13 @@ def _shard_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
 
 def _build_per_shard_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                           lr_fn: LrFn, axis_name, n_shards: int,
-                          optimizer, block_d: int | None):
+                          optimizer, block_d: int | None, me_fn=None,
+                          model_axes=None):
     """step(x_blk, res_blk, opt_blk, t, batch_blk, key) over the shared
     body (t advances in the carry; callers thread it)."""
     body = engine.build_step_body(
         _shard_ops(cfg, spec, grad_fn, lr_fn, axis_name, n_shards,
-                   optimizer, block_d))
+                   optimizer, block_d, me_fn=me_fn, model_axes=model_axes))
 
     def step(x_blk, res_blk, opt_blk, t, batch_blk, key):
         (z, new_res, new_opt, _), metrics = body(
@@ -566,14 +640,151 @@ def _validate(cfg, mesh, axis_name):
     return n_shards
 
 
+# ---------------------------------------------------------------------------
+# The 2-D ('agents', 'model') lowering
+# ---------------------------------------------------------------------------
+
+
+def _validate_model_axis(cfg, spec, mesh, model_axis):
+    if model_axis not in mesh.shape:
+        raise ValueError(
+            f"mesh has no model axis {model_axis!r}: {dict(mesh.shape)} "
+            f"(build one with launch.mesh.make_fed_mesh)")
+    m = mesh.shape[model_axis]
+    if spec.d % m:
+        raise ValueError(
+            f"flat dim D={spec.d} must be divisible by the model axis "
+            f"size {m} (column-sharded D/M sub-blocks)")
+    if m > 1 and cfg.gossip_impl != "none" \
+            and cfg.gossip_compress.startswith("topk"):
+        raise engine.model_axis_conflict(
+            "topk gossip compression (the payload indices address the "
+            "full D axis)")
+    return m
+
+
+def _pin2d(mesh, ax, model_ax, tree):
+    """Constrain every (n, D)-shaped leaf to the 2-D P(agents, model)
+    placement — GSPMD would otherwise be free to keep the model dim
+    replicated, which is exactly the memory blow-up this engine removes."""
+    return jax.tree.map(
+        lambda l: jax.lax.with_sharding_constraint(
+            l, NamedSharding(mesh, P(ax, model_ax)))
+        if getattr(l, "ndim", 0) == 2 else l, tree)
+
+
+def _smap_step_2d(cfg, spec, grad_fn, lr_fn, mesh, ax, n_shards, model_ax,
+                  optimizer, block_d):
+    """The per-step executor of the 2-D engine: one shard_map, manual over
+    the agent axis, ``auto={model_ax}``.
+
+    Inside the region every array keeps its logical per-shard shape
+    ((n_local, D) blocks) while GSPMD tensor-shards the D dim over
+    ``model_ax`` — so the gossip / server collectives stay the hand-written
+    agent-axis ops of the 1-D engine and the per-replica model compute
+    (grad, optimizer, mixing contractions) partitions over 'model' without
+    any engine code knowing about it.  Two jaxlib constraints shape the
+    region: ``lax.axis_index`` cannot lower under GSPMD, so the shard index
+    rides in as a sharded iota input (``ids``, one int per agent shard, the
+    local slice is ``ids[0]``); and ``ppermute`` cannot either, so the halo
+    mixers drop into an inner fully-manual shard_map over 'model'
+    (:func:`_make_shard_mixer`).
+    """
+    me_cell = []
+    per_shard_body = _build_per_shard_step(
+        cfg, spec, grad_fn, lr_fn, ax, n_shards, optimizer, block_d,
+        me_fn=lambda: me_cell[-1], model_axes=(mesh, model_ax))
+
+    def per_shard(ids, x_blk, res_blk, opt_blk, t, batch_blk, key_data):
+        # the PRNG key crosses the partially-auto boundary as raw u32 data:
+        # the partitioner cannot tile-assign the extended key dtype there
+        me_cell.append(ids[0])
+        try:
+            return per_shard_body(x_blk, res_blk, opt_blk, t, batch_blk,
+                                  jax.random.wrap_key_data(key_data))
+        finally:
+            me_cell.pop()
+
+    opt_specs = _opt_specs(optimizer, spec, cfg.n_agents, ax)
+    res_specs = () if cfg.gossip_compress == "none" \
+        or cfg.gossip_impl == "none" else P(ax)
+    metric_specs = {"loss": P(), "eta": P()}
+    smapped = _shard_map(
+        per_shard, mesh,
+        in_specs=(P(ax), P(ax), res_specs, opt_specs, P(), P(ax), P()),
+        out_specs=(P(ax), res_specs, opt_specs, metric_specs),
+        auto=frozenset({model_ax}))
+
+    def call(state: FlatFedState, batch, key):
+        ids = jax.lax.with_sharding_constraint(
+            jnp.arange(n_shards, dtype=jnp.int32),
+            NamedSharding(mesh, P(ax)))
+        flat, res, opt, metrics = smapped(ids, state.flat, state.residual,
+                                          state.opt_state, state.step,
+                                          batch, jax.random.key_data(key))
+        flat = _pin2d(mesh, ax, model_ax, flat)
+        res = _pin2d(mesh, ax, model_ax, res)
+        opt = _pin2d(mesh, ax, model_ax, opt)
+        return flat, res, opt, metrics
+
+    return call
+
+
+def _lower_sharded_step_2d(cfg, spec, grad_fn, lr_fn, mesh, ax, n_shards,
+                           model_ax, optimizer, block_d, donate, jit):
+    call = _smap_step_2d(cfg, spec, grad_fn, lr_fn, mesh, ax, n_shards,
+                         model_ax, optimizer, block_d)
+
+    def step(state: FlatFedState, batch: Any, key: jax.Array):
+        flat, res, opt, metrics = call(state, batch, key)
+        return FlatFedState(flat=flat, step=state.step + 1,
+                            opt_state=opt, residual=res), metrics
+
+    return engine.finalize_executor(step, donate=donate, jit=jit)
+
+
+def _lower_sharded_round_2d(cfg, spec, grad_fn, lr_fn, mesh, ax, n_shards,
+                            model_ax, optimizer, block_d, donate, jit,
+                            unroll):
+    # The fused round inverts the 1-D nesting: lax.scan over the
+    # shard_mapped step at the jit level, not a scan inside shard_map —
+    # a scan whose ys cross a partially-auto region is rejected by the
+    # partitioner.  Per-step metrics leave the region replicated and the
+    # outer scan stacks them to (H,), matching the 1-D round's contract.
+    call = _smap_step_2d(cfg, spec, grad_fn, lr_fn, mesh, ax, n_shards,
+                         model_ax, optimizer, block_d)
+
+    def round_fn(state: FlatFedState, batches: Any, key: jax.Array):
+        def body(carry, batch):
+            st = FlatFedState(flat=carry[0], step=carry[3],
+                              opt_state=carry[2], residual=carry[1])
+            flat, res, opt, metrics = call(st, batch, key)
+            return (flat, res, opt, carry[3] + 1), metrics
+
+        (flat, res, opt, t), metrics = jax.lax.scan(
+            body, (state.flat, state.residual, state.opt_state, state.step),
+            batches, unroll=unroll)
+        return FlatFedState(flat=flat, step=t, opt_state=opt,
+                            residual=res), metrics
+
+    return engine.finalize_executor(round_fn, donate=donate, jit=jit)
+
+
 def _lower_sharded_step(cfg: FedDecConfig, spec: FlatSpec,
                         grad_fn: GradFn, lr_fn: LrFn,
                         mesh: jax.sharding.Mesh, *,
                         axis_name: str | tuple[str, ...] = "agents",
                         optimizer=None, block_d: int | None = None,
-                        donate: bool = True, jit: bool = True):
+                        donate: bool = True, jit: bool = True,
+                        model_axis: str | None = None):
     ax = _resolve_axis(mesh, axis_name)
     n_shards = _validate(cfg, mesh, ax)
+    if model_axis is not None:
+        m = _validate_model_axis(cfg, spec, mesh, model_axis)
+        if m > 1:
+            return _lower_sharded_step_2d(
+                cfg, spec, grad_fn, lr_fn, mesh, ax, n_shards, model_axis,
+                optimizer, block_d, donate, jit)
     per_shard = _build_per_shard_step(cfg, spec, grad_fn, lr_fn, ax,
                                       n_shards, optimizer, block_d)
     opt_specs = _opt_specs(optimizer, spec, cfg.n_agents, ax)
@@ -600,16 +811,26 @@ def make_sharded_feddec_step(cfg: FedDecConfig, spec: FlatSpec,
                              mesh: jax.sharding.Mesh, *,
                              axis_name: str | tuple[str, ...] = "agents",
                              optimizer=None, block_d: int | None = None,
-                             donate: bool = True, jit: bool = True):
+                             donate: bool = True, jit: bool = True,
+                             model_axis: str | None = None):
     """One-iteration sharded executor: step(state, batch, key) carrying a
     FlatFedState whose buffer rows are block-sharded over ``axis_name``.
 
     Same contract as repro.core.flat.make_flat_feddec_step; batch leaves
     keep the leading agent dim and are consumed sharded ``P(axis_name)``.
+    With ``model_axis`` naming a second mesh axis of size M > 1, the D dim
+    is additionally column-sharded over it (state placed via
+    ``shard_flat_state(..., model_axis=...)``) and each agent replica runs
+    tensor-sharded — the 2-D engine.
     """
     espec = engine.parse_engine_spec(
         cfg, layout="flat", n_shards=agent_axis_size(mesh, axis_name),
-        axis_name=axis_name)
+        axis_name=axis_name,
+        n_model_shards=(dict(mesh.shape).get(model_axis, 1)
+                        if model_axis is not None else 1),
+        model_axis=model_axis if model_axis is not None else "model")
+    if model_axis is not None:
+        _validate_model_axis(cfg, spec, mesh, model_axis)
     return engine.make_engine_step(espec, grad_fn, lr_fn, flat_spec=spec,
                                    mesh=mesh, optimizer=optimizer,
                                    block_d=block_d, donate=donate, jit=jit)
@@ -621,9 +842,15 @@ def _lower_sharded_round(cfg: FedDecConfig, spec: FlatSpec,
                          axis_name: str | tuple[str, ...] = "agents",
                          optimizer=None, block_d: int | None = None,
                          donate: bool = True, jit: bool = True,
-                         unroll: int = 1):
+                         unroll: int = 1, model_axis: str | None = None):
     ax = _resolve_axis(mesh, axis_name)
     n_shards = _validate(cfg, mesh, ax)
+    if model_axis is not None:
+        m = _validate_model_axis(cfg, spec, mesh, model_axis)
+        if m > 1:
+            return _lower_sharded_round_2d(
+                cfg, spec, grad_fn, lr_fn, mesh, ax, n_shards, model_axis,
+                optimizer, block_d, donate, jit, unroll)
     per_shard = _build_per_shard_step(cfg, spec, grad_fn, lr_fn, ax,
                                       n_shards, optimizer, block_d)
     opt_specs = _opt_specs(optimizer, spec, cfg.n_agents, ax)
@@ -663,7 +890,8 @@ def make_sharded_feddec_round(cfg: FedDecConfig, spec: FlatSpec,
                               axis_name: str | tuple[str, ...] = "agents",
                               optimizer=None, block_d: int | None = None,
                               donate: bool = True, jit: bool = True,
-                              unroll: int = 1):
+                              unroll: int = 1,
+                              model_axis: str | None = None):
     """The fused sharded executor: H steps per compiled call, one shard_map.
 
     Same contract as repro.core.flat.make_flat_feddec_round — batches carry
@@ -672,10 +900,21 @@ def make_sharded_feddec_round(cfg: FedDecConfig, spec: FlatSpec,
     *inside* a single ``shard_map``, so each device scans its own row block
     and the per-step collectives (psum_scatter / ppermute halo / server psum)
     are the only cross-device traffic in the round.
+
+    With ``model_axis`` naming a second mesh axis of size M > 1 the 2-D
+    engine lowers instead: the scan moves to the jit level around a
+    partially-auto shard_map, the D dim is column-sharded over 'model'
+    (per-device state ``n/A · D/M``), and the trajectory still matches the
+    flat reference to 1e-5.
     """
     espec = engine.parse_engine_spec(
         cfg, layout="flat", n_shards=agent_axis_size(mesh, axis_name),
-        axis_name=axis_name)
+        axis_name=axis_name,
+        n_model_shards=(dict(mesh.shape).get(model_axis, 1)
+                        if model_axis is not None else 1),
+        model_axis=model_axis if model_axis is not None else "model")
+    if model_axis is not None:
+        _validate_model_axis(cfg, spec, mesh, model_axis)
     return engine.make_engine_round(espec, grad_fn, lr_fn, flat_spec=spec,
                                     mesh=mesh, optimizer=optimizer,
                                     block_d=block_d, donate=donate, jit=jit,

@@ -41,9 +41,23 @@ def flash_attention(q, k, v, *, window: int = 0, scale: float | None = None,
         block_k=block_k, interpret=_interpret())
 
 
+def _clamp_block_d(block_d: int, d: int) -> int:
+    """Shrink the D tile to the smallest lane-aligned cover of ``d``.
+
+    The 2-D engine hands the kernels (n_local, D/M) sub-blocks of the flat
+    buffer; padding those up to the full 2048-wide tile would multiply the
+    work by orders of magnitude.  The tile stays a multiple of the 128-lane
+    width (f32 min tile is (8, 128)) and never grows past the requested
+    ``block_d``, so large-D callers are untouched.
+    """
+    return max(min(block_d, -(-d // 128) * 128), 128)
+
+
 def gossip_mix(w: jax.Array, x: jax.Array, *, block_d: int = _gm.BLOCK_D):
-    """y = W @ X for (n, D) stacked flats; pads n→8k and D→block_d."""
+    """y = W @ X for (n, D) stacked flats; pads n→8k and D→block_d (the
+    tile clamped to the lane-aligned cover of D for narrow sub-blocks)."""
     n, d = x.shape
+    block_d = _clamp_block_d(block_d, d)
     n_pad = (-n) % 8
     d_pad = (-d) % block_d
     wp = jnp.pad(w, ((0, n_pad), (0, n_pad)))
@@ -63,6 +77,7 @@ def gossip_mix_batched(w: jax.Array, x: jax.Array, *,
     bit-identical to the single-run kernel's output.
     """
     r, n, d = x.shape
+    block_d = _clamp_block_d(block_d, d)
     n_pad = (-n) % 8
     d_pad = (-d) % block_d
     wp = jnp.pad(w, ((0, 0), (0, n_pad), (0, n_pad)))

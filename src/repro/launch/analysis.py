@@ -24,6 +24,7 @@ from repro.launch import hlo_analysis
 __all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "H2D_BW", "CollectiveStats",
            "parse_collectives", "roofline_terms", "RooflineReport",
            "dtype_bytes", "gossip_cost_model", "sharded_gossip_cost_model",
+           "mesh2d_cost_model",
            "sweep_cost_model", "sharded_sweep_cost_model",
            "population_cost_model", "compress_row_bytes",
            "compressed_halo_cost_model", "COMPRESS_SCHEMES",
@@ -237,6 +238,65 @@ def sharded_gossip_cost_model(*, n_agents: int, d: int, n_shards: int,
         "pallas": entry(halo_bytes, halo_flops, halo_coll,
                         {"num_halo_rounds": num_halo_rounds}),
         "none": entry(stream_blk, 0.0, 0.0),
+    }
+
+
+def mesh2d_cost_model(*, n_agents: int, d: int, n_agent_shards: int,
+                      n_model_shards: int, num_halo_rounds: int = 0,
+                      param_bytes: int = 4,
+                      dispatch_us: float = 5.0) -> dict[str, dict]:
+    """Analytic per-step cost of the 2-D ('agents', 'model') engine.
+
+    The flat (n, D) buffer lives on an A×M mesh (``make_fed_mesh``): each
+    device owns n/A agent rows × D/M columns, so
+
+      * ``state_bytes_per_device = n/A · D/M · param_bytes`` — exact, the
+        A·M-way memory scaling the 2-D mesh buys (BENCH_mesh2d.json
+        measures it from ``addressable_shards``);
+      * agent-axis gossip bytes are the 1-D engine's formulas evaluated on
+        the D/M column slice each device owns — dense psum_scatter moves
+        ``(A−1)/A · n · D/M · b``, the ppermute halo
+        ``rounds · n/A · D/M · b`` (collectives over 'agents' only — the
+        HLO assertion in launch.hlo_analysis);
+      * ``model_collective_bytes = 2·(M−1)/M · n/A · b`` — the one
+        unavoidable model-axis collective per step: the per-agent losses
+        are reductions over the column-sharded D axis, so their (n_local,)
+        vector all-reduces over 'model' (ring all-reduce ≈ 2·(M−1)/M of
+        the payload).  Model-parallel matmul collectives inside grad_fn
+        are arch-specific and excluded — this column prices the *engine's*
+        floor;
+      * ``server_bytes_per_round = 2·(A−1)/A · D/M · b`` — the (D,) server
+        psum over 'agents' also operates on the D/M slice, every H steps.
+
+    Returns {impl: {state_bytes_per_device, gossip_collective_bytes,
+    model_collective_bytes, server_bytes_per_round, pred_us}} with the
+    same TPU-constant roofline as :func:`sharded_gossip_cost_model`.
+    """
+    n, dd, b = n_agents, float(d), param_bytes
+    a, m = n_agent_shards, n_model_shards
+    n_local = n // a
+    d_local = dd / m
+    state = n_local * d_local * b
+    model_coll = 2.0 * (m - 1) / m * n_local * b if m > 1 else 0.0
+    server = 2.0 * (a - 1) / a * d_local * b if a > 1 else 0.0
+
+    def entry(gossip_coll):
+        coll = gossip_coll + model_coll
+        pred = 2.0 * state / HBM_BW * 1e6 + coll / ICI_BW * 1e6 \
+            + dispatch_us
+        return {"state_bytes_per_device": state,
+                "gossip_collective_bytes": gossip_coll,
+                "model_collective_bytes": model_coll,
+                "server_bytes_per_round": server,
+                "pred_us": pred}
+
+    dense_coll = (a - 1) / a * n * d_local * b if a > 1 else 0.0
+    halo_coll = num_halo_rounds * n_local * d_local * b if a > 1 else 0.0
+    return {
+        "dense": entry(dense_coll),
+        "sparse": entry(halo_coll),
+        "pallas": entry(halo_coll),
+        "none": entry(0.0),
     }
 
 

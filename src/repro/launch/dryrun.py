@@ -50,7 +50,8 @@ def _model_flops(cfg, shape) -> float:
 
 
 def _gossip_model(cfg, axes, state_layout: str,
-                  mesh_agents: int | None = None) -> dict:
+                  mesh_agents: int | None = None,
+                  mesh_model: int | None = None) -> dict:
     """Analytic per-impl gossip cost for this (arch × mesh) — the flat-path
     extension of the roofline: predicted per-step mix time for the tree
     leaf-wise dense path vs the flat dense/pallas/sparse whole-buffer ops,
@@ -60,7 +61,10 @@ def _gossip_model(cfg, axes, state_layout: str,
     ``mesh_agents=N`` adds the agent-sharded engine's model (per-device
     bytes + collective bytes on the graph's cut edges — the psum_scatter
     vs ppermute-halo comparison of repro.core.sharded) and the compressed
-    halo collective bytes per scheme."""
+    halo collective bytes per scheme.  ``mesh_model=M`` with
+    ``mesh_agents=A`` additionally records the 2-D (A, M) mesh byte model
+    (analysis.mesh2d_cost_model): n/A · D/M state per device, agent-axis
+    gossip on D/M-wide slices, model-axis matmul/loss collectives."""
     from repro.core import sharded as sharded_lib
     from repro.launch.steps import adapt_for_mesh, build_fed_setup
     from repro.models import build_model
@@ -97,6 +101,20 @@ def _gossip_model(cfg, axes, state_layout: str,
                     n_agents=n_agents, d=d, n_shards=mesh_agents,
                     num_halo_rounds=cut["num_halo_rounds"],
                     param_bytes=pbytes)}
+            if mesh_model and mesh_model > 1:
+                if d % mesh_model:
+                    rec["mesh2d"] = {"skipped": f"mesh_model={mesh_model} "
+                                     f"does not divide d={d}"}
+                else:
+                    rec["mesh2d"] = {
+                        "n_agent_shards": mesh_agents,
+                        "n_model_shards": mesh_model,
+                        "impls": analysis.mesh2d_cost_model(
+                            n_agents=n_agents, d=d,
+                            n_agent_shards=mesh_agents,
+                            n_model_shards=mesh_model,
+                            num_halo_rounds=cut["num_halo_rounds"],
+                            param_bytes=pbytes)}
     return rec
 
 
@@ -105,6 +123,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             fused_steps: int | None = None,
             state_layout: str = "tree",
             mesh_agents: int | None = None,
+            mesh_model: int | None = None,
             gossip_compress: str = "none",
             sweep_runs: int | None = None,
             sweep_axis: str = "seed",
@@ -122,6 +141,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         tag += f"__fused{fused_steps}"
     if state_layout in ("flat", "sharded") and shape.kind == "train":
         tag += f"__{state_layout}"
+        if state_layout == "sharded" and mesh_model and mesh_model > 1:
+            tag += f"__m{mesh_model}"
     if sweep_runs and shape.kind == "train":
         tag += f"__sweep{sweep_runs}-{sweep_axis}"
     if n_total and shape.kind == "train":
@@ -147,6 +168,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         low = build_lowerable(cfg, shape, axes, fed=fed,
                               fused_steps=fused_steps,
                               state_layout=state_layout, mesh=mesh,
+                              mesh_model=mesh_model,
                               sweep_runs=sweep_runs
                               if shape.kind == "train" else None,
                               sweep_axis=sweep_axis)
@@ -195,7 +217,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         })
         if shape.kind == "train":
             rec["gossip_cost_model"] = _gossip_model(cfg, axes, state_layout,
-                                                     mesh_agents)
+                                                     mesh_agents, mesh_model)
             if sweep_runs:
                 gm = rec["gossip_cost_model"]
                 rec["sweep_cost_model"] = analysis.sweep_cost_model(
@@ -272,6 +294,16 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                     f" ({v['payload_ratio_vs_f32']:.2f}x)"
                     for k, v in sh["compress"].items())
                 print(f"       compressed halo/device: {comp}")
+            m2d = rec["gossip_cost_model"].get("mesh2d")
+            if m2d and "impls" in m2d:
+                dense = m2d["impls"]["dense"]
+                print(f"       2-D mesh A={m2d['n_agent_shards']} x "
+                      f"M={m2d['n_model_shards']}: "
+                      f"{dense['state_bytes_per_device'] / 1e6:.2f} MB/device "
+                      f"(A·M-way scaling), agent-axis gossip "
+                      f"{dense['gossip_collective_bytes'] / 1e6:.2f} MB, "
+                      f"model-axis coll "
+                      f"{dense['model_collective_bytes'] / 1e6:.2f} MB")
     except Exception as e:  # noqa: BLE001 — record and continue the sweep
         rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
                     "traceback": traceback.format_exc()})
@@ -308,6 +340,12 @@ def main() -> None:
                         "(per-device + cut-edge collective bytes for the "
                         "flat buffer block-sharded over N devices; "
                         "repro.core.sharded) to train-shape records")
+    p.add_argument("--mesh-model", type=int, default=None, metavar="M",
+                   help="with --mesh-agents A, record the 2-D (A, M) mesh "
+                        "byte model (analysis.mesh2d_cost_model): each "
+                        "agent replica tensor-sharded over M model-axis "
+                        "devices, gossip collectives on D/M-wide slices "
+                        "over the agent axis only")
     p.add_argument("--gossip-compress", default="none", metavar="SPEC",
                    help="compile train steps with the compressed-gossip "
                         "subsystem (repro.core.compress: none | identity | "
@@ -359,6 +397,7 @@ def main() -> None:
                               fused_steps=args.fused or None,
                               state_layout=args.state_layout,
                               mesh_agents=args.mesh_agents,
+                              mesh_model=args.mesh_model,
                               gossip_compress=args.gossip_compress,
                               sweep_runs=args.sweep_runs,
                               sweep_axis=args.sweep_axis,

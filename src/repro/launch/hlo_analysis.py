@@ -33,7 +33,8 @@ from typing import Iterable
 
 import numpy as np
 
-__all__ = ["HloCosts", "analyze_hlo"]
+__all__ = ["HloCosts", "analyze_hlo", "CollectiveAxes", "collective_axes",
+           "axis_separation"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
@@ -175,6 +176,16 @@ def _operand_bytes(op: _Op, comp: _Computation) -> int:
 
 _META_RE = re.compile(r'op_name="([^"]*)"')
 
+# replica_groups comes in two syntaxes post-SPMD: the literal nested-brace
+# form ``replica_groups={{0,2},{1,3}}`` and the iota ("V2") form
+# ``replica_groups=[G,S]<=[d0,d1]T(p0,p1)`` — arange over [d0,d1,...],
+# transposed by the optional perm, reshaped to (G, S) rows-as-groups.
+_RG_LITERAL_RE = re.compile(r"replica_groups=\{((?:\{[\d,\s]*\},?\s*)*)\}")
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_STP_RE = re.compile(r"source_target_pairs=\{((?:\{[\d,\s]*\},?\s*)*)\}")
+_GROUP_RE = re.compile(r"\{([\d,\s]*)\}")
+
 
 @dataclasses.dataclass
 class HloCosts:
@@ -299,3 +310,137 @@ def analyze_hlo(text: str, entry: str | None = None) -> HloCosts:
     costs.top_collectives.sort(key=lambda t: -t[0])
     costs.top_collectives = costs.top_collectives[:64]
     return costs
+
+
+# ---------------------------------------------------------------------------
+# 2-D mesh axis classification
+#
+# The 2-D ('agents', 'model') lowering promises a clean separation: gossip /
+# server collectives communicate only along the agent axis while the
+# tensor-parallel matmul (and loss) collectives communicate only along the
+# model axis.  ``collective_axes`` proves it from the optimized HLO — it
+# parses every collective's device groups and classifies them against the
+# row-major (A, M) device layout ``id = a * M + m`` that
+# ``launch.mesh.make_fed_mesh`` produces:
+#
+#   * a group is **model**-only iff every id in it shares ``id // M``
+#     (same agent replica, varying model shard);
+#   * a group is **agents**-only iff every id shares ``id % M``
+#     (same model shard, varying agent);
+#   * a collective-permute pair (src, tgt) is agents-only iff
+#     ``src % M == tgt % M`` and model-only iff ``src // M == tgt // M``;
+#   * anything else is **mixed** — the failure the tests guard against.
+# ---------------------------------------------------------------------------
+
+
+def _parse_replica_groups(rest: str, n_devices: int) -> list | None:
+    """Device groups of a collective op line, or None if absent."""
+    im = _RG_IOTA_RE.search(rest)
+    if im:
+        shape = [int(x) for x in im.group(1).split(",") if x]
+        dims = [int(x) for x in im.group(2).split(",") if x]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if im.group(3):
+            arr = np.transpose(arr,
+                               [int(x) for x in im.group(3).split(",") if x])
+        return [[int(i) for i in row] for row in arr.reshape(shape)]
+    lm = _RG_LITERAL_RE.search(rest)
+    if lm:
+        groups = [[int(x) for x in g.split(",") if x.strip()]
+                  for g in _GROUP_RE.findall(lm.group(1))]
+        # ``replica_groups={}`` means one group of every device
+        return groups if groups else [list(range(n_devices))]
+    return None
+
+
+def _axis_of_groups(groups: list, m: int) -> str:
+    axes = set()
+    for g in groups:
+        if len(g) <= 1:
+            continue
+        if all(i // m == g[0] // m for i in g):
+            axes.add("model")
+        elif all(i % m == g[0] % m for i in g):
+            axes.add("agents")
+        else:
+            axes.add("mixed")
+    if not axes:
+        return "single"
+    return axes.pop() if len(axes) == 1 else "mixed"
+
+
+def _axis_of_pairs(pairs: list, m: int) -> str:
+    axes = set()
+    for s, t in pairs:
+        if s == t:
+            continue
+        if s // m == t // m:
+            axes.add("model")
+        elif s % m == t % m:
+            axes.add("agents")
+        else:
+            axes.add("mixed")
+    if not axes:
+        return "single"
+    return axes.pop() if len(axes) == 1 else "mixed"
+
+
+@dataclasses.dataclass
+class CollectiveAxes:
+    """One collective op with its parsed groups and mesh-axis verdict."""
+    kind: str                 # all-reduce / reduce-scatter / ...
+    axis: str                 # 'agents' | 'model' | 'mixed' | 'single' | 'unknown'
+    groups: list | None       # replica groups (None for collective-permute)
+    pairs: list | None        # (src, tgt) pairs (collective-permute only)
+    op_name: str              # metadata origin, for debugging
+
+
+def collective_axes(text: str, n_agent_shards: int,
+                    n_model_shards: int) -> list[CollectiveAxes]:
+    """Classify every collective in ``text`` against the (A, M) mesh.
+
+    Scans all computations (while bodies included), so collectives inside
+    the fused-round scan are covered.  ``-done`` halves of async pairs carry
+    no groups and are skipped; ``-start`` halves classify normally.
+    """
+    a, m = int(n_agent_shards), int(n_model_shards)
+    ndev = a * m
+    out: list[CollectiveAxes] = []
+    for comp in _parse_computations(text).values():
+        for op in comp.ops:
+            kind = op.kind.removesuffix("-start")
+            if kind not in _COLL_KINDS:
+                continue
+            om = _META_RE.search(op.rest)
+            origin = om.group(1) if om else ""
+            if kind == "collective-permute":
+                sm = _STP_RE.search(op.rest)
+                if not sm:
+                    out.append(CollectiveAxes(kind, "unknown", None, None,
+                                              origin))
+                    continue
+                pairs = [tuple(int(x) for x in g.split(",") if x.strip())
+                         for g in _GROUP_RE.findall(sm.group(1))]
+                out.append(CollectiveAxes(kind, _axis_of_pairs(pairs, m),
+                                          None, pairs, origin))
+            else:
+                groups = _parse_replica_groups(op.rest, ndev)
+                axis = (_axis_of_groups(groups, m)
+                        if groups is not None else "unknown")
+                out.append(CollectiveAxes(kind, axis, groups, None, origin))
+    return out
+
+
+def axis_separation(text: str, n_agent_shards: int,
+                    n_model_shards: int) -> dict[str, list[str]]:
+    """Axis -> sorted collective kinds found on it.
+
+    The tentpole assertion reads: ``'mixed' not in sep`` and the gossip
+    kinds (reduce-scatter / collective-permute) appear only under
+    ``sep['agents']`` while the matmul/loss all-reduce appears under
+    ``sep['model']``.
+    """
+    rep: dict[str, set] = {}
+    for c in collective_axes(text, n_agent_shards, n_model_shards):
+        rep.setdefault(c.axis, set()).add(c.kind)
+    return {k: sorted(v) for k, v in rep.items()}

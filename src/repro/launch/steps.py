@@ -212,6 +212,7 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
                           mesh: jax.sharding.Mesh | None = None,
                           fused_steps: int | None = None,
                           state_layout: str = "tree",
+                          mesh_model: int | None = None,
                           sweep_runs: int | None = None,
                           sweep_axis: str = "seed") -> Lowerable:
     """The FedDec training step at production shape.
@@ -253,6 +254,12 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     exchange picked by ``fed.gossip_impl``, and the model runs whole per
     shard (tensor-parallel axis names are cleared — inner TP and the
     shard_map engine are mutually exclusive by design).
+
+    ``mesh_model=M`` (M > 1, sharded layout only) opts into the 2-D
+    lowering: the flat buffer's D dim additionally column-shards over the
+    mesh's model axis (the full axis width — on the production mesh that
+    is all 16 devices of 'model'), gossip and server collectives stay on
+    the agent axes, and per-device state scales as n/A x D/M.
     """
     cfg = adapt_for_mesh(cfg, axes)
     if cfg.fed_agent_layout == "replicated":
@@ -310,12 +317,23 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
         if fed is not None and fed.gossip_impl == "permute":
             raise ValueError("the sharded engine subsumes 'permute': use "
                              "gossip_impl='sparse' (ppermute halo exchange)")
-        # the model runs whole on each shard — no inner TP/batch collectives
-        # and no TP weight gather (its sharding constraints would name mesh
-        # axes that are manual inside the shard_map)
-        cfg = dataclasses.replace(cfg, tp_axis_name=None,
-                                  batch_axis_name=None,
-                                  attn_weight_gather=False)
+        # mesh_model > 1 opts into the 2-D engine: the flat buffer's D dim
+        # column-shards over the mesh's model axis and GSPMD partitions
+        # grad_fn over that auto axis from the in/out specs alone.  Inner
+        # TP / batch constraint names must ALWAYS clear — explicit
+        # with_sharding_constraint inside the partially-manual shard_map
+        # region trips XLA's manual-subgroup propagation, and 'data'
+        # carries the agents (manual) either way.
+        model_ax = (axes.model_axis
+                    if mesh_model and mesh_model > 1 and axes.model_size > 1
+                    else None)
+        cfg = dataclasses.replace(
+            cfg, tp_axis_name=None, batch_axis_name=None,
+            attn_weight_gather=False,
+            # the chunked-prefill scan's stacked ys cannot cross the 2-D
+            # engine's partially-auto region (see ArchConfig field docs)
+            attn_chunked_prefill=cfg.attn_chunked_prefill
+            and model_ax is None)
         model = build_model(cfg)
         grad_fn = _microbatch_grad(model.grad_fn(), microbatches)
         params_struct = jax.eval_shape(model.init, jax.random.key(0))
@@ -326,9 +344,14 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
             params_struct)
         agent_ax = axes.data_axes if len(axes.data_axes) > 1 \
             else axes.data_axes[0]
+        if model_ax is not None and spec.d % axes.model_size:
+            raise ValueError(
+                f"flat dim D={spec.d} must be divisible by the model axis "
+                f"size {axes.model_size} (column-sharded D/M sub-blocks)")
         state_specs = sharded_lib.flat_state_specs(None, spec, n_agents,
                                                    agent_ax,
-                                                   compress=compress)
+                                                   compress=compress,
+                                                   model_axis=model_ax)
 
         def _sharded(maker):
             def make(gossip_fn=None, jit=True, **kw):
@@ -343,7 +366,8 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
                     raise ValueError("optimizer state is not threaded "
                                      "through the sharded lowerable yet")
                 return maker(fcfg, spec, grad_fn, lr_fn, mesh,
-                             axis_name=agent_ax, jit=jit, **kw)
+                             axis_name=agent_ax, model_axis=model_ax,
+                             jit=jit, **kw)
             return make
 
         make_step = _sharded(sharded_lib.make_sharded_feddec_step)
@@ -411,6 +435,10 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
             lambda p: sweep_lib.init_sweep_state(plan, spec, p),
             params_struct)
         if state_layout == "sharded":
+            if model_ax is not None:
+                raise engine_lib.model_axis_conflict(
+                    "sweep lattices (--sweep-runs) until the composition "
+                    "lands")
             # the composed lowering: R runs × s agent shards, the whole
             # lattice scan inside one shard_map
             state_specs = engine_lib.sweep_state_specs(plan, spec,
@@ -532,7 +560,7 @@ def build_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     if shape.kind == "train":
         return build_train_lowerable(cfg, shape, axes, **kw)
     kw.pop("fed", None), kw.pop("mesh", None), kw.pop("fused_steps", None)
-    kw.pop("state_layout", None)
+    kw.pop("state_layout", None), kw.pop("mesh_model", None)
     kw.pop("sweep_runs", None), kw.pop("sweep_axis", None)
     if shape.kind == "prefill":
         return build_prefill_lowerable(cfg, shape, axes)

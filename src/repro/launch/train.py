@@ -14,6 +14,7 @@ Example (host scale):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -33,7 +34,7 @@ from repro.core import sweep as sweep_lib
 from repro.core import topology as topo
 from repro.core.fedavg import FedAvgConfig
 from repro.data.federated_lm import make_federated_lm
-from repro.launch.mesh import make_agent_mesh
+from repro.launch.mesh import make_agent_mesh, make_fed_mesh
 from repro.launch.steps import build_fed_setup, sweep_lattice_configs
 from repro.models import build_model
 from repro.sharding import MeshAxes
@@ -58,6 +59,7 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                optimizer: str = "sgd", fedavg_control: bool = False,
                fused: bool = True, state_layout: str | None = None,
                mesh_agents: int | None = None,
+               mesh_model: int | None = None,
                sweep_runs: int | None = None, sweep_axis: str = "seed",
                ckpt_dir: str | None = None, ckpt_every: int = 0,
                log_every: int = 10, seed: int = 0,
@@ -96,6 +98,13 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     printed.  Implies the flat layout and the fused executor; the returned
     FedState is run 0's.  Checkpointing a lattice is not supported.
 
+    ``mesh_model=M`` (with ``mesh_agents=A``) runs the 2-D engine on a
+    ``make_fed_mesh(A, M)`` ('agents', 'model') mesh: each agent replica's
+    D-dim state is additionally column-sharded over M devices (per-device
+    bytes ``n/A · D/M · 4``) while gossip / server collectives stay on the
+    agent axis.  Incoherent combinations (--delta, tree layout,
+    --sweep-runs) raise the canonical model-axis ValueError up front.
+
     ``sweep_runs=R`` composes with ``mesh_agents=s``: the whole lattice
     lowers as one (R, n_agents/s, D)-per-device program
     (repro.core.engine.make_sharded_sweep_round) — the agent dim of every
@@ -114,6 +123,23 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     if state_layout not in ("tree", "flat"):
         raise ValueError(f"state_layout must be 'tree' or 'flat', "
                          f"got {state_layout!r}")
+    if mesh_model is not None and mesh_model > 1:
+        # the canonical model-axis compatibility lattice — identical
+        # messages to parse_engine_spec's (engine.model_axis_conflict)
+        if mesh_agents is None:
+            raise ValueError("--mesh-model needs --mesh-agents (the model "
+                             "axis extends the agent mesh to 2-D)")
+        if state_layout != "flat":
+            raise engine_lib.model_axis_conflict(
+                "layout 'tree' (the pytree engine has no flat buffer to "
+                "column-shard)")
+        if sweep_runs is not None:
+            raise engine_lib.model_axis_conflict(
+                "sweep lattices (--sweep-runs) until the composition lands")
+        if (getattr(fcfg, "gossip_impl", "none") != "none"
+                and getattr(fcfg, "delta", "none") != "none"):
+            raise engine_lib.model_axis_conflict(
+                "delta parameterization (--delta)")
     if mesh_agents is not None and state_layout != "flat":
         raise ValueError("--mesh-agents shards the flat (n_agents, D) "
                          "buffer; it requires --state-layout flat")
@@ -168,16 +194,25 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                 if n_agents % mesh_agents:
                     raise ValueError(f"--mesh-agents {mesh_agents} must "
                                      f"divide --agents {n_agents}")
-                mesh = make_agent_mesh(mesh_agents)
-                state = sharded_lib.shard_flat_state(state, mesh)
+                model_ax = "model" if mesh_model and mesh_model > 1 \
+                    else None
+                mesh = make_fed_mesh(mesh_agents, mesh_model) \
+                    if model_ax else make_agent_mesh(mesh_agents)
+                state = sharded_lib.shard_flat_state(state, mesh,
+                                                     model_axis=model_ax)
+                # the chunked-prefill scan cannot cross the 2-D engine's
+                # partially-auto region (ArchConfig.attn_chunked_prefill)
+                grad = model.grad_fn() if model_ax is None else build_model(
+                    dataclasses.replace(
+                        cfg, attn_chunked_prefill=False)).grad_fn()
                 if fused:
                     round_fn = sharded_lib.make_sharded_feddec_round(
-                        fcfg, spec, model.grad_fn(), lr_fn, mesh,
-                        optimizer=opt, donate=True)
+                        fcfg, spec, grad, lr_fn, mesh,
+                        optimizer=opt, donate=True, model_axis=model_ax)
                 else:
                     step = sharded_lib.make_sharded_feddec_step(
-                        fcfg, spec, model.grad_fn(), lr_fn, mesh,
-                        optimizer=opt, donate=True)
+                        fcfg, spec, grad, lr_fn, mesh,
+                        optimizer=opt, donate=True, model_axis=model_ax)
             elif fused:
                 round_fn = flat_lib.make_flat_feddec_round(
                     fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
@@ -206,7 +241,10 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
           f"{n_agents} agents, graph={fed.graph}, H={fed.h}, K={fcfg.k}, "
           f"opt={optimizer}, executor={'fused' if fused else 'per-step'}, "
           f"layout={state_layout}"
-          + (f" (sharded over {mesh_agents} devices)" if mesh_agents else "")
+          + (f" (sharded over {mesh_agents} devices)"
+             if mesh_agents and not (mesh_model and mesh_model > 1) else "")
+          + (f" (2-D mesh: {mesh_agents} agents x {mesh_model} model)"
+             if mesh_agents and mesh_model and mesh_model > 1 else "")
           + (f" (sweep lattice R={sweep_runs} axis={sweep_axis})"
              if sweep_runs else "")
           + f", gossip={fcfg.gossip_impl}"
@@ -439,6 +477,13 @@ def main() -> None:
                         "N-device 'agents' mesh axis (repro.core.sharded); "
                         "composes with --gossip-impl and --fused.  On CPU: "
                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    p.add_argument("--mesh-model", type=int, default=None, metavar="M",
+                   help="with --mesh-agents A, extend the mesh to 2-D "
+                        "(launch.mesh.make_fed_mesh(A, M)): each agent "
+                        "replica's D-dim state is column-sharded over M "
+                        "'model'-axis devices (per-device bytes n/A*D/M*4) "
+                        "while gossip/server collectives stay on 'agents'. "
+                        "Does not compose with --delta or --sweep-runs")
     p.add_argument("--sweep-runs", type=int, default=None, metavar="R",
                    help="run R independent FedDec replicas batched into "
                         "one (R, n_agents, D) program (repro.core.sweep); "
@@ -501,6 +546,7 @@ def main() -> None:
                     delta=args.delta)
     if args.n_total is not None:
         for flag, val, default in (("--mesh-agents", args.mesh_agents, None),
+                                   ("--mesh-model", args.mesh_model, None),
                                    ("--sweep-runs", args.sweep_runs, None),
                                    ("--optimizer", args.optimizer, "sgd"),
                                    ("--fedavg", args.fedavg, False),
@@ -524,6 +570,7 @@ def main() -> None:
         seq_len=args.seq, lr=args.lr, optimizer=args.optimizer,
         fedavg_control=args.fedavg, fused=args.fused,
         state_layout=args.state_layout, mesh_agents=args.mesh_agents,
+        mesh_model=args.mesh_model,
         sweep_runs=args.sweep_runs, sweep_axis=args.sweep_axis,
         ckpt_dir=args.ckpt_dir)
     first = np.mean(losses[:5])

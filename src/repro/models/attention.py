@@ -172,6 +172,7 @@ def attention(params: dict, x: jax.Array, positions: jax.Array, *,
               compute_dtype=jnp.bfloat16,
               weight_gather: bool = False,
               batch_axis: str | None = None,
+              chunked_prefill: bool = True,
               impl: str = "xla") -> tuple[jax.Array, dict | None]:
     """Apply GQA attention.
 
@@ -253,8 +254,14 @@ def attention(params: dict, x: jax.Array, positions: jax.Array, *,
             kpos = positions if kv_override is None else \
                 jnp.broadcast_to(jnp.arange(kv_src.shape[1])[None],
                                  (x.shape[0], kv_src.shape[1]))
-            out = _chunked_prefill(q, k, v, positions, kpos, scale=scale,
-                                   window=window, causal=is_causal)
+            if chunked_prefill:
+                out = _chunked_prefill(q, k, v, positions, kpos, scale=scale,
+                                       window=window, causal=is_causal)
+            else:
+                # cfg.attn_chunked_prefill=False: dense one-block scores —
+                # the only prefill the partially-auto 2-D region can lower
+                out = _attend_block(q, k, v, positions, kpos, scale=scale,
+                                    window=window, causal=is_causal)
 
     out = out.astype(compute_dtype)
     y = jnp.einsum("bshd,hdo->bso", out,

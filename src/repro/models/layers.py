@@ -176,10 +176,17 @@ def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
 
 def apply_rope(x: jax.Array, positions: jax.Array,
                theta: float = 10_000.0) -> jax.Array:
-    """Standard RoPE.  x: (..., S, H, hd); positions: (..., S) int."""
-    inv = rope_frequencies(x.shape[-1], theta)
-    angles = positions.astype(jnp.float32)[..., None] * inv  # (..., S, hd//2)
-    return _rotate(x, angles)
+    """Standard RoPE.  x: (..., S, H, hd); positions: (..., S) int.
+
+    Lowered as the degenerate M-RoPE (all three bands carry the sequence
+    position — numerics identical, multiply for multiply): the band-gather
+    keeps the angle tensor replicated over a partially-auto mesh axis,
+    where the plain ``positions[..., None] * inv`` broadcast lets GSPMD
+    tile the head dim and the rotate's concatenate then fails XLA's
+    manual-subgroup check inside the 2-D sharded engine's region.
+    """
+    p3 = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+    return apply_mrope(x, p3, theta)
 
 
 def apply_mrope(x: jax.Array, positions_3d: jax.Array,

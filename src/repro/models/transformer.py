@@ -177,7 +177,8 @@ def apply_block(params: dict, x: jax.Array, positions: jax.Array,
                 mrope_positions=mrope_positions, cache=self_cache,
                 causal=causal, compute_dtype=cdt,
                 weight_gather=cfg.attn_weight_gather,
-                batch_axis=cfg.batch_axis_name, impl=impl)
+                batch_axis=cfg.batch_axis_name,
+                chunked_prefill=cfg.attn_chunked_prefill, impl=impl)
         if c is not None:
             new_cache["self"] = c
         x = x + y
@@ -205,7 +206,8 @@ def apply_block(params: dict, x: jax.Array, positions: jax.Array,
             params["cross_attn"], hc, positions,
             num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim,
             rope_kind="none", kv_override=enc_out, causal=False,
-            compute_dtype=cdt)
+            compute_dtype=cdt,
+            chunked_prefill=cfg.attn_chunked_prefill)
         x = x + y
 
     h2 = layers.rms_norm(params["norm2"], x, cfg.norm_eps)

@@ -329,3 +329,69 @@ def test_sharded_sweep_composition_subprocess():
     int8, under 8 forced host devices."""
     _run_conformance_subprocess(_SHARDED_SWEEP,
                                 "CONFORMANCE_SHARDED_SWEEP_OK")
+
+
+_SHARDED_2D = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from _equiv import (KEY_SEED, N_AGENTS, _as_trajectory,
+                    assert_trajectory_equiv, grad_fn, init_compress, lr_fn,
+                    make_cfg, make_optimizer, stacked_batches)
+from repro.core import flat as flat_lib, sharded
+from repro.data import linreg
+from repro.launch.mesh import make_fed_mesh
+
+# own problem instance: the 2-D engine needs D divisible by M (the shared
+# conformance problem has the paper's d=25)
+prob = linreg.make_problem(n=N_AGENTS, d=24, seed=0, c_base=1.3)
+spec = flat_lib.make_flat_spec(jnp.zeros(prob.d))
+gfn, lfn = grad_fn(prob), lr_fn(prob)
+batches = stacked_batches(prob=prob)
+key = jax.random.key(KEY_SEED)
+
+def run(cfg, opt_name=None, mesh=None):
+    opt = make_optimizer(opt_name)
+    st = flat_lib.init_flat_state(spec, jnp.zeros(prob.d), N_AGENTS,
+                                  optimizer=opt, compress=init_compress(cfg))
+    if mesh is None:
+        rnd = flat_lib.make_flat_feddec_round(cfg, spec, gfn, lfn,
+                                              optimizer=opt, donate=False)
+    else:
+        rnd = sharded.make_sharded_feddec_round(
+            cfg, spec, gfn, lfn, mesh, optimizer=opt, donate=False,
+            model_axis="model")
+        st = sharded.shard_flat_state(st, mesh, model_axis="model")
+    st, m = rnd(st, batches, key)
+    if mesh is not None:
+        a, mm = dict(mesh.shape)["agents"], dict(mesh.shape)["model"]
+        nb = st.flat.addressable_shards[0].data.nbytes
+        assert nb == N_AGENTS // a * (prob.d // mm) * 4, (nb, a, mm)
+    return _as_trajectory(st, m)
+
+cells = [
+    (dict(gossip_impl="dense"), None),
+    (dict(gossip_impl="sparse"), None),
+    (dict(gossip_impl="pallas"), None),
+    (dict(gossip_impl="none"), None),
+    (dict(gossip_impl="sparse", codec="int8", p_fail=0.3), None),
+    (dict(gossip_impl="dense"), "adamw"),
+]
+for kw, opt_name in cells:
+    cfg = make_cfg(**kw)
+    ref = run(cfg, opt_name)
+    for a, m in ((4, 1), (4, 2), (2, 2)):
+        got = run(cfg, opt_name, make_fed_mesh(a, m))
+        assert_trajectory_equiv(
+            got, ref, label=f"2d/{kw}/{opt_name} A={a} M={m}")
+print("CONFORMANCE_2D_OK")
+"""
+
+
+def test_sharded_2d_grid_subprocess():
+    """The 2-D tentpole grid: (A, M) trajectories — each agent replica
+    tensor-sharded over the 'model' axis — match the flat reference at
+    M ∈ {1, 2} to the documented 1e-5 (impls × int8 codec × adamw), with
+    per-device shard bytes exactly n/A · D/M · 4, under 8 forced host
+    devices."""
+    _run_conformance_subprocess(_SHARDED_2D, "CONFORMANCE_2D_OK")

@@ -1,0 +1,187 @@
+"""Model-axis composition lattice: one canonical error everywhere.
+
+``n_model_shards > 1`` (``--mesh-model``) composes with the flat sharded
+engine only; tree layout, sweep lattices, delta parameterization and topk
+gossip compression must all surface ``engine.model_axis_conflict``'s EXACT
+text from every entry point — spec parsing, the sharded round maker, and
+the train-CLI loop — instead of failing deep inside ``shard_map``.  Same
+contract shape as test_gossip_errors: a single resolver owns the wording,
+every shim repeats it verbatim.
+"""
+
+import dataclasses
+import types
+
+import jax
+import pytest
+
+from _equiv import flat_spec, grad_fn, lr_fn, make_cfg, problem
+
+from repro.core import engine, sharded
+
+FEATURES = {
+    "tree": "layout 'tree' (the pytree engine has no flat buffer to "
+            "column-shard)",
+    "sweep": "sweep lattices (--sweep-runs) until the composition lands",
+    "delta": "delta parameterization (--delta)",
+    "topk": "topk gossip compression (the payload indices address the "
+            "full D axis)",
+}
+
+
+def canonical(feature: str) -> str:
+    return str(engine.model_axis_conflict(FEATURES[feature]))
+
+
+def test_canonical_error_names_the_knobs():
+    msg = canonical("tree")
+    assert "--mesh-model" in msg
+    assert "n_model_shards" in msg
+    assert "n_model_shards=1" in msg  # the remedy is part of the contract
+
+
+# ---------------------------------------------------------------------------
+# parse_engine_spec
+# ---------------------------------------------------------------------------
+
+
+def test_parse_rejects_nonpositive_model_shards():
+    with pytest.raises(ValueError, match="n_model_shards must be >= 1"):
+        engine.parse_engine_spec(make_cfg(), n_model_shards=0)
+
+
+def test_parse_tree_layout_uses_canonical_error():
+    with pytest.raises(ValueError) as e:
+        engine.parse_engine_spec(make_cfg(), layout="tree", n_model_shards=2)
+    assert str(e.value) == canonical("tree")
+
+
+def test_parse_sweep_lattice_uses_canonical_error():
+    with pytest.raises(ValueError) as e:
+        engine.parse_engine_spec([make_cfg(), make_cfg(h=8)],
+                                 n_model_shards=2)
+    assert str(e.value) == canonical("sweep")
+    with pytest.raises(ValueError) as e:
+        engine.parse_engine_spec(make_cfg(), force_run_axis=True,
+                                 n_model_shards=2)
+    assert str(e.value) == canonical("sweep")
+
+
+def test_parse_delta_uses_canonical_error():
+    cfg = dataclasses.replace(make_cfg(), delta="full")
+    with pytest.raises(ValueError) as e:
+        engine.parse_engine_spec(cfg, n_model_shards=2)
+    assert str(e.value) == canonical("delta")
+
+
+def test_parse_topk_compress_uses_canonical_error():
+    cfg = make_cfg(codec="topk:0.25")
+    with pytest.raises(ValueError) as e:
+        engine.parse_engine_spec(cfg, n_model_shards=2)
+    assert str(e.value) == canonical("topk")
+
+
+def test_valid_2d_spec_parses():
+    spec = engine.parse_engine_spec(make_cfg(), n_shards=4, n_model_shards=2)
+    assert spec.is_model_sharded
+    assert spec.n_model_shards == 2
+    assert spec.model_axis == "model"
+    # M = 1 keeps the ordinary 1-D spec
+    assert not engine.parse_engine_spec(make_cfg(),
+                                        n_model_shards=1).is_model_sharded
+
+
+def test_model_sharded_dispatch_requires_mesh():
+    prob = problem()
+    spec = engine.parse_engine_spec(make_cfg(), n_model_shards=2)
+    with pytest.raises(ValueError, match="2-D device mesh"):
+        engine.make_engine_round(spec, grad_fn(prob), lr_fn(prob),
+                                 flat_spec=flat_spec(prob))
+
+
+# ---------------------------------------------------------------------------
+# sharded round maker (mesh-level validation, no multi-device needed)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_maker_rejects_topk_with_canonical_error():
+    prob = problem()
+    mesh = jax.make_mesh((1, 1), ("agents", "model"),
+                         devices=jax.devices()[:1])
+    cfg = make_cfg(codec="topk:0.25")
+    # M = 1 on the 2-D mesh is fine — the conflict needs an actual model
+    # axis, which a 1-device session can only probe via parse_engine_spec
+    sharded.make_sharded_feddec_round(cfg, flat_spec(prob), grad_fn(prob),
+                                      lr_fn(prob), mesh, model_axis="model")
+
+
+def test_sharded_maker_rejects_unknown_model_axis():
+    prob = problem()
+    mesh = jax.make_mesh((1,), ("agents",), devices=jax.devices()[:1])
+    with pytest.raises(ValueError, match="no model axis"):
+        sharded.make_sharded_feddec_round(
+            make_cfg(), flat_spec(prob), grad_fn(prob), lr_fn(prob), mesh,
+            model_axis="model")
+
+
+def test_validate_model_axis_rejects_indivisible_d():
+    # the shared problem has the paper's d = 25; M = 2 cannot slice it —
+    # a duck-typed mesh probes the M > 1 branch on the 1-device session
+    fake_mesh = types.SimpleNamespace(shape={"agents": 1, "model": 2})
+    with pytest.raises(ValueError, match="divisible"):
+        sharded._validate_model_axis(make_cfg(), flat_spec(problem()),
+                                     fake_mesh, "model")
+
+
+def test_validate_model_axis_topk_uses_canonical_error():
+    import jax.numpy as jnp
+
+    from repro.core import flat as flat_lib
+    spec24 = flat_lib.make_flat_spec(jnp.zeros(24))
+    fake_mesh = types.SimpleNamespace(shape={"agents": 1, "model": 2})
+    with pytest.raises(ValueError) as e:
+        sharded._validate_model_axis(make_cfg(codec="topk:0.25"), spec24,
+                                     fake_mesh, "model")
+    assert str(e.value) == canonical("topk")
+
+
+# ---------------------------------------------------------------------------
+# train-CLI loop (validation fires before any mesh/data work)
+# ---------------------------------------------------------------------------
+
+
+def _train_kwargs(**over):
+    from repro.configs.base import FedConfig
+    from repro.launch.train import tiny_lm_config
+    kw = dict(cfg=tiny_lm_config(d_model=64, layers=1, vocab=128),
+              fed=FedConfig(n_agents=4, h=2, k=2),
+              steps=2, per_agent_batch=1, seq_len=8,
+              mesh_agents=2, mesh_model=2, state_layout="flat")
+    kw.update(over)
+    return kw
+
+
+def _expect_train_error(expected: str, **over):
+    from repro.launch.train import train_loop
+    with pytest.raises(ValueError) as e:
+        train_loop(**_train_kwargs(**over))
+    assert str(e.value) == expected
+
+
+def test_train_loop_requires_mesh_agents():
+    _expect_train_error("--mesh-model needs --mesh-agents (the model axis "
+                        "extends the agent mesh to 2-D)", mesh_agents=None)
+
+
+def test_train_loop_tree_layout_uses_canonical_error():
+    _expect_train_error(canonical("tree"), state_layout="tree")
+
+
+def test_train_loop_sweep_uses_canonical_error():
+    _expect_train_error(canonical("sweep"), sweep_runs=2)
+
+
+def test_train_loop_delta_uses_canonical_error():
+    from repro.configs.base import FedConfig
+    _expect_train_error(canonical("delta"),
+                        fed=FedConfig(n_agents=4, h=2, k=2, delta="full"))
