@@ -62,6 +62,16 @@ evidence instead:
     decoded the same tokens as the naive per-request loop while beating
     its tokens/sec.
 
+  * roundfuse — BENCH_roundfuse.json rows' pass/byte columns are exact
+    against analysis.roundfuse_cost_model, the fused sgd body streams
+    ≤ 0.6× the unfused body's buffer-pass bytes (with a vacuity proof
+    such rows exist), every fused row passed its fused-vs-unfused
+    equivalence check at 1e-5, the committed headline (n=1024, D=2^20)
+    one-dispatch speedup stays ≥ 1.1× with a minimum-wall-clock proof the
+    4 GiB buffer was actually streamed, and the sharded boundary-halo
+    rows' split/overlap columns are exact against the model recomputed
+    from the contract ring(n, k=2) graph.
+
 Run (what ci.yml does):
   PYTHONPATH=src python -m benchmarks.check_regression \\
       --baseline-gossip results/benchmarks/BENCH_gossip.json \\
@@ -127,6 +137,17 @@ REQUIRED_DELTA_EQUIV = {"n_agents", "d", "h", "rounds", "max_abs_err",
 REQUIRED_DELTA_SERVING = {"arch", "d_flat", "batch", "prompt_len",
                           "new_tokens", "batched_tok_s", "naive_tok_s",
                           "speedup", "matches_naive"}
+REQUIRED_ROUNDFUSE = {"section", "impl", "optimizer", "codec", "n_agents",
+                      "d", "t_steps", "us_fused", "us_unfused", "speedup",
+                      "max_abs_err", "passes_unfused", "passes_fused",
+                      "unfused_pass_bytes", "fused_pass_bytes", "pass_ratio"}
+REQUIRED_ROUNDFUSE_SHARDED = {"n_agents", "n_shards", "d", "h",
+                              "us_per_round", "max_abs_err",
+                              "boundary_rows_per_shard",
+                              "interior_rows_per_shard", "num_halo_rounds",
+                              "halo_bytes_full", "halo_bytes_boundary",
+                              "halo_payload_ratio",
+                              "predicted_overlap_fraction"}
 REQUIRED_MESH2D = {"impl", "n_agents", "d", "h", "n_agent_shards",
                    "n_model_shards", "agents_per_device", "us_per_round",
                    "shard_bytes_measured", "state_bytes_per_device",
@@ -141,6 +162,13 @@ POPULATION_MAX_N = 1_000_000      # acceptance: committed run reaches 1e6
 DELTA_STORE_CEILING = 0.25   # acceptance: topk delta store ≤ 0.25× dense
 DELTA_MAX_N = 1_000_000      # acceptance: committed run reaches 1e6
 DELTA_SERVING_FLOOR = 1.0    # batched personalized decode beats naive
+ROUNDFUSE_PASS_CEILING = 0.6      # acceptance: fused sgd = 3/5 buffer passes
+ROUNDFUSE_SPEEDUP_FLOOR = 1.1     # committed headline one-dispatch speedup
+ROUNDFUSE_HEADLINE = (1024, 1 << 20)   # acceptance shape (n, D)
+ROUNDFUSE_MIN_HEADLINE_US = 10_000.0   # anti-vacuity: 4 GiB streams aren't
+#                                        sub-10ms on any host — a faster
+#                                        "measurement" means the buffer
+#                                        pass silently stopped happening
 
 
 class RegressionError(AssertionError):
@@ -289,6 +317,153 @@ def check_mesh2d_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
     _require(cells(baseline) <= cells(fresh),
              f"fresh mesh2d run dropped cells: "
              f"{cells(baseline) - cells(fresh)}")
+
+
+def check_roundfuse_doc(doc: dict, label: str) -> None:
+    """Fused-round evidence: exact roundfuse_cost_model columns on every
+    row, the fused sgd body at ≤ 0.6× the unfused buffer-pass bytes (with a
+    vacuity proof such rows exist), fused-vs-unfused equivalence actually
+    checked, the committed headline (n=1024, D=2^20) one-dispatch speedup,
+    and well-formed sharded boundary-halo overlap rows."""
+    rows = doc.get("rows", [])
+    _require(bool(rows), f"{label}: no benchmark rows")
+    for row in rows:
+        missing = REQUIRED_ROUNDFUSE - set(row)
+        _require(not missing, f"{label}: row missing {missing}: {row}")
+        _require(row["us_fused"] > 0 and row["us_unfused"] > 0,
+                 f"{label}: non-positive time {row}")
+        _require(row["max_abs_err"] <= 1e-5,
+                 f"{label}: fused-vs-unfused error {row['max_abs_err']} > "
+                 f"1e-5 at {row['impl']}/{row['optimizer']}")
+        # exact: every pass/byte column recomputed at the row's own shape
+        model = analysis.roundfuse_cost_model(
+            n_agents=row["n_agents"], d=row["d"],
+            optimizer=row["optimizer"], codec=row["codec"], param_bytes=4)
+        for col in ("passes_unfused", "passes_fused", "unfused_pass_bytes",
+                    "fused_pass_bytes", "pass_ratio"):
+            _require(row[col] == model[col],
+                     f"{label}: {row['optimizer']} codec={row['codec']} "
+                     f"{col} drifted: row={row[col]} "
+                     f"cost-model={model[col]}")
+
+    # the acceptance ceiling: fused sgd ≤ 0.6× unfused pass bytes, with a
+    # vacuity proof that codec-free sgd rows actually exist (momentum and
+    # codec rows have higher floors by construction — 5/7 and 13/17)
+    sgd_rows = [r for r in rows if r["optimizer"] == "sgd"
+                and not r["codec"]]
+    _require(bool(sgd_rows),
+             f"{label}: no codec-free sgd rows — the 0.6x pass-byte "
+             f"evidence vanished")
+    for row in sgd_rows:
+        _require(row["pass_ratio"] <= ROUNDFUSE_PASS_CEILING,
+                 f"{label}: sgd pass ratio {row['pass_ratio']} > "
+                 f"{ROUNDFUSE_PASS_CEILING} at n={row['n_agents']}")
+    impls = {r["impl"] for r in rows if r["section"] == "engine"}
+    _require({"dense", "sparse", "pallas"} <= impls,
+             f"{label}: engine impl coverage shrank: {impls}")
+    _require({"sgd", "momentum"} <= {r["optimizer"] for r in rows},
+             f"{label}: optimizer coverage shrank")
+    _require(any(r["codec"] for r in rows),
+             f"{label}: no codec (EF ef_mix kernel) rows")
+
+    # the committed headline: the 4 GiB-buffer one-dispatch speedup must
+    # exist at the acceptance shape and actually have streamed the buffer
+    head = [r for r in rows if r["section"] == "headline"]
+    _require(bool(head), f"{label}: headline rows vanished")
+    if not doc.get("smoke"):
+        hn, hd = ROUNDFUSE_HEADLINE
+        at_shape = [r for r in head
+                    if (r["n_agents"], r["d"]) == (hn, hd)]
+        _require(bool(at_shape),
+                 f"{label}: committed baseline has no headline row at "
+                 f"n={hn}, D={hd}")
+        for row in at_shape:
+            # the speedup floor is pinned on the codec-free sgd row only:
+            # that is the 0.60-ratio flagship the byte model promises the
+            # most for.  momentum's 7->5 pass gap is real but small enough
+            # that the CPU one-dispatch proxy measures ~1.0x there — the
+            # row still ships (honest number, exact cost columns) without
+            # a wall-clock floor.
+            if row["optimizer"] == "sgd" and not row["codec"]:
+                _require(row["speedup"] >= ROUNDFUSE_SPEEDUP_FLOOR,
+                         f"{label}: headline sgd speedup "
+                         f"{row['speedup']} < {ROUNDFUSE_SPEEDUP_FLOOR}")
+            _require(row["us_fused"] >= ROUNDFUSE_MIN_HEADLINE_US,
+                     f"{label}: headline fused call {row['us_fused']}us is "
+                     f"implausibly fast for a {hn}x{hd} f32 buffer — the "
+                     f"measurement went vacuous")
+        _require(any(r["optimizer"] == "sgd" and not r["codec"]
+                     for r in at_shape),
+                 f"{label}: committed baseline lost the sgd headline row "
+                 f"the speedup floor is pinned on")
+
+    # sharded overlap rows: exact cost-model columns recomputed from the
+    # bench contract graph (ring(n, k=2)), equivalence vs the flat round,
+    # and a vacuity proof that multi-shard rows exist
+    srows = doc.get("sharded_rows", [])
+    _require(bool(srows), f"{label}: sharded overlap rows vanished")
+    _require(any(r["n_shards"] > 1 for r in srows),
+             f"{label}: no multi-shard overlap rows — the boundary-halo "
+             f"evidence vanished")
+    for row in srows:
+        missing = REQUIRED_ROUNDFUSE_SHARDED - set(row)
+        _require(not missing,
+                 f"{label}: sharded row missing {missing}: {row}")
+        _require(row["us_per_round"] > 0, f"{label}: non-positive {row}")
+        _require(row["max_abs_err"] <= 1e-5,
+                 f"{label}: sharded-vs-flat error {row['max_abs_err']} > "
+                 f"1e-5 at s={row['n_shards']}")
+        graph = topo.ring_graph(row["n_agents"], k=2)
+        split = sharded_lib.boundary_row_split(graph, row["n_shards"])
+        cut = sharded_lib.cut_edge_stats(graph, row["n_shards"])
+        model = analysis.roundfuse_cost_model(
+            n_agents=row["n_agents"], d=row["d"], optimizer="sgd",
+            codec=False, param_bytes=4, n_shards=row["n_shards"],
+            boundary_rows_per_shard=split["b_max"],
+            num_halo_rounds=cut["num_halo_rounds"])
+        for col in ("boundary_rows_per_shard", "interior_rows_per_shard",
+                    "num_halo_rounds", "halo_bytes_full",
+                    "halo_bytes_boundary", "halo_payload_ratio",
+                    "predicted_overlap_fraction"):
+            _require(row[col] == model[col],
+                     f"{label}: sharded s={row['n_shards']} {col} drifted: "
+                     f"row={row[col]} cost-model={model[col]}")
+        n_local = row["n_agents"] // row["n_shards"]
+        _require(row["boundary_rows_per_shard"]
+                 + row["interior_rows_per_shard"] == n_local,
+                 f"{label}: boundary+interior != n_local at "
+                 f"s={row['n_shards']}")
+        _require(row["halo_payload_ratio"] <= 1.0,
+                 f"{label}: boundary halo moves MORE than the full block "
+                 f"at s={row['n_shards']}")
+
+    acc = doc["acceptance"]
+    _require(bool(acc["equivalence_checked_fused_vs_unfused"]),
+             f"{label}: fused-vs-unfused equivalence check was skipped")
+    _require(acc["max_abs_err_engine"] <= 1e-5,
+             f"{label}: engine equivalence error "
+             f"{acc['max_abs_err_engine']} > 1e-5")
+    _require(acc["sgd_pass_ratio"] <= ROUNDFUSE_PASS_CEILING,
+             f"{label}: acceptance sgd pass ratio {acc['sgd_pass_ratio']} "
+             f"> {ROUNDFUSE_PASS_CEILING}")
+    print(f"[guard] {label}: {len(rows)} rows + {len(srows)} sharded rows "
+          f"OK, sgd pass ratio {acc['sgd_pass_ratio']}, headline speedup "
+          f"{acc['headline_speedup_sgd']}x (sgd) / "
+          f"{acc['headline_speedup_momentum']}x (momentum)")
+
+
+def check_roundfuse_baseline_vs_fresh(baseline: dict, fresh: dict) -> None:
+    """The committed engine grid (impl, optimizer, codec) and the headline
+    section must survive in the fresh run (smoke shrinks shapes, never
+    coverage)."""
+    def grid(doc):
+        return {(r["impl"], r["optimizer"], r["codec"])
+                for r in doc["rows"] if r["section"] == "engine"}
+    _require(grid(baseline) <= grid(fresh),
+             f"fresh roundfuse run dropped engine cells: "
+             f"{grid(baseline) - grid(fresh)}")
+    _require(any(r["section"] == "headline" for r in fresh["rows"]),
+             "fresh roundfuse run dropped the headline section")
 
 
 def check_compress_doc(doc: dict, label: str) -> None:
@@ -702,6 +877,10 @@ def main() -> None:
                    help="optional: committed BENCH_mesh2d.json baseline")
     p.add_argument("--fresh-mesh2d", default=None,
                    help="fresh BENCH_mesh2d[.smoke].json to check")
+    p.add_argument("--baseline-roundfuse", default=None,
+                   help="optional: committed BENCH_roundfuse.json baseline")
+    p.add_argument("--fresh-roundfuse", default=None,
+                   help="fresh BENCH_roundfuse[.smoke].json to check")
     args = p.parse_args()
 
     with open(args.baseline_gossip) as f:
@@ -766,6 +945,17 @@ def main() -> None:
                 baseline_mesh2d = json.load(f)
             check_mesh2d_doc(baseline_mesh2d, "baseline BENCH_mesh2d")
             check_mesh2d_baseline_vs_fresh(baseline_mesh2d, fresh_mesh2d)
+    if args.fresh_roundfuse:
+        with open(args.fresh_roundfuse) as f:
+            fresh_roundfuse = json.load(f)
+        check_roundfuse_doc(fresh_roundfuse, "fresh BENCH_roundfuse")
+        if args.baseline_roundfuse:
+            with open(args.baseline_roundfuse) as f:
+                baseline_roundfuse = json.load(f)
+            check_roundfuse_doc(baseline_roundfuse,
+                                "baseline BENCH_roundfuse")
+            check_roundfuse_baseline_vs_fresh(baseline_roundfuse,
+                                              fresh_roundfuse)
     print("[guard] all perf-regression checks passed")
 
 

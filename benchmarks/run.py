@@ -22,6 +22,10 @@ commentary) and writes full curves/tables under results/benchmarks/.
   bench_delta      — delta-parameterized state (DeltaStore bytes vs the
                      dense store, rank=full bit-identity, batched
                      personalized serving vs the naive per-agent loop)
+  bench_roundfuse  — fused update+gossip round (kernels/update_mix.py):
+                     buffer-pass bytes + wall-clock fused vs unfused at
+                     fig4 and n=1024, D=2^20, sharded boundary-halo
+                     overlap rows, block_d autotune sweep
   ablation_server  — beyond-paper: §5 conjecture (server vs pure gossip)
   roofline         — aggregates results/dryrun into the §Roofline table
 """
@@ -38,9 +42,9 @@ def main() -> None:
 
     from benchmarks import (ablation_server, bench_compress, bench_delta,
                             bench_fused, bench_gossip, bench_kernels,
-                            bench_population, bench_sharded, bench_sweep,
-                            fig2_alpha, fig4_convergence, roofline,
-                            table1_lambda2, theory_check)
+                            bench_population, bench_roundfuse, bench_sharded,
+                            bench_sweep, fig2_alpha, fig4_convergence,
+                            roofline, table1_lambda2, theory_check)
     jobs = {
         "table1_lambda2": lambda: table1_lambda2.main(
             seeds=3 if args.quick else 10),
@@ -57,6 +61,7 @@ def main() -> None:
         "bench_sweep": lambda: bench_sweep.main(smoke=args.quick),
         "bench_population": lambda: bench_population.main(smoke=args.quick),
         "bench_delta": lambda: bench_delta.main(smoke=args.quick),
+        "bench_roundfuse": lambda: bench_roundfuse.main(smoke=args.quick),
         "ablation_server": lambda: ablation_server.main(
             t_steps=1500 if args.quick else 3000,
             seeds=3 if args.quick else 6),

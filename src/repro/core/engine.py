@@ -245,6 +245,14 @@ class EngineOps:
       finish:       (state, z_next, new_opt, new_res, t, losses, eta) ->
                     (new_state, metrics) — rebuild the carry, advance t,
                     apply any freeze masks, assemble metrics.
+      fused_update_gossip: (w, state, batch, key_grad, eta, residual,
+                    key_c) -> (losses, x_next, new_opt, new_res), or None.
+                    When set it REPLACES the local_update + gossip /
+                    ef_gossip pair with one fused lines-5–6 op (the
+                    update+mix megakernels of kernels/update_mix.py) —
+                    same contract, one buffer pass.  Engines set it only
+                    when the fused path reproduces the unfused numerics
+                    (sgd/momentum; adamw keeps the two-op path).
     """
 
     get_step: Callable
@@ -258,6 +266,7 @@ class EngineOps:
     finish: Callable
     fold_codec: Callable | None = None
     ef_gossip: Callable | None = None
+    fused_update_gossip: Callable | None = None
 
 
 def build_step_body(ops: EngineOps):
@@ -272,27 +281,32 @@ def build_step_body(ops: EngineOps):
     def step(state, batch, key):
         t = ops.get_step(state)
         key_w, key_grad, key_server = ops.derive_keys(key, t)
-        if ops.ef_gossip is not None:
-            # derived (not split) so key_w/key_grad/key_server — and with
-            # them every uncompressed trajectory — stay bit-identical
-            key_c = ops.fold_codec(key_w)
+        # derived (not split) so key_w/key_grad/key_server — and with
+        # them every uncompressed trajectory — stay bit-identical
+        key_c = ops.fold_codec(key_w) if ops.fold_codec is not None else None
         eta = ops.eta_fn(t)
 
         # line 3: sample W^t
         w = ops.sample_w(key_w)
 
-        # lines 4–5: per-agent stochastic gradient + local update
-        losses, x_half, new_opt = ops.local_update(state, batch, key_grad,
-                                                   eta)
-
-        # line 6: gossip averaging (compressed payload + EF residual when a
-        # codec is configured)
-        if ops.ef_gossip is None:
-            x_next = ops.gossip(w, x_half)
-            new_res = ops.get_residual(state)
+        if ops.fused_update_gossip is not None:
+            # lines 4–6 in one buffer pass (kernels/update_mix.py)
+            losses, x_next, new_opt, new_res = ops.fused_update_gossip(
+                w, state, batch, key_grad, eta, ops.get_residual(state),
+                key_c)
         else:
-            x_next, new_res = ops.ef_gossip(w, x_half,
-                                            ops.get_residual(state), key_c)
+            # lines 4–5: per-agent stochastic gradient + local update
+            losses, x_half, new_opt = ops.local_update(state, batch,
+                                                       key_grad, eta)
+
+            # line 6: gossip averaging (compressed payload + EF residual
+            # when a codec is configured)
+            if ops.ef_gossip is None:
+                x_next = ops.gossip(w, x_half)
+                new_res = ops.get_residual(state)
+            else:
+                x_next, new_res = ops.ef_gossip(
+                    w, x_half, ops.get_residual(state), key_c)
 
         # lines 7–12: periodic server round (partial participation)
         z_next = ops.server(key_server, x_next, t)
@@ -386,6 +400,14 @@ class EngineSpec:
         (agents exchange encoded deltas against a shared base row —
         repro.core.delta); the population engine consumes the same codecs
         host-side via DeltaStore.
+      fuse_update_mix: run lines 5–6 as one fused buffer pass (the
+        update+mix megakernels of kernels/update_mix.py) on the flat /
+        sweep lowerings.  Trajectories match the unfused body to ≤ 1e-5;
+        optimizers the kernels cannot replicate (adamw, custom) and custom
+        gossip_fn overrides fall back to the two-op path automatically.
+        Tree layouts and agent-sharded meshes reject the flag at parse
+        time (the sharded engine overlaps its halo with interior compute
+        instead — core/sharded.py).
     """
 
     configs: tuple
@@ -397,6 +419,7 @@ class EngineSpec:
     delta: str = "none"
     n_model_shards: int = 1
     model_axis: Any = "model"
+    fuse_update_mix: bool = False
 
     @property
     def cfg(self):
@@ -429,15 +452,18 @@ class EngineSpec:
 def parse_engine_spec(configs, layout: str = "flat", n_shards: int = 1,
                       axis_name="agents", t_steps=None,
                       force_run_axis: bool = False, n_model_shards: int = 1,
-                      model_axis="model") -> EngineSpec:
+                      model_axis="model",
+                      fuse_update_mix: bool = False) -> EngineSpec:
     """Validate and freeze an EngineSpec.
 
     ``configs`` may be a single FedDecConfig or an iterable of them.  Raises
     ValueError on any invalid combination: unknown layout, a tree-layout
     sweep/sharding, shards not dividing n_agents, a lattice the sweep
     plan rejects (mismatched n_agents/K/server/codec, > 1 non-'none' impl,
-    malformed t_steps), or a model-sharded spec combined with tree / sweep /
-    delta / topk compression (:func:`model_axis_conflict`).
+    malformed t_steps), a model-sharded spec combined with tree / sweep /
+    delta / topk compression (:func:`model_axis_conflict`), or
+    ``fuse_update_mix`` on a layout without a flat single-device buffer
+    (tree / agent-sharded / model-sharded).
     """
     if hasattr(configs, "gossip_impl"):  # a single config
         configs = (configs,)
@@ -498,10 +524,24 @@ def parse_engine_spec(configs, layout: str = "flat", n_shards: int = 1,
             raise model_axis_conflict(
                 "topk gossip compression (the payload indices address the "
                 "full D axis)")
+    if fuse_update_mix:
+        if layout == "tree":
+            raise ValueError(
+                "fuse_update_mix needs the flat (n, D) buffer layout — the "
+                "update+mix kernels tile one contiguous buffer; use "
+                "layout='flat'")
+        if n_shards > 1:
+            raise ValueError(
+                "fuse_update_mix is single-device: the sharded engine "
+                "overlaps its halo with interior compute instead "
+                "(core/sharded.py); use n_shards=1")
+        if n_model_shards > 1:
+            raise model_axis_conflict("fuse_update_mix (--fuse-update-mix)")
     spec = EngineSpec(configs=configs, layout=layout, n_shards=n_shards,
                       axis_name=axis_name, t_steps=t_steps,
                       force_run_axis=force_run_axis, delta=delta,
-                      n_model_shards=n_model_shards, model_axis=model_axis)
+                      n_model_shards=n_model_shards, model_axis=model_axis,
+                      fuse_update_mix=fuse_update_mix)
     if spec.has_run_axis or t_steps is not None:
         spec.plan()  # full lattice validation (raises on bad combinations)
     return spec
@@ -555,6 +595,10 @@ def make_engine_round(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
     if delta_base is not None and espec.delta == "none":
         raise ValueError("delta_base was passed but the spec has "
                          "delta='none'")
+    if espec.fuse_update_mix and kind not in ("flat", "sweep"):
+        raise ValueError(
+            "fuse_update_mix lowers on the flat / sweep engines only; the "
+            f"'{kind}' lowering was selected (drop the mesh or the flag)")
 
     if kind == "tree":
         from repro.core import feddec
@@ -567,13 +611,15 @@ def make_engine_round(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
         return flat_lib._lower_flat_round(
             espec.cfg, flat_spec, grad_fn, lr_fn, gossip_fn=gossip_fn,
             optimizer=optimizer, metrics_fn=metrics_fn, donate=donate,
-            jit=jit, unroll=unroll, delta_base=delta_base)
+            jit=jit, unroll=unroll, delta_base=delta_base,
+            fuse_update_mix=espec.fuse_update_mix)
     if kind == "sweep":
         from repro.core import sweep as sweep_lib
         return sweep_lib._lower_sweep_round(
             espec.plan(), flat_spec, grad_fn, lr_fn, optimizer=optimizer,
             metrics_fn=metrics_fn, block_d=block_d, donate=donate, jit=jit,
-            unroll=unroll, per_step_keys=per_step_keys)
+            unroll=unroll, per_step_keys=per_step_keys,
+            fuse_update_mix=espec.fuse_update_mix)
     if kind == "sharded":
         from repro.core import sharded as sharded_lib
         return sharded_lib._lower_sharded_round(
@@ -602,6 +648,10 @@ def make_engine_step(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
     if delta_base is not None and espec.delta == "none":
         raise ValueError("delta_base was passed but the spec has "
                          "delta='none'")
+    if espec.fuse_update_mix and kind not in ("flat", "sweep"):
+        raise ValueError(
+            "fuse_update_mix lowers on the flat / sweep engines only; the "
+            f"'{kind}' lowering was selected (drop the mesh or the flag)")
 
     if kind == "tree":
         from repro.core import feddec
@@ -613,12 +663,14 @@ def make_engine_step(espec: EngineSpec, grad_fn: GradFn, lr_fn: LrFn, *,
         return flat_lib._lower_flat_step(
             espec.cfg, flat_spec, grad_fn, lr_fn, gossip_fn=gossip_fn,
             optimizer=optimizer, donate=donate, jit=jit,
-            delta_base=delta_base)
+            delta_base=delta_base,
+            fuse_update_mix=espec.fuse_update_mix)
     if kind == "sweep":
         from repro.core import sweep as sweep_lib
         return sweep_lib._lower_sweep_step(
             espec.plan(), flat_spec, grad_fn, lr_fn, optimizer=optimizer,
-            block_d=block_d, donate=donate, jit=jit)
+            block_d=block_d, donate=donate, jit=jit,
+            fuse_update_mix=espec.fuse_update_mix)
     if kind == "sharded":
         from repro.core import sharded as sharded_lib
         return sharded_lib._lower_sharded_step(

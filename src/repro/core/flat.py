@@ -283,9 +283,95 @@ def resolve_flat_gossip(cfg: FedDecConfig,
 # ---------------------------------------------------------------------------
 
 
+def _fuse_kind(cfg: FedDecConfig, optimizer, custom_gossip: bool):
+    """The optimizer kind the fused update+mix kernels can replicate, or
+    None when this configuration must keep the unfused two-op path.
+
+    Fusable: sgd (optimizer=None or kind 'sgd') and momentum, on the
+    resolved dense/pallas/sparse mixes.  Everything else — adamw / custom
+    optimizers (the bias-corrected rescale needs whole-state context), a
+    caller-supplied gossip_fn (opaque), impl 'none' (no mix to fuse), or a
+    sparse graph too skewed for the ELL layout — falls back, bit-identical
+    to the flag being off.
+    """
+    if custom_gossip or cfg.gossip_impl not in ("dense", "pallas", "sparse"):
+        return None
+    kind = "sgd" if optimizer is None else getattr(optimizer, "kind",
+                                                   "custom")
+    if kind not in ("sgd", "momentum"):
+        return None
+    if cfg.gossip_impl == "sparse":
+        from repro.core import gossip as gossip_lib
+        graph = cfg.mixing.graph
+        max_deg = int(graph.degrees.max()) if graph.n else 0
+        if not 0 < max_deg <= gossip_lib.ELL_MAX_DEG:
+            return None
+    return kind
+
+
+def _make_fused_flat_op(cfg: FedDecConfig, spec: FlatSpec, grads_of,
+                        local_update, optimizer, compressor,
+                        custom_gossip: bool):
+    """The flat engine's fused lines-5–6 op (EngineOps.fused_update_gossip).
+
+    Uncompressed: one kernels/update_mix.py pass — the post-update iterate
+    never touches HBM.  Codec active: the update and the whole-row encode
+    stay on XLA (shared with every other engine, so payloads stay
+    bit-identical) and the fused EF kernel collapses mix + diag correction
+    + residual into one pass.  Returns None when ineligible (the caller
+    keeps the unfused body).
+    """
+    kind = _fuse_kind(cfg, optimizer, custom_gossip)
+    if kind is None:
+        return None
+    from repro.kernels import ops as kernel_ops
+    hyper = optimizer.hyperparams() if kind == "momentum" else {}
+    beta = hyper.get("beta")
+    nesterov = bool(hyper.get("nesterov", False))
+    sparse = cfg.gossip_impl == "sparse"
+    if compressor is not None:
+        ef_kernel = kernel_ops.make_sparse_ef_mix_pallas(cfg.mixing.graph) \
+            if sparse else kernel_ops.ef_mix
+        n_agents = cfg.n_agents
+
+        def fused(w, state, batch, key_grad, eta, residual, key_c):
+            losses, x_half, new_opt = local_update(state, batch, key_grad,
+                                                   eta)
+            keys = jax.random.split(key_c, n_agents) \
+                if compressor.needs_key else None
+            u = x_half + residual
+            payload = compressor.encode(keys, u)
+            s = compressor.decode(payload, u.dtype, u.shape[1])
+            y, new_res = ef_kernel(w, x_half, s, u)
+            return losses, y, new_opt, new_res
+
+        return fused
+
+    if sparse:
+        fused_mix = kernel_ops.make_sparse_update_mix_pallas(
+            cfg.mixing.graph, beta=beta, nesterov=nesterov)
+    elif kind == "momentum":
+        def fused_mix(w, x, g, eta, m):
+            return kernel_ops.update_mix(w, x, g, eta, m=m, beta=beta,
+                                         nesterov=nesterov)
+    else:
+        fused_mix = kernel_ops.update_mix
+
+    def fused(w, state, batch, key_grad, eta, residual, key_c):
+        losses, g_flat = grads_of(state, batch, key_grad)
+        if kind == "sgd":
+            y = fused_mix(w, state.flat, g_flat, eta)
+            return losses, y, state.opt_state, residual
+        y, new_m = fused_mix(w, state.flat, g_flat, eta, state.opt_state)
+        return losses, y, new_m, residual
+
+    return fused
+
+
 def _flat_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
               lr_fn: LrFn, gossip_fn, optimizer,
-              delta_base=None) -> engine.EngineOps:
+              delta_base=None, fuse_update_mix: bool = False
+              ) -> engine.EngineOps:
     """The flat engine's vtable for the shared Algorithm-1 body."""
     custom_gossip = gossip_fn is not None
     if gossip_fn is None:
@@ -314,18 +400,27 @@ def _flat_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
             fused_int8_pallas=cfg.gossip_impl == "pallas"
             and not custom_gossip)
 
-    def local_update(state: FlatFedState, batch: Any, key_grad, eta):
-        # lines 4–5: tree view for the model, flat buffer for the update
+    def grads_of(state: FlatFedState, batch: Any, key_grad):
+        # line 4: tree view for the model, flat buffer for everything else
         params = spec.unflatten(state.flat)
         agent_keys = jax.random.split(key_grad, n_agents)
         losses, grads = jax.vmap(grad_fn)(params, batch, agent_keys)
-        g_flat = spec.flatten(grads)
+        return losses, spec.flatten(grads)
+
+    def local_update(state: FlatFedState, batch: Any, key_grad, eta):
+        losses, g_flat = grads_of(state, batch, key_grad)
         if optimizer is None:  # plain SGD: one elementwise pass over (n, D)
             return losses, state.flat - eta.astype(spec.dtype) * g_flat, \
                 state.opt_state
         x_half, new_opt = optimizer.update(state.flat, g_flat,
                                            state.opt_state, eta)
         return losses, x_half, new_opt
+
+    fused_update_gossip = None
+    if fuse_update_mix:
+        fused_update_gossip = _make_fused_flat_op(
+            cfg, spec, grads_of, local_update, optimizer, compressor,
+            custom_gossip)
 
     def server(key_server, x_next, t):
         if not cfg.server_enabled:
@@ -354,33 +449,37 @@ def _flat_ops(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
         finish=finish,
         fold_codec=None if compressor is None else (
             lambda key_w: jax.random.fold_in(key_w, 1)),
-        ef_gossip=ef_gossip)
+        ef_gossip=ef_gossip,
+        fused_update_gossip=fused_update_gossip)
 
 
 def _build_flat_step_body(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                           lr_fn: LrFn, gossip_fn, optimizer,
-                          delta_base=None):
+                          delta_base=None, fuse_update_mix: bool = False):
     """Algorithm-1 body on the flat carry; unflattens only around grad_fn."""
     return engine.build_step_body(
         _flat_ops(cfg, spec, grad_fn, lr_fn, gossip_fn, optimizer,
-                  delta_base=delta_base))
+                  delta_base=delta_base, fuse_update_mix=fuse_update_mix))
 
 
 def _lower_flat_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                      lr_fn: LrFn, *, gossip_fn=None, optimizer=None,
                      donate: bool = True, jit: bool = True,
-                     delta_base=None):
+                     delta_base=None, fuse_update_mix: bool = False):
     step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
-                                 optimizer, delta_base=delta_base)
+                                 optimizer, delta_base=delta_base,
+                                 fuse_update_mix=fuse_update_mix)
     return engine.finalize_executor(step, donate=donate, jit=jit)
 
 
 def _lower_flat_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                       lr_fn: LrFn, *, gossip_fn=None, optimizer=None,
                       metrics_fn=None, donate: bool = True, jit: bool = True,
-                      unroll: int = 1, delta_base=None):
+                      unroll: int = 1, delta_base=None,
+                      fuse_update_mix: bool = False):
     step = _build_flat_step_body(cfg, spec, grad_fn, lr_fn, gossip_fn,
-                                 optimizer, delta_base=delta_base)
+                                 optimizer, delta_base=delta_base,
+                                 fuse_update_mix=fuse_update_mix)
     round_fn = engine.make_scan_round(step, metrics_fn=metrics_fn,
                                       unroll=unroll)
     return engine.finalize_executor(round_fn, donate=donate, jit=jit)
@@ -389,10 +488,11 @@ def _lower_flat_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
 def make_flat_feddec_step(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                           lr_fn: LrFn, gossip_fn=None, optimizer=None,
                           donate: bool = True, jit: bool = True,
-                          delta_base=None):
+                          delta_base=None, fuse_update_mix: bool = False):
     """One-iteration flat executor: step(state, batch, key) like the tree
     engine's make_feddec_step, carrying FlatFedState."""
-    espec = engine.parse_engine_spec(cfg, layout="flat")
+    espec = engine.parse_engine_spec(cfg, layout="flat",
+                                     fuse_update_mix=fuse_update_mix)
     return engine.make_engine_step(espec, grad_fn, lr_fn, flat_spec=spec,
                                    gossip_fn=gossip_fn, optimizer=optimizer,
                                    donate=donate, jit=jit,
@@ -404,7 +504,8 @@ def make_flat_feddec_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
                            metrics_fn: Callable[[FlatFedState], dict]
                            | None = None,
                            donate: bool = True, jit: bool = True,
-                           unroll: int = 1, delta_base=None):
+                           unroll: int = 1, delta_base=None,
+                           fuse_update_mix: bool = False):
     """The fused flat executor: H steps per compiled call, flat carry.
 
     Same contract as repro.core.feddec.make_feddec_round — batches carry a
@@ -415,7 +516,8 @@ def make_flat_feddec_round(cfg: FedDecConfig, spec: FlatSpec, grad_fn: GradFn,
     FlatFedState; use ``spec.unflatten(state.flat)`` inside it for
     tree-shaped diagnostics.
     """
-    espec = engine.parse_engine_spec(cfg, layout="flat")
+    espec = engine.parse_engine_spec(cfg, layout="flat",
+                                     fuse_update_mix=fuse_update_mix)
     return engine.make_engine_round(espec, grad_fn, lr_fn, flat_spec=spec,
                                     gossip_fn=gossip_fn, optimizer=optimizer,
                                     metrics_fn=metrics_fn, donate=donate,

@@ -58,10 +58,10 @@ from repro.core import topology as topo
 from repro.core.feddec import FedDecConfig
 from repro.core.flat import FlatFedState, FlatSpec
 
-__all__ = ["quotient_graph", "cut_edge_stats", "make_sharded_gossip",
-           "make_sharded_ef_gossip", "make_sharded_feddec_step",
-           "make_sharded_feddec_round", "flat_state_specs",
-           "shard_flat_state", "agent_axis_size"]
+__all__ = ["quotient_graph", "cut_edge_stats", "boundary_row_split",
+           "make_sharded_gossip", "make_sharded_ef_gossip",
+           "make_sharded_feddec_step", "make_sharded_feddec_round",
+           "flat_state_specs", "shard_flat_state", "agent_axis_size"]
 
 GradFn = Callable[[Any, Any, jax.Array], tuple[jax.Array, Any]]
 LrFn = Callable[[jax.Array], jax.Array]
@@ -142,6 +142,52 @@ def cut_edge_stats(graph: topo.Graph, n_shards: int) -> dict:
     }
 
 
+def boundary_row_split(graph: topo.Graph, n_shards: int) -> dict:
+    """Split each shard's rows into boundary (on a cut edge) vs interior.
+
+    A local row is *boundary* iff it has any base-graph edge (in either
+    direction) to an agent on another shard — only those rows' values can
+    appear in a neighbouring shard's mix, and only those rows can consume a
+    received value.  The halo therefore only needs to move each shard's
+    boundary slice, and everything a shard computes from purely local data
+    (its interior rows, plus every row's own-block contribution) is
+    independent of the in-flight exchange — the overlap window
+    ``analysis.roundfuse_cost_model`` predicts.
+
+    Returns static (host-side) tables, padded to the lattice-wide max
+    boundary count ``b_max`` so the per-round ``ppermute`` payload has one
+    shape for every shard:
+
+      ``index``    (n_shards, b_max) int32 — local row ids of shard s's
+                   boundary rows (padded with 0);
+      ``valid``    (n_shards, b_max) bool — False on padding;
+      ``counts``   (n_shards,) int — true boundary rows per shard;
+      plus scalars ``n_local``, ``b_max``, ``interior_min`` (the smallest
+      per-shard interior count — the guaranteed overlap compute).
+    """
+    n = graph.n
+    if n_shards < 1 or n % n_shards:
+        raise ValueError(f"n_shards must divide n_agents: {n_shards} ∤ {n}")
+    n_local = n // n_shards
+    adj = np.asarray(graph.adjacency)
+    sym = adj | adj.T
+    shard_of = np.arange(n) // n_local
+    cross = sym & (shard_of[:, None] != shard_of[None, :])
+    per = cross.any(axis=1).reshape(n_shards, n_local)
+    counts = per.sum(axis=1)
+    b_max = int(counts.max()) if n_shards > 0 else 0
+    index = np.zeros((n_shards, b_max), np.int32)
+    valid = np.zeros((n_shards, b_max), bool)
+    for s in range(n_shards):
+        rows = np.nonzero(per[s])[0]
+        index[s, :len(rows)] = rows
+        valid[s, :len(rows)] = True
+    return {"index": index, "valid": valid,
+            "counts": counts.astype(np.int64),
+            "n_local": n_local, "b_max": b_max,
+            "interior_min": int(n_local - counts.max()) if n_shards else 0}
+
+
 # ---------------------------------------------------------------------------
 # Per-shard gossip mixers
 # ---------------------------------------------------------------------------
@@ -151,7 +197,9 @@ def _halo_setup(cfg: FedDecConfig, n_shards: int):
     """Static ppermute metadata of the quotient graph, shared by the
     uncompressed and compressed halo mixers: ``perms`` is (R, S) int32
     (round r, shard d receives shard perms[r, d]'s block), ``pairs`` the
-    per-round (src, dst) ppermute arguments."""
+    per-round (src, dst) ppermute arguments, and ``split`` the boundary /
+    interior row tables (:func:`boundary_row_split`) that size the halo
+    payload."""
     q = quotient_graph(cfg.mixing.graph, n_shards)
     schedule = topo.permutation_schedule(q)
     perms = jnp.asarray(
@@ -159,7 +207,19 @@ def _halo_setup(cfg: FedDecConfig, n_shards: int):
         else np.zeros((0, n_shards), np.int64), jnp.int32)
     pairs = [tuple((int(p[d]), d) for d in range(n_shards) if p[d] != d)
              for p in schedule]
-    return perms, pairs
+    split = boundary_row_split(cfg.mixing.graph, n_shards)
+    return perms, pairs, split
+
+
+def _boundary_wcols(w_rows, b_index, b_valid, src, me, n_local):
+    """Round-r cut-edge weight columns W[my rows, src's boundary rows] as an
+    (n_local, b_max) slab: padding columns are masked off and idle shards
+    this round (perm[me] == me) received zeros and must not re-add their
+    own block."""
+    cols = src * n_local + jnp.take(b_index, src, axis=0)
+    wc = jnp.take(w_rows, cols, axis=1)
+    keep = jnp.take(b_valid, src, axis=0) & (src != me)
+    return wc * keep.astype(wc.dtype)[None, :]
 
 
 def _blk_mix_for(impl: str, block_d: int | None):
@@ -178,14 +238,6 @@ def _blk_mix_for(impl: str, block_d: int | None):
         return jnp.einsum("ij,jd->id", wb.astype(xb.dtype), xb,
                           precision=jax.lax.Precision.HIGHEST)
     return blk_mix
-
-
-def _halo_wblk(w, lo, src, me, n_local):
-    """Round-r weight sub-block W[rows, src-block]; idle shards this round
-    (perm[me] == me) received zeros and must not re-add their own block."""
-    wblk = jax.lax.dynamic_slice(w, (lo, src * n_local),
-                                 (n_local, n_local))
-    return jnp.where(src == me, 0.0, 1.0).astype(wblk.dtype) * wblk
 
 
 def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
@@ -227,17 +279,31 @@ def _make_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
         return mix
 
     if impl in ("sparse", "pallas"):
-        perms, pairs = _halo_setup(cfg, n_shards)
+        perms, pairs, split = _halo_setup(cfg, n_shards)
         blk_mix = _blk_mix_for(impl, block_d)
+        b_index = jnp.asarray(split["index"])
+        b_valid = jnp.asarray(split["valid"])
 
         def halo(w, x_blk, me):
+            # boundary/interior overlap: every halo round's (b_max, D)
+            # boundary payload is gathered and its ppermute issued *before*
+            # any local compute — the own-block contraction (interior rows
+            # plus every row's intra-block terms) then runs while the cut
+            # edges are in flight, and only the final per-round cut-edge
+            # slabs W[my rows, src boundary] @ recv wait on arrival
             lo = me * n_local
-            own = jax.lax.dynamic_slice(w, (lo, lo), (n_local, n_local))
+            payload = jnp.take(x_blk, jnp.take(b_index, me, axis=0), axis=0)
+            recvs = [jax.lax.ppermute(payload, axis_name, perm=pr)
+                     for pr in pairs]
+            w_rows = jax.lax.dynamic_slice_in_dim(w, lo, n_local, axis=0)
+            own = jax.lax.dynamic_slice_in_dim(w_rows, lo, n_local, axis=1)
             y = blk_mix(own, x_blk)
-            for r, pr in enumerate(pairs):
-                recv = jax.lax.ppermute(x_blk, axis_name, perm=pr)
-                wblk = _halo_wblk(w, lo, perms[r, me], me, n_local)
-                y = y + blk_mix(wblk, recv)
+            for r, recv in enumerate(recvs):
+                wc = _boundary_wcols(w_rows, b_index, b_valid, perms[r, me],
+                                     me, n_local)
+                y = y + jnp.einsum("ib,bd->id", wc.astype(x_blk.dtype),
+                                   recv,
+                                   precision=jax.lax.Precision.HIGHEST)
             return y
 
         if model_axes is None:
@@ -289,23 +355,35 @@ def _make_compressed_shard_mixer(cfg: FedDecConfig, axis_name, n_shards: int,
         return mix
 
     if impl in ("sparse", "pallas"):
-        perms, pairs = _halo_setup(cfg, n_shards)
+        perms, pairs, split = _halo_setup(cfg, n_shards)
         blk_mix = _blk_mix_for(impl, block_d)
+        b_index = jnp.asarray(split["index"])
+        b_valid = jnp.asarray(split["valid"])
 
         def halo(w, p_blk, s_blk, payload, me):
+            # the halo moves the *encoded* payload, leaf by leaf, and only
+            # its boundary rows; all ppermutes are issued before the local
+            # own-block mix so the cut-edge exchange overlaps it (the codec
+            # is per-row, so decoding a row slice equals slicing the decode)
             lo = me * n_local
-            own = jax.lax.dynamic_slice(w, (lo, lo), (n_local, n_local))
+            idx_me = jnp.take(b_index, me, axis=0)
+            bpay = jax.tree.map(lambda a: jnp.take(a, idx_me, axis=0),
+                                payload)
+            recvs = [jax.tree.map(
+                lambda a: jax.lax.ppermute(a, axis_name, perm=pr), bpay)
+                for pr in pairs]
+            w_rows = jax.lax.dynamic_slice_in_dim(w, lo, n_local, axis=0)
+            own = jax.lax.dynamic_slice_in_dim(w_rows, lo, n_local, axis=1)
             dg = diag_blk(w, me).astype(p_blk.dtype)[:, None]
             y = blk_mix(own, s_blk) + dg * (p_blk - s_blk)
-            for r, pr in enumerate(pairs):
-                # the halo moves the *encoded* payload, leaf by leaf
-                recv = jax.tree.map(
-                    lambda a: jax.lax.ppermute(a, axis_name, perm=pr),
-                    payload)
+            for r, recv in enumerate(recvs):
                 s_recv = compressor.decode(recv, p_blk.dtype,
                                            p_blk.shape[1])
-                wblk = _halo_wblk(w, lo, perms[r, me], me, n_local)
-                y = y + blk_mix(wblk, s_recv)
+                wc = _boundary_wcols(w_rows, b_index, b_valid, perms[r, me],
+                                     me, n_local)
+                y = y + jnp.einsum("ib,bd->id", wc.astype(p_blk.dtype),
+                                   s_recv,
+                                   precision=jax.lax.Precision.HIGHEST)
             return y
 
         if model_axes is None:

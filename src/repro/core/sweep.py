@@ -282,8 +282,29 @@ def resolve_sweep_gossip(plan: SweepPlan,
 # ---------------------------------------------------------------------------
 
 
+def _sweep_fuse_kind(plan: SweepPlan, optimizer):
+    """Batched mirror of flat._fuse_kind: the optimizer kind the fused
+    update+mix kernels replicate for this lattice, or None to keep the
+    unfused path (adamw/custom optimizers, an all-FedAvg lattice, or a
+    sparse lattice too skewed for the stacked-ELL layout)."""
+    if plan.gossip_impl not in ("dense", "pallas", "sparse"):
+        return None
+    kind = "sgd" if optimizer is None else getattr(optimizer, "kind",
+                                                   "custom")
+    if kind not in ("sgd", "momentum"):
+        return None
+    if plan.gossip_impl == "sparse":
+        from repro.core import gossip as gossip_lib
+        max_deg = max((int(g.degrees.max()) if g.n else 0)
+                      for g in plan.graphs)
+        if not 0 < max_deg <= gossip_lib.ELL_MAX_DEG:
+            return None
+    return kind
+
+
 def _sweep_ops(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn, lr_fn: LrFn,
-               optimizer, block_d=None) -> engine.EngineOps:
+               optimizer, block_d=None,
+               fuse_update_mix: bool = False) -> engine.EngineOps:
     """The lattice engine's vtable: every Algorithm-1 line as one
     whole-lattice op.
 
@@ -311,23 +332,26 @@ def _sweep_ops(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn, lr_fn: LrFn,
             jax.random.fold_in(k, tt), 3))(keys, t)
         return k3[:, 0], k3[:, 1], k3[:, 2]
 
-    def local_update(state: SweepFedState, batch: Any, key_grad, eta):
-        # lines 4–5: tree view over the flattened (R·n) agent axis
-        flat3 = state.flat
-        params = spec.unflatten(flat3.reshape(r_runs * n, spec.d))
+    def grads_of(state: SweepFedState, batch: Any, key_grad):
+        # line 4: tree view over the flattened (R·n) agent axis
+        params = spec.unflatten(state.flat.reshape(r_runs * n, spec.d))
         agent_keys = jax.vmap(lambda k: jax.random.split(k, n))(
             key_grad).reshape(r_runs * n)
         batch_rn = jax.tree.map(
             lambda b: b.reshape((r_runs * n,) + b.shape[2:]), batch)
         losses, grads = jax.vmap(grad_fn)(params, batch_rn, agent_keys)
         g3 = spec.flatten(grads).reshape(r_runs, n, spec.d)
-        losses = losses.reshape(r_runs, n)
+        return losses.reshape(r_runs, n), g3
+
+    def local_update(state: SweepFedState, batch: Any, key_grad, eta):
+        # lines 4–5
+        losses, g3 = grads_of(state, batch, key_grad)
         if optimizer is None:  # plain SGD: one pass over (R, n, D)
-            x_half = flat3 - eta[:, None, None].astype(spec.dtype) * g3
+            x_half = state.flat - eta[:, None, None].astype(spec.dtype) * g3
             new_opt = state.opt_state
         else:
             x_half, new_opt = jax.vmap(optimizer.update)(
-                flat3, g3, state.opt_state, eta)
+                state.flat, g3, state.opt_state, eta)
         return losses, x_half, new_opt
 
     def ef_gossip(w, x_half, residual, key_c):
@@ -348,6 +372,62 @@ def _sweep_ops(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn, lr_fn: LrFn,
             x_next = jnp.where(none3, x_half, x_next)
             new_res = jnp.where(none3, residual, new_res)
         return x_next, new_res
+
+    # single-pass lines 5–6 over the whole lattice (EngineOps docstring):
+    # same kernels as the flat engine with the run axis as the leading grid
+    # dimension; FedAvg members stay exact because their W = I rows make the
+    # fused mix an identity (uncompressed) or are masked back (codec)
+    fused_update_gossip = None
+    kind = _sweep_fuse_kind(plan, optimizer) if fuse_update_mix else None
+    if kind is not None:
+        from repro.kernels import ops as kernel_ops
+        hyper = optimizer.hyperparams() if kind == "momentum" else {}
+        beta = hyper.get("beta")
+        nesterov = bool(hyper.get("nesterov", False))
+        sparse = plan.gossip_impl == "sparse"
+        if compressor is not None:
+            ef_kernel = kernel_ops.make_sparse_ef_mix_batched_pallas(
+                plan.graphs) if sparse else kernel_ops.ef_mix_batched
+
+            def fused_update_gossip(w, state, batch, key_grad, eta,
+                                    residual, key_c):
+                losses, x_half, new_opt = local_update(state, batch,
+                                                       key_grad, eta)
+                u = x_half + residual
+                if compressor.needs_key:
+                    enc_keys = jax.vmap(
+                        lambda k: jax.random.split(k, n))(key_c)
+                    payload = jax.vmap(compressor.encode)(enc_keys, u)
+                else:
+                    payload = jax.vmap(
+                        lambda uu: compressor.encode(None, uu))(u)
+                s = jax.vmap(lambda p_: compressor.decode(
+                    p_, x_half.dtype, spec.d))(payload)
+                y, new_res = ef_kernel(w, x_half, s, u)
+                if none3 is not None:
+                    y = jnp.where(none3, x_half, y)
+                    new_res = jnp.where(none3, residual, new_res)
+                return losses, y, new_opt, new_res
+        else:
+            if sparse:
+                fused_mix = kernel_ops.make_sparse_update_mix_batched_pallas(
+                    plan.graphs, beta=beta, nesterov=nesterov)
+            elif kind == "momentum":
+                def fused_mix(w, x, g, eta, m):
+                    return kernel_ops.update_mix_batched(
+                        w, x, g, eta, m=m, beta=beta, nesterov=nesterov)
+            else:
+                fused_mix = kernel_ops.update_mix_batched
+
+            def fused_update_gossip(w, state, batch, key_grad, eta,
+                                    residual, key_c):
+                losses, g3 = grads_of(state, batch, key_grad)
+                if kind == "sgd":
+                    y = fused_mix(w, state.flat, g3, eta)
+                    return losses, y, state.opt_state, residual
+                y, new_m = fused_mix(w, state.flat, g3, eta,
+                                     state.opt_state)
+                return losses, y, new_m, residual
 
     def server(key_server, x_next, t):
         # lines 7–12: per-run periodic server round ((t+1) % h_r == 0)
@@ -391,30 +471,37 @@ def _sweep_ops(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn, lr_fn: LrFn,
         fold_codec=None if compressor is None else (
             lambda key_w: jax.vmap(
                 lambda k: jax.random.fold_in(k, 1))(key_w)),
-        ef_gossip=None if compressor is None else ef_gossip)
+        ef_gossip=None if compressor is None else ef_gossip,
+        fused_update_gossip=fused_update_gossip)
 
 
 def _build_sweep_step_body(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
-                           lr_fn: LrFn, optimizer, block_d=None):
+                           lr_fn: LrFn, optimizer, block_d=None,
+                           fuse_update_mix: bool = False):
     """One batched step: the shared Algorithm-1 body over the lattice ops."""
     return engine.build_step_body(
-        _sweep_ops(plan, spec, grad_fn, lr_fn, optimizer, block_d=block_d))
+        _sweep_ops(plan, spec, grad_fn, lr_fn, optimizer, block_d=block_d,
+                   fuse_update_mix=fuse_update_mix))
 
 
 def _lower_sweep_step(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
                       lr_fn: LrFn, *, optimizer=None, block_d=None,
-                      donate: bool = True, jit: bool = True):
+                      donate: bool = True, jit: bool = True,
+                      fuse_update_mix: bool = False):
     step = _build_sweep_step_body(plan, spec, grad_fn, lr_fn, optimizer,
-                                  block_d=block_d)
+                                  block_d=block_d,
+                                  fuse_update_mix=fuse_update_mix)
     return engine.finalize_executor(step, donate=donate, jit=jit)
 
 
 def _lower_sweep_round(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
                        lr_fn: LrFn, *, optimizer=None, metrics_fn=None,
                        block_d=None, donate: bool = True, jit: bool = True,
-                       unroll: int = 1, per_step_keys: bool = False):
+                       unroll: int = 1, per_step_keys: bool = False,
+                       fuse_update_mix: bool = False):
     step = _build_sweep_step_body(plan, spec, grad_fn, lr_fn, optimizer,
-                                  block_d=block_d)
+                                  block_d=block_d,
+                                  fuse_update_mix=fuse_update_mix)
     round_fn = engine.make_scan_round(step, metrics_fn=metrics_fn,
                                       per_step_keys=per_step_keys,
                                       unroll=unroll)
@@ -423,13 +510,15 @@ def _lower_sweep_round(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
 
 def make_sweep_feddec_step(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
                            lr_fn: LrFn, optimizer=None, block_d=None,
-                           donate: bool = True, jit: bool = True):
+                           donate: bool = True, jit: bool = True,
+                           fuse_update_mix: bool = False):
     """One-iteration batched executor: step(state, batch, keys) advances all
     R runs by one Algorithm-1 step.  ``batch`` leaves are (R, n, ...);
     ``keys`` is a (R,) key array (run r's key = the single-run engine's)."""
     espec = engine.parse_engine_spec(
         plan.configs, layout="flat", force_run_axis=True,
-        t_steps=None if plan.t_steps is None else tuple(plan.t_steps))
+        t_steps=None if plan.t_steps is None else tuple(plan.t_steps),
+        fuse_update_mix=fuse_update_mix)
     return engine.make_engine_step(espec, grad_fn, lr_fn, flat_spec=spec,
                                    optimizer=optimizer, block_d=block_d,
                                    donate=donate, jit=jit)
@@ -441,7 +530,8 @@ def make_sweep_feddec_round(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
                             | None = None,
                             block_d=None, donate: bool = True,
                             jit: bool = True, unroll: int = 1,
-                            per_step_keys: bool = False):
+                            per_step_keys: bool = False,
+                            fuse_update_mix: bool = False):
     """The fused lattice executor: T steps × R runs per compiled call.
 
     Same contract as ``flat.make_flat_feddec_round`` with a leading run
@@ -456,7 +546,8 @@ def make_sweep_feddec_round(plan: SweepPlan, spec: FlatSpec, grad_fn: GradFn,
     """
     espec = engine.parse_engine_spec(
         plan.configs, layout="flat", force_run_axis=True,
-        t_steps=None if plan.t_steps is None else tuple(plan.t_steps))
+        t_steps=None if plan.t_steps is None else tuple(plan.t_steps),
+        fuse_update_mix=fuse_update_mix)
     return engine.make_engine_round(espec, grad_fn, lr_fn, flat_spec=spec,
                                     optimizer=optimizer,
                                     metrics_fn=metrics_fn, block_d=block_d,

@@ -8,6 +8,9 @@ to tile boundaries, and pytree-level application for the gossip op.
 
 from __future__ import annotations
 
+import functools
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,10 +20,16 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import gossip_mix as _gm
 from repro.kernels import rglru_scan as _rg
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import update_mix as _um
 
 __all__ = ["flash_attention", "gossip_mix", "gossip_mix_tree",
            "gossip_mix_batched", "make_sparse_gossip_pallas",
            "make_sparse_gossip_batched_pallas", "quant_mix", "dequant_mix",
+           "update_mix", "update_mix_batched",
+           "make_sparse_update_mix_pallas",
+           "make_sparse_update_mix_batched_pallas",
+           "ef_mix", "ef_mix_batched", "make_sparse_ef_mix_pallas",
+           "make_sparse_ef_mix_batched_pallas", "autotune_block_d",
            "ssd_scan", "rglru_scan", "on_tpu"]
 
 
@@ -28,8 +37,63 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+@functools.lru_cache(maxsize=None)
+def _interpret_for(backend: str, override: str | None) -> bool:
+    if override is not None:
+        return override.strip().lower() not in ("0", "false", "off",
+                                                "device")
+    return backend != "tpu"
+
+
 def _interpret() -> bool:
-    return not on_tpu()
+    """Pallas interpret-mode switch, cached per (backend, override).
+
+    Off-TPU the kernels run under ``interpret=True`` (the kernel body still
+    executes, in Python).  ``REPRO_PALLAS_INTERPRET=1`` forces interpret
+    mode on any backend and ``=0`` forces compiled-device mode — the knob
+    device-vs-interpret differential tests flip.
+    """
+    return _interpret_for(jax.default_backend(),
+                          os.environ.get("REPRO_PALLAS_INTERPRET"))
+
+
+# Measured block_d heuristic (bench_roundfuse.py's block_d sweep): small
+# buffers want tiles no wider than the lane-aligned cover of D (padding a
+# fig-shape D=25 row to 2048 lanes is pure waste — _clamp_block_d already
+# shrinks those), mid-size buffers amortise grid overhead best around 1–2k
+# lanes, and halved itemsizes double the lane count at the same VMEM
+# footprint.  Keyed on (itemsize, D); REPRO_BLOCK_D overrides everything.
+_BLOCK_D_TABLE = {
+    4: ((65536, 512), (1 << 19, 1024), (None, 2048)),
+    2: ((65536, 1024), (1 << 19, 2048), (None, 4096)),
+    1: ((65536, 1024), (1 << 19, 2048), (None, 4096)),
+}
+
+
+def autotune_block_d(d: int, dtype) -> int:
+    """Pick a D tile width for a (·, d) buffer of ``dtype``.
+
+    A tiny measured table (see bench_roundfuse.py's ``block_d`` sweep),
+    not a search: the kernels are bandwidth-bound, so the only live axes
+    are the element size (lane count per byte of VMEM) and whether D is
+    large enough to amortise per-tile grid overhead.  Overridable via the
+    ``REPRO_BLOCK_D`` env var or by passing ``block_d`` explicitly to any
+    wrapper.
+    """
+    env = os.environ.get("REPRO_BLOCK_D")
+    if env:
+        return int(env)
+    itemsize = jnp.dtype(dtype).itemsize
+    for ceiling, block_d in _BLOCK_D_TABLE.get(itemsize, _BLOCK_D_TABLE[4]):
+        if ceiling is None or d <= ceiling:
+            return block_d
+    return _gm.BLOCK_D
+
+
+def _resolve_block_d(block_d: int | None, d: int, dtype) -> int:
+    if block_d is None:
+        block_d = autotune_block_d(d, dtype)
+    return _clamp_block_d(block_d, d)
 
 
 def flash_attention(q, k, v, *, window: int = 0, scale: float | None = None,
@@ -53,11 +117,13 @@ def _clamp_block_d(block_d: int, d: int) -> int:
     return max(min(block_d, -(-d // 128) * 128), 128)
 
 
-def gossip_mix(w: jax.Array, x: jax.Array, *, block_d: int = _gm.BLOCK_D):
+def gossip_mix(w: jax.Array, x: jax.Array, *,
+               block_d: int | None = None):
     """y = W @ X for (n, D) stacked flats; pads n→8k and D→block_d (the
-    tile clamped to the lane-aligned cover of D for narrow sub-blocks)."""
+    tile autotuned from (D, dtype) when unset, clamped to the lane-aligned
+    cover of D for narrow sub-blocks)."""
     n, d = x.shape
-    block_d = _clamp_block_d(block_d, d)
+    block_d = _resolve_block_d(block_d, d, x.dtype)
     n_pad = (-n) % 8
     d_pad = (-d) % block_d
     wp = jnp.pad(w, ((0, n_pad), (0, n_pad)))
@@ -68,7 +134,7 @@ def gossip_mix(w: jax.Array, x: jax.Array, *, block_d: int = _gm.BLOCK_D):
 
 
 def gossip_mix_batched(w: jax.Array, x: jax.Array, *,
-                       block_d: int = _gm.BLOCK_D):
+                       block_d: int | None = None):
     """y[r] = W[r] @ X[r] for (R, n, D) stacked run buffers (sweep engine).
 
     One kernel launch for the whole run lattice — grid (R, D/block_d) —
@@ -77,7 +143,7 @@ def gossip_mix_batched(w: jax.Array, x: jax.Array, *,
     bit-identical to the single-run kernel's output.
     """
     r, n, d = x.shape
-    block_d = _clamp_block_d(block_d, d)
+    block_d = _resolve_block_d(block_d, d, x.dtype)
     n_pad = (-n) % 8
     d_pad = (-d) % block_d
     wp = jnp.pad(w, ((0, 0), (0, n_pad), (0, n_pad)))
@@ -101,7 +167,7 @@ def gossip_mix_tree(w: jax.Array, stacked) -> object:
     return jax.tree.map(mix, stacked)
 
 
-def make_sparse_gossip_pallas(graph, *, block_d: int = _gm.BLOCK_D):
+def make_sparse_gossip_pallas(graph, *, block_d: int | None = None):
     """Build the edge-blocked sparse Pallas mix for a static graph.
 
     Precomputes the ELL neighbour table (n, max_deg) host-side — padded
@@ -128,21 +194,23 @@ def make_sparse_gossip_pallas(graph, *, block_d: int = _gm.BLOCK_D):
     def mix(w: jax.Array, x: jax.Array) -> jax.Array:
         assert x.shape[0] == n, (x.shape, n)
         d = x.shape[1]
-        d_pad = (-d) % block_d
+        bd = _resolve_block_d(block_d, d, x.dtype)
+        d_pad = (-d) % bd
         wf = w.astype(jnp.float32)
         wv = jnp.zeros((n_tot, max_deg), jnp.float32).at[:n].set(
             jnp.take_along_axis(wf, row_idx, axis=1))
         wv = jnp.where(mask_j, wv, 0.0)
         wd = jnp.zeros((n_tot,), jnp.float32).at[:n].set(jnp.diagonal(wf))
         xp = jnp.pad(x, ((0, n_tot - n), (0, d_pad)))
-        y = _gm.gossip_mix_sparse_pallas(nbr_j, wv, wd, xp, block_d=block_d,
+        y = _gm.gossip_mix_sparse_pallas(nbr_j, wv, wd, xp, block_d=bd,
                                          interpret=_interpret())
         return y[:n, :d]
 
     return mix
 
 
-def make_sparse_gossip_batched_pallas(graphs, *, block_d: int = _gm.BLOCK_D):
+def make_sparse_gossip_batched_pallas(graphs, *,
+                                      block_d: int | None = None):
     """Build the edge-blocked sparse mix for an R-run topology lattice.
 
     Per-run ELL tables (n, max_deg) — max_deg is the lattice-wide maximum,
@@ -165,7 +233,8 @@ def make_sparse_gossip_batched_pallas(graphs, *, block_d: int = _gm.BLOCK_D):
     def mix(w: jax.Array, x: jax.Array) -> jax.Array:
         assert x.shape[:2] == (r_runs, n), (x.shape, r_runs, n)
         d = x.shape[2]
-        d_pad = (-d) % block_d
+        bd = _resolve_block_d(block_d, d, x.dtype)
+        d_pad = (-d) % bd
         wf = w.astype(jnp.float32)
         wv = jnp.zeros((r_runs, n_tot, max_deg), jnp.float32).at[:, :n].set(
             jnp.take_along_axis(wf, row_idx, axis=2))
@@ -174,10 +243,267 @@ def make_sparse_gossip_batched_pallas(graphs, *, block_d: int = _gm.BLOCK_D):
             jnp.diagonal(wf, axis1=1, axis2=2))
         xp = jnp.pad(x, ((0, 0), (0, n_tot - n), (0, d_pad)))
         y = _gm.gossip_mix_sparse_batched_pallas(
-            nbr_j, wv, wd, xp, block_d=block_d, interpret=_interpret())
+            nbr_j, wv, wd, xp, block_d=bd, interpret=_interpret())
         return y[:, :n, :d]
 
     return mix
+
+
+def _ell_table(adj: np.ndarray):
+    """Host-side ELL neighbour table for one adjacency matrix.
+
+    Returns (nbr, mask, n, n_tot, max_deg) with padded slots pointing at
+    the row's own agent (weight 0 at mix time) and the n→8k sublane-padding
+    rows as isolated self-loops — the same layout every sparse kernel
+    assumes.
+    """
+    n = adj.shape[0]
+    n_tot = n + ((-n) % 8)
+    max_deg = max(int(adj.sum(axis=1).max()) if n else 0, 1)
+    nbr = np.tile(np.arange(n_tot, dtype=np.int32)[:, None], (1, max_deg))
+    mask = np.zeros((n_tot, max_deg), dtype=bool)
+    for i in range(n):
+        js = np.flatnonzero(adj[i])
+        nbr[i, :len(js)] = js
+        mask[i, :len(js)] = True
+    return nbr, mask, n, n_tot, max_deg
+
+
+def _ell_weights(w, mask_j, row_idx, n, n_tot, max_deg):
+    """Live (wv, wd) edge/diagonal weights from the sampled (n, n) W."""
+    wf = w.astype(jnp.float32)
+    wv = jnp.zeros((n_tot, max_deg), jnp.float32).at[:n].set(
+        jnp.take_along_axis(wf, row_idx, axis=1))
+    wv = jnp.where(mask_j, wv, 0.0)
+    wd = jnp.zeros((n_tot,), jnp.float32).at[:n].set(jnp.diagonal(wf))
+    return wv, wd
+
+
+# ---------------------------------------------------------------------------
+# Fused update + mix (kernels/update_mix.py) — one buffer pass per step
+# ---------------------------------------------------------------------------
+
+
+def update_mix(w, x, g, eta, *, m=None, beta=None, nesterov=False,
+               block_d: int | None = None):
+    """y = W @ (x − η·g) (or the momentum step) in one pass over x/g.
+
+    Pads exactly like :func:`gossip_mix` (padded rows have zero x/g/W, so
+    their update and mixed output are zero and slice off).  Returns y, or
+    (y, new_m) when a momentum buffer ``m`` is passed with ``beta``.
+    """
+    n, d = x.shape
+    bd = _resolve_block_d(block_d, d, x.dtype)
+    n_pad = (-n) % 8
+    d_pad = (-d) % bd
+    wp = jnp.pad(w, ((0, n_pad), (0, n_pad)))
+    xp = jnp.pad(x, ((0, n_pad), (0, d_pad)))
+    gp = jnp.pad(g, ((0, n_pad), (0, d_pad)))
+    eta2 = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    if m is None:
+        y = _um.update_mix_pallas(wp, xp, gp, eta2, block_d=bd,
+                                  interpret=_interpret())
+        return y[:n, :d]
+    assert beta is not None, "momentum buffer passed without beta"
+    mp = jnp.pad(m, ((0, n_pad), (0, d_pad)))
+    y, m2 = _um.update_mix_pallas(wp, xp, gp, eta2, mp, beta=beta,
+                                  nesterov=nesterov, block_d=bd,
+                                  interpret=_interpret())
+    return y[:n, :d], m2[:n, :d]
+
+
+def update_mix_batched(w, x, g, eta, *, m=None, beta=None, nesterov=False,
+                       block_d: int | None = None):
+    """Batched fused update + mix over (R, n, D) run buffers; eta (R,)."""
+    r, n, d = x.shape
+    bd = _resolve_block_d(block_d, d, x.dtype)
+    n_pad = (-n) % 8
+    d_pad = (-d) % bd
+    wp = jnp.pad(w, ((0, 0), (0, n_pad), (0, n_pad)))
+    xp = jnp.pad(x, ((0, 0), (0, n_pad), (0, d_pad)))
+    gp = jnp.pad(g, ((0, 0), (0, n_pad), (0, d_pad)))
+    eta2 = jnp.asarray(eta, jnp.float32).reshape(r, 1)
+    if m is None:
+        y = _um.update_mix_batched_pallas(wp, xp, gp, eta2, block_d=bd,
+                                          interpret=_interpret())
+        return y[:, :n, :d]
+    assert beta is not None, "momentum buffer passed without beta"
+    mp = jnp.pad(m, ((0, 0), (0, n_pad), (0, d_pad)))
+    y, m2 = _um.update_mix_batched_pallas(wp, xp, gp, eta2, mp, beta=beta,
+                                          nesterov=nesterov, block_d=bd,
+                                          interpret=_interpret())
+    return y[:, :n, :d], m2[:, :n, :d]
+
+
+def make_sparse_update_mix_pallas(graph, *, beta=None, nesterov=False,
+                                  block_d: int | None = None):
+    """Build the edge-blocked fused update + mix for a static graph.
+
+    Same ELL precompute as :func:`make_sparse_gossip_pallas`; the closure
+    ``fused(w, x, g, eta, m=None)`` reads live edge weights from the
+    sampled W each step.
+    """
+    nbr, mask, n, n_tot, max_deg = _ell_table(np.asarray(graph.adjacency))
+    nbr_j = jnp.asarray(nbr)
+    mask_j = jnp.asarray(mask)
+    row_idx = jnp.asarray(nbr[:n])
+
+    def fused(w, x, g, eta, m=None):
+        assert x.shape[0] == n, (x.shape, n)
+        d = x.shape[1]
+        bd = _resolve_block_d(block_d, d, x.dtype)
+        d_pad = (-d) % bd
+        wv, wd = _ell_weights(w, mask_j, row_idx, n, n_tot, max_deg)
+        xp = jnp.pad(x, ((0, n_tot - n), (0, d_pad)))
+        gp = jnp.pad(g, ((0, n_tot - n), (0, d_pad)))
+        eta2 = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+        if m is None:
+            y = _um.update_mix_sparse_pallas(
+                nbr_j, wv, wd, xp, gp, eta2, block_d=bd,
+                interpret=_interpret())
+            return y[:n, :d]
+        assert beta is not None, "momentum buffer passed without beta"
+        mp = jnp.pad(m, ((0, n_tot - n), (0, d_pad)))
+        y, m2 = _um.update_mix_sparse_pallas(
+            nbr_j, wv, wd, xp, gp, eta2, mp, beta=beta, nesterov=nesterov,
+            block_d=bd, interpret=_interpret())
+        return y[:n, :d], m2[:n, :d]
+
+    return fused
+
+
+def make_sparse_update_mix_batched_pallas(graphs, *, beta=None,
+                                          nesterov=False,
+                                          block_d: int | None = None):
+    """R-run fused update + ELL mix (sweep engine); per-run topologies."""
+    from repro.core import gossip as gossip_lib
+    n = graphs[0].n
+    r_runs = len(graphs)
+    n_tot = n + ((-n) % 8)
+    nbr, mask, max_deg = gossip_lib.stacked_ell_tables(graphs, n_rows=n_tot)
+    nbr_j = jnp.asarray(nbr)
+    mask_j = jnp.asarray(mask)
+    row_idx = jnp.asarray(nbr[:, :n])
+
+    def live_weights(w):
+        wf = w.astype(jnp.float32)
+        wv = jnp.zeros((r_runs, n_tot, max_deg), jnp.float32).at[:, :n].set(
+            jnp.take_along_axis(wf, row_idx, axis=2))
+        wv = jnp.where(mask_j, wv, 0.0)
+        wd = jnp.zeros((r_runs, n_tot), jnp.float32).at[:, :n].set(
+            jnp.diagonal(wf, axis1=1, axis2=2))
+        return wv, wd
+
+    def fused(w, x, g, eta, m=None):
+        assert x.shape[:2] == (r_runs, n), (x.shape, r_runs, n)
+        d = x.shape[2]
+        bd = _resolve_block_d(block_d, d, x.dtype)
+        d_pad = (-d) % bd
+        wv, wd = live_weights(w)
+        xp = jnp.pad(x, ((0, 0), (0, n_tot - n), (0, d_pad)))
+        gp = jnp.pad(g, ((0, 0), (0, n_tot - n), (0, d_pad)))
+        eta2 = jnp.asarray(eta, jnp.float32).reshape(r_runs, 1)
+        if m is None:
+            y = _um.update_mix_sparse_batched_pallas(
+                nbr_j, wv, wd, xp, gp, eta2, block_d=bd,
+                interpret=_interpret())
+            return y[:, :n, :d]
+        assert beta is not None, "momentum buffer passed without beta"
+        mp = jnp.pad(m, ((0, 0), (0, n_tot - n), (0, d_pad)))
+        y, m2 = _um.update_mix_sparse_batched_pallas(
+            nbr_j, wv, wd, xp, gp, eta2, mp, beta=beta, nesterov=nesterov,
+            block_d=bd, interpret=_interpret())
+        return y[:, :n, :d], m2[:, :n, :d]
+
+    return fused
+
+
+def ef_mix(w, p, s, u, *, block_d: int | None = None):
+    """Fused EF receive side: (W s + diag(W)·(p − s), u − s) in one pass.
+
+    The encode (whole-row reductions) stays on the shared XLA codec; this
+    replaces the mix + correction + residual triple of passes.
+    """
+    n, d = p.shape
+    bd = _resolve_block_d(block_d, d, p.dtype)
+    n_pad = (-n) % 8
+    d_pad = (-d) % bd
+    wp = jnp.pad(w, ((0, n_pad), (0, n_pad)))
+    diag = jnp.pad(jnp.diagonal(w), (0, n_pad))
+    pads = ((0, n_pad), (0, d_pad))
+    y, res = _um.ef_mix_pallas(wp, diag, jnp.pad(p, pads),
+                               jnp.pad(s, pads), jnp.pad(u, pads),
+                               block_d=bd, interpret=_interpret())
+    return y[:n, :d], res[:n, :d]
+
+
+def ef_mix_batched(w, p, s, u, *, block_d: int | None = None):
+    """Batched fused EF receive side over (R, n, D) run buffers."""
+    r, n, d = p.shape
+    bd = _resolve_block_d(block_d, d, p.dtype)
+    n_pad = (-n) % 8
+    d_pad = (-d) % bd
+    wp = jnp.pad(w, ((0, 0), (0, n_pad), (0, n_pad)))
+    diag = jnp.pad(jnp.diagonal(w, axis1=1, axis2=2), ((0, 0), (0, n_pad)))
+    pads = ((0, 0), (0, n_pad), (0, d_pad))
+    y, res = _um.ef_mix_batched_pallas(wp, diag, jnp.pad(p, pads),
+                                       jnp.pad(s, pads), jnp.pad(u, pads),
+                                       block_d=bd, interpret=_interpret())
+    return y[:, :n, :d], res[:, :n, :d]
+
+
+def make_sparse_ef_mix_pallas(graph, *, block_d: int | None = None):
+    """Sparse fused EF receive side for a static graph: ``ef(w, p, s, u)``."""
+    nbr, mask, n, n_tot, max_deg = _ell_table(np.asarray(graph.adjacency))
+    nbr_j = jnp.asarray(nbr)
+    mask_j = jnp.asarray(mask)
+    row_idx = jnp.asarray(nbr[:n])
+
+    def ef(w, p, s, u):
+        assert p.shape[0] == n, (p.shape, n)
+        d = p.shape[1]
+        bd = _resolve_block_d(block_d, d, p.dtype)
+        d_pad = (-d) % bd
+        wv, wd = _ell_weights(w, mask_j, row_idx, n, n_tot, max_deg)
+        pads = ((0, n_tot - n), (0, d_pad))
+        y, res = _um.ef_mix_sparse_pallas(
+            nbr_j, wv, wd, jnp.pad(p, pads), jnp.pad(s, pads),
+            jnp.pad(u, pads), block_d=bd, interpret=_interpret())
+        return y[:n, :d], res[:n, :d]
+
+    return ef
+
+
+def make_sparse_ef_mix_batched_pallas(graphs, *,
+                                      block_d: int | None = None):
+    """R-run sparse fused EF receive side (sweep engine)."""
+    from repro.core import gossip as gossip_lib
+    n = graphs[0].n
+    r_runs = len(graphs)
+    n_tot = n + ((-n) % 8)
+    nbr, mask, max_deg = gossip_lib.stacked_ell_tables(graphs, n_rows=n_tot)
+    nbr_j = jnp.asarray(nbr)
+    mask_j = jnp.asarray(mask)
+    row_idx = jnp.asarray(nbr[:, :n])
+
+    def ef(w, p, s, u):
+        assert p.shape[:2] == (r_runs, n), (p.shape, r_runs, n)
+        d = p.shape[2]
+        bd = _resolve_block_d(block_d, d, p.dtype)
+        d_pad = (-d) % bd
+        wf = w.astype(jnp.float32)
+        wv = jnp.zeros((r_runs, n_tot, max_deg), jnp.float32).at[:, :n].set(
+            jnp.take_along_axis(wf, row_idx, axis=2))
+        wv = jnp.where(mask_j, wv, 0.0)
+        wd = jnp.zeros((r_runs, n_tot), jnp.float32).at[:, :n].set(
+            jnp.diagonal(wf, axis1=1, axis2=2))
+        pads = ((0, 0), (0, n_tot - n), (0, d_pad))
+        y, res = _um.ef_mix_sparse_batched_pallas(
+            nbr_j, wv, wd, jnp.pad(p, pads), jnp.pad(s, pads),
+            jnp.pad(u, pads), block_d=bd, interpret=_interpret())
+        return y[:, :n, :d], res[:, :n, :d]
+
+    return ef
 
 
 def _pad_compress_args(w, scale, tiles, block_d):

@@ -28,7 +28,8 @@ __all__ = ["PEAK_FLOPS", "HBM_BW", "ICI_BW", "H2D_BW", "CollectiveStats",
            "sweep_cost_model", "sharded_sweep_cost_model",
            "population_cost_model", "compress_row_bytes",
            "compressed_halo_cost_model", "COMPRESS_SCHEMES",
-           "delta_row_bytes", "delta_cost_model", "hlo_analysis"]
+           "delta_row_bytes", "delta_cost_model", "roundfuse_cost_model",
+           "hlo_analysis"]
 
 PEAK_FLOPS = 197e12   # bf16 per chip
 HBM_BW = 819e9        # bytes/s per chip
@@ -515,6 +516,94 @@ def delta_cost_model(*, n_total: int, d: int, delta: str,
         "delta_store_bytes": delta_store,
         "store_ratio": delta_store / flat_store,
     }
+
+
+def roundfuse_cost_model(*, n_agents: int, d: int, optimizer: str = "sgd",
+                         codec: bool = False, r_runs: int = 1,
+                         param_bytes: int = 4, n_shards: int = 1,
+                         boundary_rows_per_shard: int = 0,
+                         num_halo_rounds: int = 0) -> dict:
+    """Exact full-buffer-pass byte model of the fused FedDec round.
+
+    Counts whole (R·n·D·b)-sized streams through HBM per step — the unit
+    the fused update+mix kernels (kernels/update_mix.py) eliminate.  The
+    convention: one "pass" = one read or write of a full (r_runs, n, D)
+    buffer; the (n, n) W / ELL tables and sub-D-row payloads (int8 scales,
+    η) are excluded as lower-order, so the model is conservative for the
+    fused path (which also skips W re-reads between the two ops).
+
+    Pass counts per step (derivation in PERFORMANCE.md "fused round"):
+
+      * update (line 5): sgd reads x, g and writes p → 3;
+        momentum also reads + writes the f32 slot → 5;
+      * unfused mix (line 6): reads p, writes y → +2;
+      * fused update+mix: p forms in VMEM, y written directly → +0;
+      * codec active (EF gossip): both paths share u = p + e (3),
+        encode (1), decode (1); the unfused tail is mix (2) + diag
+        correction (4: mix-out, p, s → y) + residual (3: u, s → res)
+        = +14 total, the fused ef-kernel tail reads p, s, u and writes
+        y, res = +10 total (the update itself stays on XLA — the int8
+        row scale is a full-row reduction no D tile can compute).
+
+    Sharded overlap terms (``n_shards > 1``): each shard's rows split into
+    boundary (on a directed cut edge of the quotient graph — the only rows
+    whose columns are live in another shard's W block) vs interior; the
+    halo then moves ``boundary_rows_per_shard`` rows instead of the whole
+    n_local block, and interior compute hides the in-flight rounds.
+    ``predicted_overlap_fraction`` = min(1, interior stream time / halo
+    time) at the module roofline constants.
+
+    Returns the exact columns ``check_regression.check_roundfuse_doc``
+    recomputes.
+    """
+    if optimizer not in ("sgd", "momentum"):
+        raise ValueError(f"roundfuse_cost_model covers sgd|momentum "
+                         f"(adamw stays unfused): {optimizer!r}")
+    upd = 3 if optimizer == "sgd" else 5
+    if codec:
+        passes_unfused, passes_fused = upd + 14, upd + 10
+    else:
+        passes_unfused, passes_fused = upd + 2, upd
+    buf = float(r_runs) * n_agents * d * param_bytes
+    out = {
+        "n_agents": int(n_agents),
+        "d": int(d),
+        "r_runs": int(r_runs),
+        "optimizer": optimizer,
+        "codec": bool(codec),
+        "param_bytes": int(param_bytes),
+        "passes_unfused": passes_unfused,
+        "passes_fused": passes_fused,
+        "unfused_pass_bytes": passes_unfused * buf,
+        "fused_pass_bytes": passes_fused * buf,
+        "pass_ratio": passes_fused / passes_unfused,
+    }
+    if n_shards > 1:
+        if n_agents % n_shards:
+            raise ValueError(f"n_agents={n_agents} must be divisible by "
+                             f"n_shards={n_shards}")
+        n_local = n_agents // n_shards
+        b_rows = min(int(boundary_rows_per_shard), n_local)
+        i_rows = n_local - b_rows
+        halo_full = num_halo_rounds * n_local * float(d) * param_bytes
+        halo_boundary = num_halo_rounds * b_rows * float(d) * param_bytes
+        interior_s = (passes_fused * r_runs * i_rows * float(d)
+                      * param_bytes) / HBM_BW
+        halo_s = halo_boundary * r_runs / ICI_BW
+        out.update({
+            "n_shards": int(n_shards),
+            "n_local": n_local,
+            "boundary_rows_per_shard": b_rows,
+            "interior_rows_per_shard": i_rows,
+            "num_halo_rounds": int(num_halo_rounds),
+            "halo_bytes_full": halo_full,
+            "halo_bytes_boundary": halo_boundary,
+            "halo_payload_ratio": (halo_boundary / halo_full
+                                   if halo_full else 1.0),
+            "predicted_overlap_fraction": (min(1.0, interior_s / halo_s)
+                                           if halo_s > 0 else 1.0),
+        })
+    return out
 
 
 COMPRESS_SCHEMES = ("none", "bf16", "int8", "topk:0.1")

@@ -90,8 +90,19 @@ def _gossip_model(cfg, axes, state_layout: str,
                               f"not divide n_agents={n_agents}"}
         else:
             cut = sharded_lib.cut_edge_stats(fcfg.mixing.graph, mesh_agents)
+            split = sharded_lib.boundary_row_split(fcfg.mixing.graph,
+                                                   mesh_agents)
             rec["sharded"] = {
                 **cut,
+                "boundary_rows_max": split["b_max"],
+                "interior_rows_min": split["interior_min"],
+                # the halo/compute overlap window of the boundary-sliced
+                # exchange (core/sharded.py halo mixers)
+                "roundfuse": analysis.roundfuse_cost_model(
+                    n_agents=n_agents, d=d, n_shards=mesh_agents,
+                    boundary_rows_per_shard=split["b_max"],
+                    num_halo_rounds=cut["num_halo_rounds"],
+                    param_bytes=pbytes),
                 "impls": analysis.sharded_gossip_cost_model(
                     n_agents=n_agents, d=d, n_shards=mesh_agents,
                     num_cut_edges=cut["num_cut_edges"],
@@ -130,7 +141,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             n_total: int | None = None,
             cohort_size: int = 256,
             sampling: str = "uniform",
-            staleness: float = 0.0) -> dict:
+            staleness: float = 0.0,
+            fuse_update_mix: bool = False) -> dict:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -143,6 +155,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         tag += f"__{state_layout}"
         if state_layout == "sharded" and mesh_model and mesh_model > 1:
             tag += f"__m{mesh_model}"
+    if fuse_update_mix and shape.kind == "train":
+        tag += "__updmix"
     if sweep_runs and shape.kind == "train":
         tag += f"__sweep{sweep_runs}-{sweep_axis}"
     if n_total and shape.kind == "train":
@@ -171,7 +185,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                               mesh_model=mesh_model,
                               sweep_runs=sweep_runs
                               if shape.kind == "train" else None,
-                              sweep_axis=sweep_axis)
+                              sweep_axis=sweep_axis,
+                              fuse_update_mix=fuse_update_mix
+                              and shape.kind == "train")
         lowered = low.lower(mesh)
         t_lower = time.time() - t0
         compiled = lowered.compile()
@@ -218,6 +234,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         if shape.kind == "train":
             rec["gossip_cost_model"] = _gossip_model(cfg, axes, state_layout,
                                                      mesh_agents, mesh_model)
+            if state_layout == "flat":
+                gm = rec["gossip_cost_model"]
+                # buffer-pass bytes of the fused vs unfused round body
+                rec["roundfuse_cost_model"] = analysis.roundfuse_cost_model(
+                    n_agents=gm["n_agents"], d=gm["d"], optimizer="sgd",
+                    codec=gossip_compress != "none",
+                    param_bytes=gm["param_bytes"])
             if sweep_runs:
                 gm = rec["gossip_cost_model"]
                 rec["sweep_cost_model"] = analysis.sweep_cost_model(
@@ -253,6 +276,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                 f"{k} {v['pred_us']:.0f}µs" for k, v in gm["impls"].items())
             print(f"       gossip/step (n={gm['n_agents']}, "
                   f"D={gm['d']:.2e}, {gm['num_leaves']} leaves): {pred}")
+            rf = rec["roundfuse_cost_model"]
+            print(f"       fused round: {rf['passes_unfused']}→"
+                  f"{rf['passes_fused']} buffer passes/step "
+                  f"({rf['pass_ratio']:.2f}x bytes)"
+                  + (" [--fuse-update-mix compiled]"
+                     if fuse_update_mix else ""))
         if shape.kind == "train" and sweep_runs:
             sm = rec["sweep_cost_model"]
             print(f"       sweep lattice R={sweep_runs} ({sweep_axis}): "
@@ -346,6 +375,12 @@ def main() -> None:
                         "agent replica tensor-sharded over M model-axis "
                         "devices, gossip collectives on D/M-wide slices "
                         "over the agent axis only")
+    p.add_argument("--fuse-update-mix", action="store_true",
+                   help="compile train steps with Algorithm 1 lines 5-6 "
+                        "fused into one tiled buffer pass "
+                        "(kernels/update_mix.py; --state-layout flat); the "
+                        "record gains analysis.roundfuse_cost_model either "
+                        "way")
     p.add_argument("--gossip-compress", default="none", metavar="SPEC",
                    help="compile train steps with the compressed-gossip "
                         "subsystem (repro.core.compress: none | identity | "
@@ -404,7 +439,8 @@ def main() -> None:
                               n_total=args.n_total,
                               cohort_size=args.cohort_size,
                               sampling=args.sampling,
-                              staleness=args.staleness)
+                              staleness=args.staleness,
+                              fuse_update_mix=args.fuse_update_mix)
                 if rec["status"] != "ok":
                     failures.append(rec)
     print(f"\n{len(failures)} failures / "

@@ -214,7 +214,8 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
                           state_layout: str = "tree",
                           mesh_model: int | None = None,
                           sweep_runs: int | None = None,
-                          sweep_axis: str = "seed") -> Lowerable:
+                          sweep_axis: str = "seed",
+                          fuse_update_mix: bool = False) -> Lowerable:
     """The FedDec training step at production shape.
 
     ``fed.gossip_impl='permute'`` selects the neighbour-only ppermute gossip
@@ -310,6 +311,12 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     if state_layout not in ("tree", "flat", "sharded"):
         raise ValueError(f"state_layout must be 'tree', 'flat' or "
                          f"'sharded', got {state_layout!r}")
+    if fuse_update_mix and state_layout != "flat":
+        # same compatibility lattice as parse_engine_spec's
+        raise ValueError(
+            "fuse_update_mix needs the flat (n, D) buffer layout "
+            "(state_layout='flat'); the sharded engine overlaps its halo "
+            "with interior compute instead (core/sharded.py)")
     if state_layout == "sharded":
         if mesh is None or cfg.fed_agent_layout != "sharded":
             raise ValueError("state_layout='sharded' needs a mesh and the "
@@ -387,10 +394,14 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
             flat=flat_spec_p, step=P(), opt_state=(),
             residual=() if compress == "none" else flat_spec_p)
         make_step = functools.partial(flat_lib.make_flat_feddec_step,
-                                      fcfg, spec, grad_fn, lr_fn)
+                                      fcfg, spec, grad_fn, lr_fn,
+                                      fuse_update_mix=fuse_update_mix)
         make_round = functools.partial(flat_lib.make_flat_feddec_round,
-                                       fcfg, spec, grad_fn, lr_fn)
+                                       fcfg, spec, grad_fn, lr_fn,
+                                       fuse_update_mix=fuse_update_mix)
         name += ":flat"
+        if fuse_update_mix:
+            name += ":updmix"
     else:
         state_specs = feddec.FedState(
             params=param_specs, step=P(), opt_state=(),
@@ -450,8 +461,9 @@ def build_train_lowerable(cfg: ArchConfig, shape: ShapeConfig,
             state_specs = sweep_lib.SweepFedState(
                 flat=P(None, *flat_spec_p), step=P(None), opt_state=(),
                 residual=() if compress == "none" else P(None, *flat_spec_p))
-            step = sweep_lib.make_sweep_feddec_round(plan, spec, grad_fn,
-                                                     lr_fn, jit=False)
+            step = sweep_lib.make_sweep_feddec_round(
+                plan, spec, grad_fn, lr_fn, jit=False,
+                fuse_update_mix=fuse_update_mix)
         # batches gain a run axis after the fused-step dim; keys become
         # the (R,) per-run key array
         batch_struct = jax.tree.map(
@@ -562,6 +574,7 @@ def build_lowerable(cfg: ArchConfig, shape: ShapeConfig,
     kw.pop("fed", None), kw.pop("mesh", None), kw.pop("fused_steps", None)
     kw.pop("state_layout", None), kw.pop("mesh_model", None)
     kw.pop("sweep_runs", None), kw.pop("sweep_axis", None)
+    kw.pop("fuse_update_mix", None)
     if shape.kind == "prefill":
         return build_prefill_lowerable(cfg, shape, axes)
     return build_decode_lowerable(cfg, shape, axes)

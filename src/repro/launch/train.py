@@ -58,6 +58,7 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                per_agent_batch: int, seq_len: int, lr: float = 3e-3,
                optimizer: str = "sgd", fedavg_control: bool = False,
                fused: bool = True, state_layout: str | None = None,
+               fuse_update_mix: bool = False,
                mesh_agents: int | None = None,
                mesh_model: int | None = None,
                sweep_runs: int | None = None, sweep_axis: str = "seed",
@@ -143,6 +144,17 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
     if mesh_agents is not None and state_layout != "flat":
         raise ValueError("--mesh-agents shards the flat (n_agents, D) "
                          "buffer; it requires --state-layout flat")
+    if fuse_update_mix:
+        # same compatibility lattice as parse_engine_spec's
+        if state_layout != "flat":
+            raise ValueError("--fuse-update-mix fuses the whole-buffer "
+                             "update+mix pass (kernels/update_mix.py); it "
+                             "requires --state-layout flat")
+        if mesh_agents is not None:
+            raise ValueError("--fuse-update-mix is single-device: the "
+                             "sharded engine overlaps its halo with "
+                             "interior compute instead (core/sharded.py); "
+                             "drop --mesh-agents")
     if sweep_runs is not None:
         if not fused:
             raise ValueError("--sweep-runs requires the fused executor")
@@ -184,7 +196,7 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
             else:
                 round_fn = sweep_lib.make_sweep_feddec_round(
                     plan, spec, model.grad_fn(), lr_fn, optimizer=opt,
-                    donate=True)
+                    donate=True, fuse_update_mix=fuse_update_mix)
         else:
             state = flat_lib.init_flat_state(spec, params0, n_agents,
                                              optimizer=opt,
@@ -217,12 +229,14 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
                 round_fn = flat_lib.make_flat_feddec_round(
                     fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
                     donate=True, delta_base=spec.ravel(params0)
-                    if delta != "none" else None)
+                    if delta != "none" else None,
+                    fuse_update_mix=fuse_update_mix)
             else:
                 step = flat_lib.make_flat_feddec_step(
                     fcfg, spec, model.grad_fn(), lr_fn, optimizer=opt,
                     donate=True, delta_base=spec.ravel(params0)
-                    if delta != "none" else None)
+                    if delta != "none" else None,
+                    fuse_update_mix=fuse_update_mix)
     else:
         state = feddec.init_state(params0, n_agents, optimizer=opt,
                                   compress=compress)
@@ -248,6 +262,7 @@ def train_loop(cfg: ArchConfig, fed: FedConfig, *, steps: int,
           + (f" (sweep lattice R={sweep_runs} axis={sweep_axis})"
              if sweep_runs else "")
           + f", gossip={fcfg.gossip_impl}"
+          + (", fused-update-mix" if fuse_update_mix else "")
           + (f", compress={compress}" if compress != "none" else "")
           + (f", delta={delta}" if delta != "none" else ""))
 
@@ -457,6 +472,12 @@ def main() -> None:
     p.add_argument("--gossip-impl", default="dense",
                    choices=["dense", "pallas", "sparse", "none"],
                    help="how the gossip mix executes (Algorithm 1 line 6)")
+    p.add_argument("--fuse-update-mix", action="store_true",
+                   help="fuse Algorithm 1 lines 5-6 (optimizer update + "
+                        "gossip mix, + EF correction under a codec) into "
+                        "one tiled buffer pass (kernels/update_mix.py); "
+                        "flat/sweep layouts, sgd/momentum (adamw falls "
+                        "back to the unfused pair)")
     p.add_argument("--gossip-compress", default="none", metavar="SPEC",
                    help="compress the gossip payload with error feedback "
                         "(repro.core.compress): none | identity | bf16 | "
@@ -548,6 +569,8 @@ def main() -> None:
         for flag, val, default in (("--mesh-agents", args.mesh_agents, None),
                                    ("--mesh-model", args.mesh_model, None),
                                    ("--sweep-runs", args.sweep_runs, None),
+                                   ("--fuse-update-mix",
+                                    args.fuse_update_mix, False),
                                    ("--optimizer", args.optimizer, "sgd"),
                                    ("--fedavg", args.fedavg, False),
                                    ("--per-step", args.fused, True)):
@@ -569,7 +592,9 @@ def main() -> None:
         cfg, fed, steps=args.steps, per_agent_batch=args.batch,
         seq_len=args.seq, lr=args.lr, optimizer=args.optimizer,
         fedavg_control=args.fedavg, fused=args.fused,
-        state_layout=args.state_layout, mesh_agents=args.mesh_agents,
+        state_layout=args.state_layout,
+        fuse_update_mix=args.fuse_update_mix,
+        mesh_agents=args.mesh_agents,
         mesh_model=args.mesh_model,
         sweep_runs=args.sweep_runs, sweep_axis=args.sweep_axis,
         ckpt_dir=args.ckpt_dir)

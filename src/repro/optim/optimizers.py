@@ -21,11 +21,22 @@ __all__ = ["Optimizer", "sgd", "momentum_sgd", "adamw",
 
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
-    """(init, update) pair.  update returns (new_params, new_state)."""
+    """(init, update) pair.  update returns (new_params, new_state).
+
+    ``kind``/``hyper`` expose what the closures hide, so engines can
+    specialize: the fused update+mix kernels (kernels/update_mix.py)
+    replicate sgd and momentum in-tile and need β/nesterov; anything else
+    (adamw, custom) keeps the generic unfused path.
+    """
 
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
     # signature: update(params, grads, state, lr)
+    kind: str = "custom"
+    hyper: tuple[tuple[str, Any], ...] = ()
+
+    def hyperparams(self) -> dict[str, Any]:
+        return dict(self.hyper)
 
 
 def sgd() -> Optimizer:
@@ -40,7 +51,7 @@ def sgd() -> Optimizer:
             params, grads)
         return new, state
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, kind="sgd")
 
 
 def momentum_sgd(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
@@ -59,7 +70,8 @@ def momentum_sgd(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
             params, step_dir)
         return new_p, new_m
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, kind="momentum",
+                     hyper=(("beta", beta), ("nesterov", nesterov)))
 
 
 def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
@@ -90,7 +102,9 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         new_p = jax.tree.map(upd, params, m, v)
         return new_p, {"m": m, "v": v, "count": c}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, kind="adamw",
+                     hyper=(("b1", b1), ("b2", b2), ("eps", eps),
+                            ("weight_decay", weight_decay)))
 
 
 def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
